@@ -1,0 +1,122 @@
+"""Ablation: decentralized algorithms on equal footing -- PORTER-GC vs BEER
+vs CHOCO-SGD vs DSGD, measured in (a) rounds and (b) communicated megabytes
+to reach a target gradient norm.  This is the systems-level comparison the
+paper motivates (communication efficiency) but only reports indirectly.
+
+Wire accounting per round per agent (model-level, core.gossip):
+    DSGD      : d floats, uncompressed                (1 buffer)
+    CHOCO-SGD : rho*d values (+indices) x 1 buffer
+    PORTER    : rho*d values (+indices) x 2 buffers   (Q_x and Q_v streams)
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (PorterConfig, average_params, make_compressor,
+                        make_mixer, make_porter_step, make_topology,
+                        porter_init)
+from repro.core import baselines as BL
+from repro.core.gossip import make_dense_mixer
+from repro.data import a9a_like, agent_batch_iterator, shard_to_agents
+from benchmarks import common as C
+
+RHO = 0.05
+TARGET = 0.08
+
+
+def run_ablation(steps=400, seed=0):
+    x, y = a9a_like(12000, 123, seed=0)
+    xs, ys = shard_to_agents(x, y, C.N_AGENTS)
+    top = C.paper_topology()
+    loss_fn = C.logreg_loss()
+    params0 = {"w": jnp.zeros(123), "b": jnp.zeros(())}
+    flat = (xs.reshape(-1, 123), ys.reshape(-1))
+    d = 124  # parameter count
+
+    def gnorm(p):
+        g = jax.grad(loss_fn)(p, flat)
+        return float(jnp.sqrt(sum(jnp.sum(v ** 2)
+                                  for v in jax.tree_util.tree_leaves(g))))
+
+    comp = make_compressor("top_k", frac=RHO)
+    bits_sparse = comp.wire_bits(d)          # per buffer per agent per round
+    bits_dense = 32.0 * d
+
+    results = {}
+
+    def track(name, states_iter, bits_per_round):
+        rounds_to_target = None
+        final = None
+        for t, p_avg in states_iter:
+            g = gnorm(p_avg)
+            final = g
+            if rounds_to_target is None and g <= TARGET:
+                rounds_to_target = t
+        mb = (None if rounds_to_target is None else
+              rounds_to_target * bits_per_round * C.N_AGENTS / 8e6)
+        results[name] = {"rounds_to_target": rounds_to_target,
+                         "MB_to_target": mb, "final_grad": final}
+
+    def porter_iter(variant):
+        gamma = 0.5 * (1 - top.alpha) * RHO
+        cfg = PorterConfig(eta=0.05, gamma=gamma, tau=1.0, variant=variant)
+        state = porter_init(params0, C.N_AGENTS, w=top.w)
+        step = jax.jit(make_porter_step(cfg, loss_fn,
+                                        make_mixer(top, "dense"), comp))
+        it = agent_batch_iterator(xs, ys, batch=4, seed=seed)
+        key = jax.random.PRNGKey(seed)
+        for t in range(steps):
+            key, k = jax.random.split(key)
+            state, _ = step(state, next(it), k)
+            if t % 10 == 0 or t == steps - 1:
+                yield t, average_params(state.x)
+
+    def choco_iter():
+        gamma = 0.3 * (1 - top.alpha) * RHO
+        state = BL.choco_init(params0, C.N_AGENTS)
+        step = jax.jit(functools.partial(BL.choco_step, 0.05, gamma, loss_fn,
+                                         make_dense_mixer(top.w), comp))
+        it = agent_batch_iterator(xs, ys, batch=4, seed=seed)
+        key = jax.random.PRNGKey(seed)
+        for t in range(steps):
+            key, k = jax.random.split(key)
+            state, _ = step(state, next(it), k)
+            if t % 10 == 0 or t == steps - 1:
+                yield t, average_params(state.x)
+
+    def dsgd_iter():
+        state = BL.dsgd_init(params0, C.N_AGENTS)
+        step = jax.jit(functools.partial(BL.dsgd_step, 0.05, 1.0, loss_fn,
+                                         make_dense_mixer(top.w)))
+        it = agent_batch_iterator(xs, ys, batch=4, seed=seed)
+        key = jax.random.PRNGKey(seed)
+        for t in range(steps):
+            key, k = jax.random.split(key)
+            state, _ = step(state, next(it), k)
+            if t % 10 == 0 or t == steps - 1:
+                yield t, average_params(state.x)
+
+    track("porter_gc", porter_iter("gc"), 2 * bits_sparse)
+    track("beer", porter_iter("beer"), 2 * bits_sparse)
+    track("choco_sgd", choco_iter(), bits_sparse)
+    track("dsgd", dsgd_iter(), bits_dense)
+    return results
+
+
+def bench_ablation():
+    from benchmarks.run import emit, _save
+    res = run_ablation()
+    _save("ablation_algorithms", res)
+    parts = []
+    for name, r in res.items():
+        rt = r["rounds_to_target"]
+        mb = r["MB_to_target"]
+        parts.append(f"{name}:rounds={rt};MB={mb if mb is None else round(mb, 3)}")
+    emit("ablation_to_|g|<=0.08", 0.0, "|".join(parts))

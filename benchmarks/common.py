@@ -1,0 +1,137 @@
+"""Shared benchmark plumbing: experiment protocol of paper Section 5
+(10 agents, ER(0.8), random-5% compression, tau=1, batch 1, best-tuned-ish
+learning rates) over synthetic stand-ins with the paper's dimensions."""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (PorterConfig, average_params, calibrate_sigma,
+                        make_compressor, make_mixer, make_porter_step,
+                        make_topology, porter_init)
+from repro.core import baselines as BL
+from repro.core.gossip import make_dense_mixer
+
+N_AGENTS = 10
+
+
+def timed(fn, *args, reps=3):
+    fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def paper_topology(seed=1):
+    return make_topology("erdos_renyi", N_AGENTS, weights="best_constant",
+                         p=0.8, seed=seed)
+
+
+def logreg_loss(lam=0.2):
+    def loss_fn(params, batch):
+        f, l = batch
+        f = jnp.atleast_2d(f)
+        l = jnp.atleast_1d(l)
+        logits = f @ params["w"] + params["b"]
+        nll = jnp.mean(jnp.log1p(jnp.exp(-(2 * l - 1) * logits)))
+        reg = lam * jnp.sum(params["w"] ** 2 / (1 + params["w"] ** 2))
+        return nll + reg
+    return loss_fn
+
+
+def mlp_loss():
+    """Paper 5.2: 784 -> 64 sigmoid -> 10 softmax cross-entropy."""
+    def loss_fn(params, batch):
+        f, l = batch
+        f = jnp.atleast_2d(f)
+        l = jnp.atleast_1d(l)
+        h = jax.nn.sigmoid(f @ params["w1"] + params["c1"])
+        logits = h @ params["w2"] + params["c2"]
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l[:, None], axis=-1)[:, 0]
+        return jnp.mean(lse - gold)
+    return loss_fn
+
+
+def mlp_params0(key=None):
+    key = key or jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    return {"w1": 0.05 * jax.random.normal(k1, (784, 64)),
+            "c1": jnp.zeros(64),
+            "w2": 0.05 * jax.random.normal(k2, (64, 10)),
+            "c2": jnp.zeros(10)}
+
+
+def accuracy_fn(kind):
+    if kind == "logreg":
+        def acc(params, f, l):
+            logits = f @ params["w"] + params["b"]
+            return float(jnp.mean((logits > 0) == (l > 0.5)))
+    else:
+        def acc(params, f, l):
+            h = jax.nn.sigmoid(f @ params["w1"] + params["c1"])
+            logits = h @ params["w2"] + params["c2"]
+            return float(jnp.mean(jnp.argmax(logits, -1) == l))
+    return acc
+
+
+def run_porter(loss_fn, params0, it, top, steps, eta, variant="dp",
+               sigma_p=0.0, frac=0.05, comp_name="random_k", tau=1.0,
+               eval_every=25, eval_cb=None, seed=0):
+    comp = make_compressor(comp_name, frac=frac)
+    mixer = make_mixer(top, "dense")
+    gamma = 0.5 * (1 - top.alpha) * frac
+    cfg = PorterConfig(eta=eta, gamma=gamma, tau=tau, variant=variant,
+                       sigma_p=sigma_p)
+    state = porter_init(params0, top.n, w=top.w)
+    step = jax.jit(make_porter_step(cfg, loss_fn, mixer, comp))
+    key = jax.random.PRNGKey(seed)
+    curve = []
+    for t in range(steps):
+        key, k = jax.random.split(key)
+        state, m = step(state, next(it), k)
+        if eval_cb and (t % eval_every == 0 or t == steps - 1):
+            curve.append((t,) + eval_cb(average_params(state.x),
+                                        float(m["loss"])))
+    return state, curve
+
+
+def run_soteria(loss_fn, params0, it, steps, eta, sigma_p=0.0, frac=0.05,
+                tau=1.0, eval_every=25, eval_cb=None, seed=0):
+    comp = make_compressor("random_k", frac=frac)
+    state = BL.soteria_init(params0, N_AGENTS)
+    step = jax.jit(functools.partial(BL.soteria_step, eta, 0.5, loss_fn,
+                                     comp, tau=tau, sigma_p=sigma_p))
+    key = jax.random.PRNGKey(seed)
+    curve = []
+    for t in range(steps):
+        key, k = jax.random.split(key)
+        state, m = step(state, next(it), k)
+        if eval_cb and (t % eval_every == 0 or t == steps - 1):
+            curve.append((t,) + eval_cb(state.x, float(m["loss"])))
+    return state, curve
+
+
+def run_dsgd_dp(loss_fn, params0, it, top, steps, eta, sigma_p=0.0, tau=1.0,
+                eval_every=25, eval_cb=None, seed=0):
+    mixer = make_dense_mixer(top.w)
+    state = BL.dsgd_init(params0, top.n)
+    step = jax.jit(functools.partial(BL.dsgd_step, eta, 1.0, loss_fn, mixer,
+                                     tau=tau, sigma_p=sigma_p, dp=True))
+    key = jax.random.PRNGKey(seed)
+    curve = []
+    for t in range(steps):
+        key, k = jax.random.split(key)
+        state, m = step(state, next(it), k)
+        if eval_cb and (t % eval_every == 0 or t == steps - 1):
+            curve.append((t,) + eval_cb(average_params(state.x),
+                                        float(m["loss"])))
+    return state, curve

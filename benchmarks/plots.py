@@ -1,0 +1,86 @@
+"""Render the paper-figure analogues from artifacts/bench/*.json to PNG
+(artifacts/plots/).  Run after ``python -m benchmarks.run``:
+
+    PYTHONPATH=src python -m benchmarks.plots
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import matplotlib
+matplotlib.use("Agg")
+import matplotlib.pyplot as plt  # noqa: E402
+
+SRC = Path("artifacts/bench")
+OUT = Path("artifacts/plots")
+
+STYLE = {"porter_dp": dict(color="tab:red", marker="o", ms=3),
+         "soteriafl_sgd": dict(color="tab:blue", marker="s", ms=3),
+         "dsgd_dp": dict(color="tab:gray", marker="^", ms=3)}
+
+
+def _fig_curves(name: str, title: str):
+    data = json.loads((SRC / f"{name}.json").read_text())
+    eps_levels = sorted({k.rsplit("_eps", 1)[1] for k in data})
+    fig, axes = plt.subplots(2, len(eps_levels), figsize=(10, 7),
+                             sharex=True)
+    for col, eps in enumerate(eps_levels):
+        for key, curve in data.items():
+            algo, e = key.rsplit("_eps", 1)
+            if e != eps:
+                continue
+            steps = [p["step"] for p in curve]
+            axes[0][col].plot(steps, [p["utility"] for p in curve],
+                              label=algo, **STYLE.get(algo, {}))
+            axes[1][col].plot(steps, [p["test_acc"] for p in curve],
+                              label=algo, **STYLE.get(algo, {}))
+        axes[0][col].set_title(f"({eps}, 1e-3)-LDP")
+        axes[0][col].set_yscale("log")
+        axes[0][col].set_ylabel("train utility")
+        axes[1][col].set_ylabel("test accuracy")
+        axes[1][col].set_xlabel("communication rounds")
+        axes[0][col].legend(fontsize=8)
+    fig.suptitle(title)
+    fig.tight_layout()
+    OUT.mkdir(parents=True, exist_ok=True)
+    path = OUT / f"{name}.png"
+    fig.savefig(path, dpi=120)
+    plt.close(fig)
+    print("wrote", path)
+
+
+def _fig1():
+    data = json.loads((SRC / "fig1_clipping.json").read_text())
+    curve = data["1.0"]
+    fig, ax = plt.subplots(figsize=(5, 4))
+    ax.plot(curve["input_norm"], curve["smooth"],
+            label="smooth clip (Def. 2)", color="tab:red")
+    ax.plot(curve["input_norm"], curve["piecewise"],
+            label="piecewise clip (Remark 1)", color="tab:blue", ls="--")
+    ax.axhline(1.0, color="gray", lw=0.5)
+    ax.set_xlabel("input norm")
+    ax.set_ylabel("clipped norm (tau = 1)")
+    ax.legend()
+    fig.tight_layout()
+    OUT.mkdir(parents=True, exist_ok=True)
+    fig.savefig(OUT / "fig1_clipping.png", dpi=120)
+    plt.close(fig)
+    print("wrote", OUT / "fig1_clipping.png")
+
+
+def main():
+    if (SRC / "fig1_clipping.json").exists():
+        _fig1()
+    for name, title in [("fig2_logreg",
+                         "Fig. 2 analogue: logistic regression + nonconvex "
+                         "reg (a9a-like)"),
+                        ("fig3_mnist",
+                         "Fig. 3 analogue: 1-hidden-layer NN (MNIST-like)")]:
+        if (SRC / f"{name}.json").exists():
+            _fig_curves(name, title)
+
+
+if __name__ == "__main__":
+    main()

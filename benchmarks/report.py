@@ -1,0 +1,120 @@
+"""Render artifacts/dryrun/*.json into the EXPERIMENTS.md markdown tables
+(§Dry-run and §Roofline) and a per-pair bottleneck narrative.
+
+    PYTHONPATH=src python -m benchmarks.report > artifacts/roofline_report.md
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ARCH_ORDER = ["rwkv6-7b", "minicpm3-4b", "seamless-m4t-medium",
+              "tinyllama-1.1b", "h2o-danube-3-4b", "chatglm3-6b",
+              "grok-1-314b", "arctic-480b", "paligemma-3b", "zamba2-7b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 0.1:
+        return f"{x:.2f}"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}m"
+    return f"{x*1e6:.0f}u"
+
+
+def _fmt_b(x):
+    if x is None:
+        return "-"
+    for unit, div in (("GiB", 2**30), ("MiB", 2**20), ("KiB", 2**10)):
+        if x >= div:
+            return f"{x/div:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def load(src: Path, mesh: str, tag: str = ""):
+    recs = {}
+    for f in src.glob(f"*__{mesh}{'__' + tag if tag else ''}.json"):
+        rec = json.loads(f.read_text())
+        if rec.get("tag", "") != tag:
+            continue
+        recs[(rec["arch"], rec["shape"])] = rec
+    return recs
+
+
+def what_moves_it(rec) -> str:
+    """One sentence: what would move the dominant term down."""
+    r = rec["roofline"]
+    dom = r["dominant"]
+    kind = rec["kind"]
+    if dom == "collective":
+        if kind == "train":
+            return ("dense gossip all-gathers every EF increment; switch to "
+                    "packed top-k or ring ppermute wire formats")
+        return "tensor-parallel all-reduces; shard activations or fuse layers"
+    if dom == "memory":
+        if kind == "decode":
+            return ("cache reads dominate (bandwidth-bound decode, as "
+                    "expected); shrink cache dtype or window")
+        return ("activation traffic; bigger fused blocks / flash-style "
+                "attention chunking cuts HBM round-trips")
+    return "MXU-bound; increase per-chip batch or reduce precision"
+
+
+def table(recs, mesh: str):
+    lines = [
+        f"#### Mesh `{mesh}`",
+        "",
+        "| arch | shape | compute | memory | collective | dominant | "
+        "useful-FLOPs ratio | temp bytes/dev | coll bytes/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            rec = recs.get((arch, shape))
+            if rec is None:
+                continue
+            if not rec["ok"]:
+                lines.append(f"| {arch} | {shape} | FAILED: "
+                             f"{rec.get('error', '?')[:60]} | | | | | | |")
+                continue
+            r = rec["roofline"]
+            ma = rec.get("memory_analysis") or {}
+            lines.append(
+                f"| {arch} | {shape} | {_fmt_s(r['compute_s'])} "
+                f"| {_fmt_s(r['memory_s'])} | {_fmt_s(r['collective_s'])} "
+                f"| **{r['dominant']}** "
+                f"| {r['useful_flops_ratio']:.2f} "
+                f"| {_fmt_b(ma.get('temp_size_in_bytes'))} "
+                f"| {_fmt_b(r['wire_bytes_per_chip'])} |")
+    return "\n".join(lines)
+
+
+def narrative(recs):
+    lines = ["", "Per-pair dominant bottleneck and the lever that moves it:",
+             ""]
+    for (arch, shape), rec in sorted(recs.items()):
+        if rec["ok"]:
+            lines.append(f"* `{arch} x {shape}`: {rec['roofline']['dominant']}"
+                         f"-bound -- {what_moves_it(rec)}.")
+    return "\n".join(lines)
+
+
+def main():
+    src = Path("artifacts/dryrun")
+    tag = sys.argv[1] if len(sys.argv) > 1 else ""
+    for mesh in ("pod16x16", "pod2x16x16"):
+        recs = load(src, mesh, tag)
+        if not recs:
+            continue
+        print(table(recs, mesh))
+        print()
+    recs = load(src, "pod16x16", tag)
+    print(narrative(recs))
+
+
+if __name__ == "__main__":
+    main()

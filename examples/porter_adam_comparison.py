@@ -1,0 +1,69 @@
+"""Beyond-paper: PORTER vs PORTER-Adam on the ill-conditioned MLP problem.
+
+Same wire protocol (two compressed streams), same clipping, same graph --
+the only change is Adam-preconditioning the *tracked* gradient locally.
+On the badly-scaled MLP this typically reaches a given loss in fewer rounds.
+
+    PYTHONPATH=src python examples/porter_adam_comparison.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (PorterConfig, make_compressor, make_mixer,
+                        make_porter_step, make_topology, porter_init)
+from repro.core.porter_adam import make_porter_adam_step, porter_adam_init
+from repro.data import agent_batch_iterator, mnist_like, shard_to_agents
+
+N, STEPS = 8, 200
+
+x, y = mnist_like(8000, seed=0)
+xs, ys = shard_to_agents(x, y, N)
+top = make_topology("exponential", N, weights="metropolis")
+comp = make_compressor("top_k", frac=0.05)
+mixer = make_mixer(top, "dense")
+
+
+def loss_fn(params, batch):
+    f, l = batch
+    f, l = jnp.atleast_2d(f), jnp.atleast_1d(l)
+    h = jax.nn.sigmoid(f @ params["w1"] + params["c1"])
+    logits = h @ params["w2"] + params["c2"]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, l[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+params0 = {"w1": 0.05 * jax.random.normal(k1, (784, 64)),
+           "c1": jnp.zeros(64),
+           "w2": 0.05 * jax.random.normal(k2, (64, 10)),
+           "c2": jnp.zeros(10)}
+gamma = 0.5 * (1 - top.alpha) * 0.05
+
+runs = {}
+for name, (init, make_step, eta) in {
+    "porter_gc": (lambda: porter_init(params0, N, w=top.w),
+                  make_porter_step, 0.2),
+    "porter_adam": (lambda: porter_adam_init(params0, N, w=top.w),
+                    make_porter_adam_step, 0.02),
+}.items():
+    cfg = PorterConfig(eta=eta, gamma=gamma, tau=5.0, variant="gc")
+    state = init()
+    step = jax.jit(make_step(cfg, loss_fn, mixer, comp))
+    it = agent_batch_iterator(xs, ys, batch=8, seed=0)
+    key = jax.random.PRNGKey(0)
+    curve = []
+    for t in range(STEPS):
+        key, k = jax.random.split(key)
+        state, m = step(state, next(it), k)
+        if t % 20 == 0 or t == STEPS - 1:
+            curve.append((t, float(m["loss"])))
+    runs[name] = curve
+
+print(f"{'round':>8s} {'porter_gc':>12s} {'porter_adam':>12s}")
+for (t, a), (_, b) in zip(runs["porter_gc"], runs["porter_adam"]):
+    print(f"{t:8d} {a:12.4f} {b:12.4f}")
+print("\nSame communication (two top-5% streams/round); Adam preconditioning "
+      "of the tracked gradient is a purely-local change (beyond-paper; see "
+      "core/porter_adam.py for the caveat about theory coverage).")

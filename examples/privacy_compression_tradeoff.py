@@ -1,0 +1,73 @@
+"""Sweep the paper's trade-off surface: final utility vs privacy budget
+(epsilon) and compression ratio (rho), reproducing the qualitative shape of
+Theorems 2-4 on the logistic-regression testbed.
+
+    PYTHONPATH=src python examples/privacy_compression_tradeoff.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (PorterConfig, average_params, calibrate_sigma,
+                        make_compressor, make_mixer, make_porter_step,
+                        make_topology, phi_m, porter_init)
+from repro.data import a9a_like, agent_batch_iterator, shard_to_agents
+
+N, D, STEPS = 10, 123, 250
+
+x, y = a9a_like(20000, D, seed=0)
+xs, ys = shard_to_agents(x, y, N)
+m = xs.shape[1]
+top = make_topology("erdos_renyi", N, weights="best_constant", p=0.8, seed=1)
+
+
+def loss_fn(params, batch):
+    f, l = batch
+    f, l = jnp.atleast_2d(f), jnp.atleast_1d(l)
+    logits = f @ params["w"] + params["b"]
+    nll = jnp.mean(jnp.log1p(jnp.exp(-(2 * l - 1) * logits)))
+    return nll + 0.2 * jnp.sum(params["w"] ** 2 / (1 + params["w"] ** 2))
+
+
+def run_sweep(variant, rho, sigma_p):
+    comp = make_compressor("top_k" if variant == "gc" else "random_k",
+                           frac=rho)
+    cfg = PorterConfig(eta=0.05, gamma=0.5 * (1 - top.alpha) * rho, tau=1.0,
+                       variant=variant, sigma_p=sigma_p)
+    state = porter_init({"w": jnp.zeros(D), "b": jnp.zeros(())}, N, w=top.w)
+    step = jax.jit(make_porter_step(cfg, loss_fn, make_mixer(top, "dense"),
+                                    comp))
+    it = agent_batch_iterator(xs, ys, batch=1 if variant == "dp" else 4,
+                              seed=0)
+    key = jax.random.PRNGKey(0)
+    for _ in range(STEPS):
+        key, k = jax.random.split(key)
+        state, _ = step(state, next(it), k)
+    g = jax.grad(loss_fn)(average_params(state.x),
+                          (xs.reshape(-1, D), ys.reshape(-1)))
+    gn = float(jnp.sqrt(sum(jnp.sum(v ** 2)
+                            for v in jax.tree_util.tree_leaves(g))))
+    from repro.core import consensus_error
+    return gn, float(consensus_error(state.x))
+
+
+print("=== utility vs privacy (PORTER-DP, rho = 0.05) ===")
+print(f"{'epsilon':>10s} {'phi_m':>10s} {'sigma_p':>10s} {'|grad|':>10s}")
+for eps in (1.0, 0.1, 0.01):
+    sig = calibrate_sigma(1.0, STEPS, m, eps, 1e-3)
+    gn, _ = run_sweep("dp", 0.05, sig)
+    print(f"{eps:>10g} {phi_m(D, m, eps, 1e-3):>10.4f} {sig:>10.4f} "
+          f"{gn:>10.4f}")
+
+print("\n=== compression cost (PORTER-GC, no noise) ===")
+print(f"{'rho':>10s} {'|grad(avg)|':>12s} {'consensus':>12s}")
+print("(The average iterate is gossip-invariant -- v-bar tracks g-bar "
+      "exactly -- so rho's cost shows in the consensus error, the theory's "
+      "Lyapunov term.)")
+for rho in (1.0, 0.25, 0.05, 0.01):
+    gn, cons = run_sweep("gc", rho, 0.0)
+    print(f"{rho:>10g} {gn:>12.4f} {cons:>12.3e}")
+
+print("\nBoth axes show the paper's monotone trade-offs: more privacy "
+      "(smaller eps) costs utility; more compression (smaller rho) costs "
+      "consensus -- and neither breaks convergence.")

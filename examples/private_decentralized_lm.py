@@ -1,0 +1,84 @@
+"""End-to-end driver: train a transformer LM decentralized-and-privately.
+
+Eight agents train a reduced TinyLlama-family model with PORTER-DP:
+per-sample smooth clipping, Theorem-1-calibrated Gaussian perturbation for a
+(0.5, 1e-3)-LDP target, top-5% compressed gossip over a ring.  This is the
+"train a ~100M model for a few hundred steps" end-to-end example scaled to
+the CPU container (pass --big on a real pod to use the full config).
+
+    PYTHONPATH=src python examples/private_decentralized_lm.py --steps 120
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke
+from repro.core import (PorterConfig, calibrate_sigma, ldp_epsilon,
+                        make_compressor, make_mixer, make_porter_step,
+                        make_topology, porter_init)
+from repro.data import token_batch
+from repro.models import build_model
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=60)
+ap.add_argument("--agents", type=int, default=4)
+ap.add_argument("--batch", type=int, default=2)
+ap.add_argument("--seq", type=int, default=64)
+ap.add_argument("--epsilon", type=float, default=0.5)
+ap.add_argument("--delta", type=float, default=1e-3)
+ap.add_argument("--samples-per-agent", type=int, default=8192)
+ap.add_argument("--big", action="store_true", help="full tinyllama-1.1b")
+args = ap.parse_args()
+
+cfg = get_config("tinyllama-1.1b") if args.big else \
+    dataclasses.replace(get_smoke("tinyllama-1.1b"), n_layers=2, d_model=128,
+                        d_ff=352, n_heads=4, n_kv_heads=2, vocab=1024)
+cfg = dataclasses.replace(cfg, remat=False)
+bundle = build_model(cfg)
+params, _ = bundle.init(jax.random.PRNGKey(0))
+n_params = sum(int(np.prod(p.shape))
+               for p in jax.tree_util.tree_leaves(params))
+
+# --- privacy calibration (Theorem 1) ----------------------------------------
+tau = 1.0
+sigma_p = calibrate_sigma(tau, args.steps, args.samples_per_agent,
+                          args.epsilon, args.delta)
+eps_acct = ldp_epsilon(tau, sigma_p, args.steps, args.samples_per_agent,
+                       args.delta, b=args.batch)
+print(f"model: {n_params/1e6:.1f}M params | agents: {args.agents} | "
+      f"sigma_p = {sigma_p:.4g} for ({args.epsilon},{args.delta})-LDP "
+      f"(accountant says eps = {eps_acct:.3g})")
+
+# --- PORTER-DP over a ring ----------------------------------------------------
+top = make_topology("ring", args.agents, weights="metropolis")
+comp = make_compressor("top_k", frac=0.05)
+mixer = make_mixer(top, "dense")
+pcfg = PorterConfig(eta=5e-2, gamma=0.5 * (1 - top.alpha) * 0.05, tau=tau,
+                    variant="dp", sigma_p=sigma_p)
+state = porter_init(params, args.agents, w=top.w)
+step = jax.jit(make_porter_step(pcfg, bundle.loss, mixer, comp))
+
+key = jax.random.PRNGKey(1)
+t0 = time.time()
+first = last = None
+for t in range(args.steps):
+    key, kb, ks = jax.random.split(key, 3)
+    batch = {"tokens": token_batch(kb, args.agents, args.batch, args.seq,
+                                   cfg.vocab)}
+    state, m = step(state, batch, ks)
+    loss = float(m["loss"])
+    first = loss if first is None else first
+    last = loss
+    if t % 20 == 0 or t == args.steps - 1:
+        print(f"step {t:4d}  loss {loss:.4f}  "
+              f"consensus {float(m['consensus_x']):.2e}  "
+              f"({time.time()-t0:.1f}s)")
+
+print(f"\nloss {first:.3f} -> {last:.3f}; every gradient an agent ever "
+      f"shared was clipped to tau={tau} and perturbed: the run is "
+      f"({args.epsilon},{args.delta})-LDP end to end.")

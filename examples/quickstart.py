@@ -1,0 +1,62 @@
+"""Quickstart: decentralized training with PORTER in ~40 lines.
+
+Ten agents on an Erdos-Renyi graph minimize a nonconvex logistic-regression
+objective with 5%-top-k compressed gossip and smooth gradient clipping --
+exactly the paper's Section 5.1 protocol, on synthetic a9a-shaped data.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (PorterConfig, average_params, make_compressor,
+                        make_mixer, make_porter_step, make_topology,
+                        porter_init)
+from repro.data import a9a_like, agent_batch_iterator, shard_to_agents
+
+N_AGENTS, RHO = 10, 0.05
+
+# --- data: shuffled and split evenly across agents -------------------------
+x, y = a9a_like(num=20000, dim=123, seed=0)
+xs, ys = shard_to_agents(x, y, N_AGENTS)
+batches = agent_batch_iterator(xs, ys, batch=8, seed=0)
+
+
+# --- the objective (paper eq. in Section 5.1) -------------------------------
+def loss_fn(params, batch):
+    f, l = batch
+    f, l = jnp.atleast_2d(f), jnp.atleast_1d(l)
+    logits = f @ params["w"] + params["b"]
+    nll = jnp.mean(jnp.log1p(jnp.exp(-(2 * l - 1) * logits)))
+    return nll + 0.2 * jnp.sum(params["w"] ** 2 / (1 + params["w"] ** 2))
+
+
+# --- PORTER-GC over an ER(0.8) graph ----------------------------------------
+topology = make_topology("erdos_renyi", N_AGENTS, weights="best_constant",
+                         p=0.8, seed=1)
+compressor = make_compressor("top_k", frac=RHO)
+mixer = make_mixer(topology, "dense")
+config = PorterConfig(eta=0.05, gamma=0.5 * (1 - topology.alpha) * RHO,
+                      tau=1.0, variant="gc")
+
+params0 = {"w": jnp.zeros(123), "b": jnp.zeros(())}
+state = porter_init(params0, N_AGENTS, w=topology.w)
+step = jax.jit(make_porter_step(config, loss_fn, mixer, compressor))
+
+key = jax.random.PRNGKey(0)
+for t in range(400):
+    key, k = jax.random.split(key)
+    state, metrics = step(state, next(batches), k)
+    if t % 50 == 0:
+        print(f"step {t:4d}  loss {float(metrics['loss']):.4f}  "
+              f"consensus {float(metrics['consensus_x']):.2e}")
+
+avg = average_params(state.x)
+full = (jnp.asarray(xs.reshape(-1, 123)), jnp.asarray(ys.reshape(-1)))
+g = jax.grad(loss_fn)(avg, full)
+gn = float(jnp.sqrt(sum(jnp.sum(v ** 2)
+                        for v in jax.tree_util.tree_leaves(g))))
+print(f"\nfinal grad norm of the average iterate: {gn:.4f} "
+      f"(alpha={topology.alpha:.3f}, rho={RHO})")
+assert gn < 0.1

@@ -1,0 +1,11 @@
+"""Batched serving example: prefill a prompt batch and greedy-decode from a
+hybrid (Mamba2 + shared attention) model -- the cache machinery exercised by
+the decode_32k / long_500k dry-run shapes, at CPU scale.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+
+from repro.launch.serve import main
+
+raise SystemExit(main(["--arch", "zamba2-7b", "--smoke", "--batch", "2",
+                       "--prompt-len", "32", "--gen", "12"]))

@@ -1,0 +1,7 @@
+"""repro: a multi-pod JAX framework reproducing PORTER (Li & Chi, 2023) --
+decentralized nonconvex optimization with gradient clipping and
+communication compression -- and extending it to a production-style
+decentralized training stack (model zoo, mesh launcher, Pallas kernels,
+roofline tooling).  See DESIGN.md for the system inventory."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,34 @@
+"""repro.core -- the paper's contribution: PORTER and its substrate.
+
+Public surface:
+
+    compression : rho-compressors (Definition 3) + packed wire format
+    clipping    : smooth / piecewise clipping (Definition 2, Remark 1)
+    mixing      : graphs, mixing matrices, mixing rate (Definition 1)
+    privacy     : phi_m, Theorem-1 sigma calibration, moments accountant
+    gossip      : dense / ring / packed mixers over agent-stacked pytrees
+    porter      : Algorithm 1 (PORTER-DP / PORTER-GC / BEER)
+    baselines   : DSGD, CHOCO-SGD, DP-SGD, SoteriaFL-SGD
+"""
+
+from . import baselines, beer, clipping, compression, gossip, mixing, porter, privacy
+
+from .clipping import piecewise_clip, smooth_clip, tree_clip, tree_global_norm
+from .compression import Compressor, make_compressor
+from .gossip import make_mixer
+from .mixing import Topology, make_topology, mixing_rate
+from .porter import (PorterConfig, PorterState, average_params,
+                     consensus_error, make_porter_step, porter_init,
+                     porter_step)
+from .privacy import MomentsAccountant, calibrate_sigma, ldp_epsilon, phi_m
+
+__all__ = [
+    "baselines", "beer", "clipping", "compression", "gossip", "mixing",
+    "porter", "privacy",
+    "Compressor", "make_compressor", "Topology", "make_topology",
+    "mixing_rate", "PorterConfig", "PorterState", "porter_init", "porter_step",
+    "make_porter_step", "average_params", "consensus_error",
+    "MomentsAccountant", "calibrate_sigma", "ldp_epsilon", "phi_m",
+    "make_mixer", "smooth_clip", "piecewise_clip", "tree_clip",
+    "tree_global_norm",
+]

@@ -1,0 +1,213 @@
+"""Baseline algorithms the paper compares against (Table 1 and Section 5).
+
+* ``dsgd``          decentralized SGD with gossip averaging (no tracking, no
+                    EF, optionally clipped) -- the naive adaptation.
+* ``choco``         CHOCO-SGD [KSJ19]: compressed gossip with surrogate
+                    mirrors, no gradient tracking.
+* ``dp_sgd``        centralized DP-SGD [ACG+16] -- Table 1's single-server
+                    baseline (utility phi_m reference point).
+* ``soteriafl``     SoteriaFL-SGD [LZLC22]: server/client LDP with *shifted*
+                    compression -- the paper's Section-5 head-to-head.
+
+All share the agent-stacked pytree layout of :mod:`repro.core.porter` so the
+same data pipeline, loss functions and metrics apply.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import clipping
+from .compression import Compressor
+from .gossip import MixFn
+from .porter import LossFn, average_params, consensus_error
+
+__all__ = [
+    "DsgdState", "dsgd_init", "dsgd_step",
+    "ChocoState", "choco_init", "choco_step",
+    "DpSgdState", "dpsgd_init", "dpsgd_step",
+    "SoteriaState", "soteria_init", "soteria_step",
+]
+
+
+def _tree(op, *trees):
+    return jax.tree_util.tree_map(op, *trees)
+
+
+def _stack(params, n):
+    return _tree(lambda p: jnp.broadcast_to(p, (n,) + p.shape), params)
+
+
+def _dp_gradient(loss_fn, params, batch, key, tau, clip_mode, sigma_p):
+    g, loss = clipping.clipped_grad_accumulate(loss_fn, params, batch, tau,
+                                               clip_mode)
+    leaves, treedef = jax.tree_util.tree_flatten(g)
+    keys = jax.random.split(key, len(leaves))
+    g = treedef.unflatten([
+        l + sigma_p * jax.random.normal(k, l.shape, l.dtype)
+        for k, l in zip(keys, leaves)
+    ])
+    return loss, g
+
+
+# ---------------------------------------------------------------------------
+# DSGD
+# ---------------------------------------------------------------------------
+
+class DsgdState(NamedTuple):
+    x: Any
+    step: jax.Array
+
+
+def dsgd_init(params, n_agents: int) -> DsgdState:
+    return DsgdState(x=_stack(params, n_agents),
+                     step=jnp.zeros((), jnp.int32))
+
+
+def dsgd_step(eta: float, gamma: float, loss_fn: LossFn, mixer: MixFn,
+              state: DsgdState, batch, key,
+              tau: Optional[float] = None, clip_mode: str = "smooth",
+              sigma_p: float = 0.0, dp: bool = False
+              ) -> Tuple[DsgdState, Dict[str, jax.Array]]:
+    """X^{t+1} = X + gamma X(W - I) - eta G   (uncompressed gossip)."""
+    n = jax.tree_util.tree_leaves(state.x)[0].shape[0]
+    keys = jax.random.split(key, n)
+
+    def agent_grad(p, b, k):
+        if dp:
+            return _dp_gradient(loss_fn, p, b, k, tau, clip_mode, sigma_p)
+        loss, g = jax.value_and_grad(loss_fn)(p, b)
+        if tau is not None:
+            g = clipping.tree_clip(g, tau, clip_mode)
+        return loss, g
+
+    losses, g = jax.vmap(agent_grad)(state.x, batch, keys)
+    mixed = mixer(state.x)  # W X
+    x = _tree(lambda x0, wx, gg: x0 + gamma * (wx - x0) - eta * gg,
+              state.x, mixed, g)
+    return DsgdState(x=x, step=state.step + 1), {
+        "loss": jnp.mean(losses), "consensus_x": consensus_error(x)}
+
+
+# ---------------------------------------------------------------------------
+# CHOCO-SGD
+# ---------------------------------------------------------------------------
+
+class ChocoState(NamedTuple):
+    x: Any
+    q: Any      # own surrogate x-hat
+    m: Any      # mixing mirror: sum_j w_ij x-hat_j
+    step: jax.Array
+
+
+def choco_init(params, n_agents: int) -> ChocoState:
+    x = _stack(params, n_agents)
+    zeros = _tree(lambda l: jnp.zeros_like(l, dtype=jnp.float32), x)
+    return ChocoState(x=x, q=zeros, m=zeros, step=jnp.zeros((), jnp.int32))
+
+
+def choco_step(eta: float, gamma: float, loss_fn: LossFn, mixer: MixFn,
+               compressor: Compressor, state: ChocoState, batch, key,
+               tau: Optional[float] = None, clip_mode: str = "smooth",
+               ) -> Tuple[ChocoState, Dict[str, jax.Array]]:
+    """CHOCO-SGD: x+ = x - eta g;  q += C(x+ - q);  x = x+ + gamma (m - q)."""
+    from .porter import _compress_stacked  # shared helper
+
+    n = jax.tree_util.tree_leaves(state.x)[0].shape[0]
+    k_g, k_c = jax.random.split(key)
+    keys = jax.random.split(k_g, n)
+
+    def agent_grad(p, b, k):
+        del k
+        loss, g = jax.value_and_grad(loss_fn)(p, b)
+        if tau is not None:
+            g = clipping.tree_clip(g, tau, clip_mode)
+        return loss, g
+
+    losses, g = jax.vmap(agent_grad)(state.x, batch, keys)
+    x_half = _tree(lambda x0, gg: x0 - eta * gg, state.x, g)
+    incr = _compress_stacked(compressor, k_c,
+                             _tree(jnp.subtract, x_half, state.q))
+    q = _tree(jnp.add, state.q, incr)
+    m = _tree(jnp.add, state.m, mixer(incr))
+    x = _tree(lambda xh, mm, qq: xh + gamma * (mm - qq), x_half, m, q)
+    return ChocoState(x=x, q=q, m=m, step=state.step + 1), {
+        "loss": jnp.mean(losses), "consensus_x": consensus_error(x)}
+
+
+# ---------------------------------------------------------------------------
+# Centralized DP-SGD (Table 1 baseline)
+# ---------------------------------------------------------------------------
+
+class DpSgdState(NamedTuple):
+    x: Any
+    step: jax.Array
+
+
+def dpsgd_init(params) -> DpSgdState:
+    return DpSgdState(x=params, step=jnp.zeros((), jnp.int32))
+
+
+def dpsgd_step(eta: float, loss_fn: LossFn, state: DpSgdState, batch, key,
+               tau: float = 1.0, clip_mode: str = "smooth",
+               sigma_p: float = 0.0) -> Tuple[DpSgdState, Dict[str, jax.Array]]:
+    loss, g = _dp_gradient(loss_fn, state.x, batch, key, tau, clip_mode,
+                           sigma_p)
+    x = _tree(lambda x0, gg: x0 - eta * gg, state.x, g)
+    return DpSgdState(x=x, step=state.step + 1), {"loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# SoteriaFL-SGD (server/client, shifted compression)
+# ---------------------------------------------------------------------------
+
+class SoteriaState(NamedTuple):
+    x: Any       # server model (replicated view)
+    h: Any       # per-client shift, agent-stacked
+    h_bar: Any   # server-side average shift
+    step: jax.Array
+
+
+def soteria_init(params, n_agents: int) -> SoteriaState:
+    zeros_stacked = _tree(
+        lambda p: jnp.zeros((n_agents,) + p.shape, jnp.float32), params)
+    zeros = _tree(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return SoteriaState(x=params, h=zeros_stacked, h_bar=zeros,
+                        step=jnp.zeros((), jnp.int32))
+
+
+def soteria_step(eta: float, alpha_shift: float, loss_fn: LossFn,
+                 compressor: Compressor, state: SoteriaState, batch, key,
+                 tau: float = 1.0, clip_mode: str = "smooth",
+                 sigma_p: float = 0.0
+                 ) -> Tuple[SoteriaState, Dict[str, jax.Array]]:
+    """SoteriaFL-SGD: clients send C(g_i - h_i); server uses h_bar + mean(c).
+
+    g_i is the per-sample-clipped + perturbed local gradient (LDP).
+    """
+    from .porter import _compress_stacked
+
+    n = jax.tree_util.tree_leaves(state.h)[0].shape[0]
+    k_g, k_c = jax.random.split(key)
+    keys = jax.random.split(k_g, n)
+
+    def client(h_i, b, k):
+        loss, g = _dp_gradient(loss_fn, state.x, b, k, tau, clip_mode, sigma_p)
+        return loss, g
+
+    losses, g = jax.vmap(client)(state.h, batch, keys)
+    delta = _tree(jnp.subtract, g, state.h)
+    c = _compress_stacked(compressor, k_c, delta)
+    h = _tree(lambda h0, cc: h0 + alpha_shift * cc, state.h, c)
+    c_bar = _tree(lambda cc: jnp.mean(cc, axis=0), c)
+    g_tilde = _tree(jnp.add, state.h_bar, c_bar)
+    h_bar = _tree(lambda hb, cb: hb + alpha_shift * cb, state.h_bar, c_bar)
+    x = _tree(lambda x0, gt: (x0 - eta * gt).astype(x0.dtype), state.x, g_tilde)
+    return SoteriaState(x=x, h=h, h_bar=h_bar, step=state.step + 1), {
+        "loss": jnp.mean(losses)}

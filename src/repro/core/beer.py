@@ -1,0 +1,21 @@
+"""BEER [ZLL+22] -- the unclipped ancestor of PORTER.
+
+The paper (Section 4.3): "When the gradients are bounded, we can omit the
+clipping operator in PORTER-GC, which become the same as BEER."  So BEER is
+PORTER with ``variant='beer'``; this module just packages that fact so
+experiments can ask for BEER by name and so the equivalence is pinned by a
+test (tests/test_porter.py::test_beer_is_unclipped_porter).
+"""
+
+from __future__ import annotations
+
+from .porter import PorterConfig
+
+__all__ = ["beer_config"]
+
+
+def beer_config(eta: float, gamma: float, **kwargs) -> PorterConfig:
+    kwargs.pop("variant", None)
+    kwargs.pop("tau", None)
+    return PorterConfig(eta=eta, gamma=gamma, variant="beer", tau=float("inf"),
+                        **kwargs)

@@ -1,0 +1,270 @@
+"""Communication compression operators (paper Definition 3).
+
+A rho-compressor is a (possibly randomized, possibly biased) map C with
+
+    E || C(x) - x ||_2^2  <=  (1 - rho) ||x||_2^2 ,   rho in [0, 1].
+
+Instances implemented here:
+
+* ``identity``      rho = 1 (no compression)
+* ``random_k``      paper Example 1 -- Bernoulli(k/d) mask, *biased*, rho = k/d
+* ``top_k``         paper Example 2 -- global magnitude top-k, rho = k/d
+* ``block_top_k``   TPU-idiomatic top-k performed per fixed-size block
+                    (still rho = k/d; see kernels/block_topk.py for the
+                    Pallas version -- this module is the jnp reference)
+* ``qsgd``          scaled stochastic quantizer; the unbiased QSGD operator
+                    Q satisfies E||Q(x)-x||^2 <= omega ||x||^2, so the scaled
+                    version Q/(1+omega) is a rho = 1/(1+omega) compressor.
+
+All compressors operate on flat vectors; :func:`compress_tree` maps a
+compressor over an agent-stacked pytree, giving every (agent, leaf) pair an
+independent PRNG stream.
+
+Dense emulation vs. wire format: the functions here return *dense* arrays (the
+zeros are materialized) which is what the convergence math sees.  The packed
+wire format that actually shrinks collective bytes lives in
+:mod:`repro.core.gossip` (``packed_topk`` mode).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Compressor",
+    "identity",
+    "random_k",
+    "top_k",
+    "block_top_k",
+    "qsgd",
+    "low_rank",
+    "make_compressor",
+    "compress_tree",
+    "topk_pack",
+    "topk_unpack",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    """A rho-compression operator (Definition 3).
+
+    Attributes:
+      name: registry name.
+      rho: contraction factor in (0, 1]; E||C(x)-x||^2 <= (1-rho)||x||^2.
+      fn: (key, x) -> compressed dense x (same shape/dtype).
+      deterministic: True when ``fn`` ignores the key (e.g. top-k).
+      bits_per_element: estimated wire bits per *transmitted* element, used by
+        the communication accounting (32 for sparse value+index schemes
+        counts value bits; index bits are added by the accounting).
+    """
+
+    name: str
+    rho: float
+    fn: Callable[[jax.Array, jax.Array], jax.Array]
+    deterministic: bool = False
+    bits_per_element: int = 32
+
+    def __call__(self, key: Optional[jax.Array], x: jax.Array) -> jax.Array:
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        return self.fn(key, x)
+
+    def wire_bits(self, d: int) -> float:
+        """Estimated bits on the wire for one compressed d-vector."""
+        if self.name == "identity":
+            return 32.0 * d
+        if self.name == "qsgd":
+            return self.bits_per_element * d
+        # sparse schemes: value + log2(d) index bits per kept element
+        k = max(int(round(self.rho * d)), 1)
+        return k * (self.bits_per_element + float(np.ceil(np.log2(max(d, 2)))))
+
+
+def _identity(key, x):
+    del key
+    return x
+
+
+def identity() -> Compressor:
+    return Compressor("identity", 1.0, _identity, deterministic=True)
+
+
+def random_k(frac: float) -> Compressor:
+    """Paper Example 1: keep each coordinate w.p. ``frac`` (biased, no rescale)."""
+
+    def fn(key, x):
+        mask = jax.random.bernoulli(key, frac, x.shape)
+        return jnp.where(mask, x, jnp.zeros_like(x))
+
+    return Compressor(f"random_k({frac})", float(frac), fn)
+
+
+def _topk_dense(x: jax.Array, k: int) -> jax.Array:
+    flat = x.reshape(-1)
+    d = flat.shape[0]
+    k = min(k, d)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    out = jnp.zeros_like(flat).at[idx].set(flat[idx])
+    return out.reshape(x.shape)
+
+
+def top_k(frac: float) -> Compressor:
+    """Paper Example 2: keep the k = frac*d largest-magnitude coordinates."""
+
+    def fn(key, x):
+        del key
+        k = max(int(round(frac * x.size)), 1)
+        return _topk_dense(x, k)
+
+    return Compressor(f"top_k({frac})", float(frac), fn, deterministic=True)
+
+
+def block_top_k(frac: float, block: int = 2048) -> Compressor:
+    """Per-block top-k: the TPU-idiomatic variant (see kernels/block_topk.py).
+
+    Selecting k_b = frac*block elements independently inside each ``block``-sized
+    window still satisfies Definition 3 with rho = frac: the error in each block
+    is at most (1-frac) of that block's energy, and energies add.
+    """
+
+    def fn(key, x):
+        del key
+        flat = x.reshape(-1)
+        d = flat.shape[0]
+        pad = (-d) % block
+        padded = jnp.pad(flat, (0, pad))
+        blocks = padded.reshape(-1, block)
+        k_b = max(int(round(frac * block)), 1)
+        _, idx = jax.lax.top_k(jnp.abs(blocks), k_b)
+        vals = jnp.take_along_axis(blocks, idx, axis=1)
+        out = jnp.zeros_like(blocks)
+        out = jax.vmap(lambda o, i, v: o.at[i].set(v))(out, idx, vals)
+        return out.reshape(-1)[:d].reshape(x.shape)
+
+    return Compressor(f"block_top_k({frac},{block})", float(frac), fn,
+                      deterministic=True)
+
+
+def low_rank(rank: int = 2, power_iters: int = 1) -> Compressor:
+    """PowerSGD-style rank-r compressor [Vogels et al. 2019], adapted to the
+    Definition-3 contract.
+
+    The input vector is reshaped to a near-square matrix M; ``power_iters``
+    subspace iterations with a fixed (key-seeded) Gaussian sketch give an
+    orthonormal Q whose projection P = (M Q) Q^T is the best-effort rank-r
+    approximation.  Projections are contractions (||P - M||^2 <= ||M||^2 with
+    strict inequality unless M is rank-deficient), so Definition 3 holds with
+    a data-dependent rho; we report the conservative floor
+    rho >= rank / min_dim for random matrices (validated empirically in
+    tests/test_compression.py).  Wire format: the (m, r) + (n, r) factors --
+    r*(m+n) floats instead of m*n.
+    """
+
+    def fn(key, x):
+        flat = x.reshape(-1).astype(jnp.float32)
+        d = flat.shape[0]
+        m = int(np.ceil(np.sqrt(d)))
+        n = int(np.ceil(d / m))
+        pad = m * n - d
+        mat = jnp.pad(flat, (0, pad)).reshape(m, n)
+        r = min(rank, m, n)
+        q = jax.random.normal(key, (n, r))
+        for _ in range(power_iters):
+            p_ = mat @ q                       # (m, r)
+            p_, _ = jnp.linalg.qr(p_)
+            q = mat.T @ p_                     # (n, r)
+        q_orth, _ = jnp.linalg.qr(q)
+        approx = (mat @ q_orth) @ q_orth.T
+        return approx.reshape(-1)[:d].reshape(x.shape).astype(x.dtype)
+
+    return Compressor(f"low_rank({rank})", 0.0, fn)  # rho data-dependent
+
+
+def qsgd(levels: int = 16) -> Compressor:
+    """Scaled stochastic quantizer.
+
+    QSGD with s levels is unbiased with relative variance
+    omega <= min(d/s^2, sqrt(d)/s).  Scaling the output by 1/(1+omega) turns it
+    into a rho = 1/(1+omega) contraction (standard trick, cf. [RSF21]).
+    omega depends on d, so rho here is a conservative static bound computed for
+    d up to ~1e9 via the sqrt(d)/s branch at construction time is impossible;
+    instead we compute the scale per-call from the actual d.
+    """
+
+    def fn(key, x):
+        flat = x.reshape(-1)
+        d = flat.shape[0]
+        norm = jnp.linalg.norm(flat) + 1e-30
+        y = jnp.abs(flat) / norm * levels
+        lo = jnp.floor(y)
+        prob = y - lo
+        rnd = jax.random.uniform(key, flat.shape)
+        q = (lo + (rnd < prob)) / levels
+        omega = min(np.sqrt(d) / levels, d / levels**2)
+        out = jnp.sign(flat) * q * norm / (1.0 + omega)
+        return out.reshape(x.shape).astype(x.dtype)
+
+    # rho reported for "typical" d ~ 1e6; exact value enforced in tests per-d.
+    omega_typ = np.sqrt(1e6) / levels
+    return Compressor(f"qsgd({levels})", float(1.0 / (1.0 + omega_typ)), fn,
+                      bits_per_element=int(np.ceil(np.log2(levels + 1))) + 1)
+
+
+_REGISTRY = {
+    "identity": identity,
+    "random_k": random_k,
+    "top_k": top_k,
+    "block_top_k": block_top_k,
+    "qsgd": qsgd,
+    "low_rank": low_rank,
+}
+
+
+def make_compressor(name: str, **kwargs) -> Compressor:
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown compressor {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**kwargs)
+
+
+def compress_tree(comp: Compressor, key: jax.Array, tree):
+    """Apply ``comp`` leaf-wise to a pytree with independent PRNG streams.
+
+    Leaves may carry a leading agent axis; compression is applied to the whole
+    leaf buffer per agent row (vmapped) so every agent compresses its own
+    vector independently, as in the paper.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+
+    def one(key, leaf):
+        if leaf.ndim >= 2:  # (n_agents, ...) -> compress per agent row
+            n = leaf.shape[0]
+            ks = jax.random.split(key, n)
+            return jax.vmap(lambda kk, row: comp(kk, row))(ks, leaf)
+        return comp(key, leaf)
+
+    return treedef.unflatten([one(k, l) for k, l in zip(keys, leaves)])
+
+
+# ---------------------------------------------------------------------------
+# Packed top-k wire format (used by gossip 'packed_topk' mode).
+# ---------------------------------------------------------------------------
+
+def topk_pack(x: jax.Array, k: int):
+    """Pack a vector into (values, int32 indices) of its top-k magnitudes."""
+    flat = x.reshape(-1)
+    vals_abs, idx = jax.lax.top_k(jnp.abs(flat), k)
+    del vals_abs
+    return flat[idx], idx.astype(jnp.int32)
+
+
+def topk_unpack(values: jax.Array, indices: jax.Array, d: int) -> jax.Array:
+    """Scatter packed (values, indices) back into a dense d-vector."""
+    return jnp.zeros((d,), values.dtype).at[indices].set(values)

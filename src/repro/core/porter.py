@@ -1,0 +1,224 @@
+"""PORTER (paper Algorithm 1): decentralized nonconvex optimization with
+gradient clipping and communication compression.
+
+State layout: every buffer is an *agent-stacked pytree* -- each leaf carries a
+leading ``n_agents`` axis which, under pjit, is sharded over the mesh's agent
+axes (``('data',)`` or ``('pod','data')``).  Buffers (paper notation):
+
+    x       X^t      parameters, one replica per agent
+    v       V^t      gradient-tracking estimates
+    q_x     Q_x^t    compressed surrogate of X (error feedback)
+    q_v     Q_v^t    compressed surrogate of V
+    g_prev  G_p^t    previous perturbed/clipped stochastic gradient
+    m_x     (W Q_x)  mixing mirror: sum_j w_ij q_{x,j}, accumulated from wire
+    m_v     (W Q_v)  increments -- see core/gossip.py; (Q(W-I))_i = m_i - q_i
+
+The two mirrors are the receive-side state a real deployment keeps anyway;
+they let every wire format (dense / ring / packed top-k) share one algorithm
+body.
+
+One iteration (Algorithm 1, lines 4-14):
+
+    G^t   = clipped/perturbed stochastic gradient at X^{t-1}     (DP or GC)
+    c_v   = C(V^{t-1} - Q_v^{t-1});  Q_v += c_v;  M_v += W c_v   (comm)
+    V^t   = V^{t-1} + gamma (M_v - Q_v) + G^t - G^{t-1}
+    c_x   = C(X^{t-1} - Q_x^{t-1});  Q_x += c_x;  M_x += W c_x   (comm)
+    X^t   = X^{t-1} + gamma (M_x - Q_x) - eta V^t
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import clipping
+from .compression import Compressor
+from .gossip import MixFn, make_dense_mixer
+from .mixing import Topology
+
+__all__ = [
+    "PorterConfig",
+    "PorterState",
+    "porter_init",
+    "porter_step",
+    "make_porter_step",
+    "average_params",
+    "consensus_error",
+]
+
+LossFn = Callable[[Any, Any], jax.Array]  # (params, batch) -> scalar loss
+
+
+@dataclasses.dataclass(frozen=True)
+class PorterConfig:
+    """Hyper-parameters of Algorithm 1.
+
+    variant: 'dp' (clip-then-batch + Gaussian noise, Option I),
+             'gc' (batch-then-clip, Option II),
+             'beer' (no clipping -- the BEER ancestor, tau ignored).
+    """
+
+    eta: float                      # gradient stepsize
+    gamma: float                    # consensus stepsize
+    tau: float = 1.0                # clipping threshold
+    variant: str = "gc"             # 'dp' | 'gc' | 'beer'
+    clip_mode: str = "smooth"       # 'smooth' | 'piecewise'
+    sigma_p: float = 0.0            # DP perturbation std (Theorem 1)
+    grad_dtype: Any = jnp.float32   # accumulation dtype for the EF buffers
+
+    def __post_init__(self):
+        if self.variant not in ("dp", "gc", "beer"):
+            raise ValueError(f"unknown variant {self.variant!r}")
+
+
+class PorterState(NamedTuple):
+    x: Any
+    v: Any
+    q_x: Any
+    q_v: Any
+    g_prev: Any
+    m_x: Any
+    m_v: Any
+    step: jax.Array
+
+
+def _zeros_like_f(tree, dtype):
+    return jax.tree_util.tree_map(lambda l: jnp.zeros(l.shape, dtype), tree)
+
+
+def porter_init(params: Any, n_agents: int, w: Optional[np.ndarray] = None,
+                buffer_dtype: Any = jnp.float32) -> PorterState:
+    """Initialize from a single replica; X^0 = x0 1^T (paper line 2)."""
+    x = jax.tree_util.tree_map(
+        lambda p: jnp.broadcast_to(p, (n_agents,) + p.shape), params)
+    zeros = _zeros_like_f(x, buffer_dtype)
+    if w is None:
+        m_x = x  # all agents equal and rows of W sum to 1 => W X0 = X0
+    else:
+        mixer = make_dense_mixer(w)
+        m_x = mixer(x)
+    return PorterState(x=x, v=zeros, q_x=x, q_v=zeros, g_prev=zeros,
+                       m_x=m_x, m_v=zeros, step=jnp.zeros((), jnp.int32))
+
+
+def _compress_stacked(comp: Compressor, key: jax.Array, tree):
+    """Compress each agent's row of every leaf independently."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+
+    def one(k, leaf):
+        n = leaf.shape[0]
+        ks = jax.random.split(k, n)
+        return jax.vmap(lambda kk, row: comp(kk, row))(ks, leaf)
+
+    return treedef.unflatten([one(k, l) for k, l in zip(keys, leaves)])
+
+
+def _agent_gradient(cfg: PorterConfig, loss_fn: LossFn, params, batch,
+                    key: jax.Array) -> Tuple[jax.Array, Any]:
+    """One agent's G_p (Algorithm 1 lines 5-10).  batch leaves: (b, ...)."""
+    if cfg.variant == "dp":
+        # Option I: clip each sample's gradient, average, perturb.
+        g, loss = clipping.clipped_grad_accumulate(
+            loss_fn, params, batch, cfg.tau, cfg.clip_mode)
+        leaves, treedef = jax.tree_util.tree_flatten(g)
+        keys = jax.random.split(key, len(leaves))
+        noised = [
+            l + cfg.sigma_p * jax.random.normal(k, l.shape, l.dtype)
+            for k, l in zip(keys, leaves)
+        ]
+        return loss, treedef.unflatten(noised)
+    # Option II / BEER: one batch gradient, clip after (or not at all).
+    loss, g = jax.value_and_grad(loss_fn)(params, batch)
+    if cfg.variant == "gc":
+        g = clipping.tree_clip(g, cfg.tau, cfg.clip_mode)
+    return loss, g
+
+
+def porter_step(
+    cfg: PorterConfig,
+    loss_fn: LossFn,
+    mixer: MixFn,
+    compressor: Compressor,
+    state: PorterState,
+    batch: Any,
+    key: jax.Array,
+    compress_fn=None,
+) -> Tuple[PorterState, Dict[str, jax.Array]]:
+    """One PORTER iteration over all agents (pure; jit/pjit-able).
+
+    batch: pytree with leaves (n_agents, b, ...).
+    compress_fn: optional (key, tree) -> tree override for the compression
+    (e.g. the shard-local compressor from repro.launch.steps, which keeps
+    top-k selection inside each model shard and avoids resharding
+    all-gathers).  Defaults to per-agent-row compression of ``compressor``.
+    """
+    n = jax.tree_util.tree_leaves(state.x)[0].shape[0]
+    _, k_noise, k_cv, k_cx = jax.random.split(key, 4)
+    if compress_fn is None:
+        compress_fn = functools.partial(_compress_stacked, compressor)
+
+    # ---- stochastic gradients (local; lines 4-10) -------------------------
+    agent_keys = jax.random.split(k_noise, n)
+    grad_fn = functools.partial(_agent_gradient, cfg, loss_fn)
+    losses, g = jax.vmap(grad_fn)(state.x, batch, agent_keys)
+    g = jax.tree_util.tree_map(lambda l: l.astype(cfg.grad_dtype), g)
+
+    # ---- gradient-estimate track (lines 11-12) ----------------------------
+    incr_v = compress_fn(k_cv,
+                         jax.tree_util.tree_map(jnp.subtract, state.v,
+                                                state.q_v))
+    q_v = jax.tree_util.tree_map(jnp.add, state.q_v, incr_v)
+    m_v = jax.tree_util.tree_map(jnp.add, state.m_v, mixer(incr_v))
+    gossip_v = jax.tree_util.tree_map(lambda m, q: m - q, m_v, q_v)
+    v = jax.tree_util.tree_map(
+        lambda v0, gv, gn, gp: v0 + cfg.gamma * gv + gn - gp,
+        state.v, gossip_v, g, state.g_prev)
+
+    # ---- parameter update (lines 13-14) -----------------------------------
+    incr_x = compress_fn(k_cx,
+                         jax.tree_util.tree_map(jnp.subtract, state.x,
+                                                state.q_x))
+    q_x = jax.tree_util.tree_map(jnp.add, state.q_x, incr_x)
+    m_x = jax.tree_util.tree_map(jnp.add, state.m_x, mixer(incr_x))
+    gossip_x = jax.tree_util.tree_map(lambda m, q: m - q, m_x, q_x)
+    x = jax.tree_util.tree_map(
+        lambda x0, gx, vv: (x0 + cfg.gamma * gx - cfg.eta * vv).astype(x0.dtype),
+        state.x, gossip_x, v)
+
+    new_state = PorterState(x=x, v=v, q_x=q_x, q_v=q_v, g_prev=g,
+                            m_x=m_x, m_v=m_v, step=state.step + 1)
+    metrics = {
+        "loss": jnp.mean(losses),
+        "consensus_x": consensus_error(x),
+        "consensus_v": consensus_error(v),
+        "v_norm": clipping.tree_global_norm(v) / np.sqrt(n),
+    }
+    return new_state, metrics
+
+
+def make_porter_step(cfg: PorterConfig, loss_fn: LossFn, mixer: MixFn,
+                     compressor: Compressor, compress_fn=None):
+    """Bind the static pieces; returns step(state, batch, key)."""
+    return functools.partial(porter_step, cfg, loss_fn, mixer, compressor,
+                             compress_fn=compress_fn)
+
+
+def average_params(x_stacked):
+    """x-bar: the average replica (paper's evaluation point)."""
+    return jax.tree_util.tree_map(lambda l: jnp.mean(l, axis=0), x_stacked)
+
+
+def consensus_error(tree) -> jax.Array:
+    """|| Y - y_bar 1^T ||_F^2 across all leaves."""
+    def leaf_err(l):
+        lf = l.astype(jnp.float32)
+        mean = jnp.mean(lf, axis=0, keepdims=True)
+        return jnp.sum(jnp.square(lf - mean))
+
+    return sum(leaf_err(l) for l in jax.tree_util.tree_leaves(tree))

@@ -1,0 +1,99 @@
+"""Synthetic datasets (the container is offline; see DESIGN.md).
+
+Faithful stand-ins for the paper's experiment data with matching dimensions:
+
+* ``a9a_like``    -- binary classification, d=123 sparse-ish features (the
+                     LIBSVM a9a layout), labels in {0, 1}; used by the
+                     logistic-regression + nonconvex-regularizer experiment
+                     (paper Section 5.1).
+* ``mnist_like``  -- 10-class 784-dim images with class-dependent Gaussian
+                     means (paper Section 5.2's one-hidden-layer MLP).
+* ``token_stream``-- integer LM token batches for the model-zoo training
+                     path (agent-sharded, deterministic per agent/step).
+
+Everything is a pure function of (seed, shapes): every agent regenerates its
+own shard deterministically, which is exactly how a decentralized system
+avoids a data server.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "a9a_like", "mnist_like", "shard_to_agents", "agent_batch_iterator",
+    "token_batch",
+]
+
+
+def a9a_like(num: int = 32561, dim: int = 123, seed: int = 0,
+             sparsity: float = 0.11) -> Tuple[np.ndarray, np.ndarray]:
+    """Binary classification with a planted linear signal + label noise.
+
+    a9a is ~11% dense binary features; we mimic that so gradient scales (and
+    hence clipping behaviour) are comparable.
+    """
+    rng = np.random.default_rng(seed)
+    x = (rng.random((num, dim)) < sparsity).astype(np.float32)
+    w_star = rng.normal(size=(dim,)).astype(np.float32)
+    logits = x @ w_star / np.sqrt(dim * sparsity)
+    p = 1.0 / (1.0 + np.exp(-4.0 * logits))
+    y = (rng.random(num) < p).astype(np.float32)
+    return x, y
+
+
+def mnist_like(num: int = 60000, dim: int = 784, classes: int = 10,
+               seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """10-class images: class-dependent smooth means + pixel noise in [0,1]."""
+    rng = np.random.default_rng(seed)
+    # smooth class prototypes: random low-frequency mixtures
+    freq = rng.normal(size=(classes, 8, dim)).astype(np.float32)
+    coef = rng.normal(size=(classes, 8, 1)).astype(np.float32)
+    protos = np.tanh((freq * coef).sum(axis=1) / 4.0) * 0.5 + 0.5
+    y = rng.integers(0, classes, size=num)
+    x = protos[y] + 0.25 * rng.normal(size=(num, dim)).astype(np.float32)
+    x = np.clip(x, 0.0, 1.0).astype(np.float32)
+    return x, y.astype(np.int32)
+
+
+def shard_to_agents(x: np.ndarray, y: np.ndarray, n_agents: int,
+                    seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Shuffle and split evenly across agents (paper Section 5 protocol).
+
+    Returns arrays with a leading (n_agents, m) layout; m = num // n_agents.
+    """
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(len(x))
+    m = len(x) // n_agents
+    keep = perm[: m * n_agents]
+    xs = x[keep].reshape(n_agents, m, *x.shape[1:])
+    ys = y[keep].reshape(n_agents, m, *y.shape[1:])
+    return xs, ys
+
+
+def agent_batch_iterator(xs: np.ndarray, ys: np.ndarray, batch: int,
+                         seed: int = 0) -> Iterator[Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Yields (n_agents, batch, ...) mini-batches, iid uniform per agent
+    (paper line 4: 'Draw the local mini-batch of size b uniformly at
+    random')."""
+    n_agents, m = xs.shape[0], xs.shape[1]
+    rng = np.random.default_rng(seed)
+    while True:
+        idx = rng.integers(0, m, size=(n_agents, batch))
+        xb = np.take_along_axis(
+            xs, idx.reshape(n_agents, batch, *([1] * (xs.ndim - 2))), axis=1)
+        yb = np.take_along_axis(
+            ys, idx.reshape(n_agents, batch, *([1] * (ys.ndim - 2))), axis=1)
+        yield jnp.asarray(xb), jnp.asarray(yb)
+
+
+def token_batch(key: jax.Array, n_agents: int, batch: int, seq: int,
+                vocab: int) -> jnp.ndarray:
+    """Deterministic synthetic LM tokens: (n_agents, batch, seq) int32."""
+    return jax.random.randint(key, (n_agents, batch, seq), 0, vocab,
+                              dtype=jnp.int32)

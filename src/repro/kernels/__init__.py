@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for PORTER's hot spots (interpret-validated on CPU).
+
+smooth_clip : fused norm + rescale (+ DP noise)        -- Definition 2
+block_topk  : per-block top-k via bisection select     -- Definition 3
+ef_update   : fused error-feedback/tracking AXPYs      -- Algorithm 1 l.11-14
+rwkv6_chunk : RWKV6 chunked linear-attention scan with VMEM-resident state
+ssd_chunk   : Mamba2 SSD chunked scan (zamba2 backbone), same state trick
+
+ops.py are the public jit'd wrappers (interpret=True on CPU, Mosaic on TPU);
+ref.py + repro.nn.ssm scan references are the oracles the tests sweep
+against (shapes x dtypes, hypothesis).
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: per-block top-k compression via vectorized bisection.
+
+GPU top-k compressors radix-select in shared memory; TPUs have neither an
+efficient in-VMEM sort nor scatter.  The TPU adaptation (see DESIGN.md §5):
+for each BLOCK-sized window, find the k-th largest |x| by *bisection on the
+value range* -- log2-many compare+count sweeps, each a fully vectorized VPU
+pass over the block -- then zero everything below the threshold.
+
+Block-local top-k is itself a valid rho = k/BLOCK compressor (Definition 3):
+per-block error <= (1 - rho) * per-block energy, and energies add.  It also
+matches the packed wire format (gossip 'packed' mode) which ships fixed-size
+(k, values+indices) segments per block.
+
+Ties: all elements strictly above the final threshold are kept, elements
+equal to it are kept too, so the kept count can exceed k by the number of
+exact ties at the threshold -- harmless for the compression contract (error
+only shrinks) and vanishingly rare in float gradients.  The jnp reference
+(core.compression.block_top_k) keeps exactly k; tests compare against a
+tie-free oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 2048          # elements per selection window (16 x 128 lanes)
+N_ITERS = 24          # bisection iterations (f32 has 24 mantissa bits)
+
+
+def _block_topk_kernel(x_ref, k_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)          # (1, BLOCK)
+    a = jnp.abs(x)
+    k = k_ref[0]
+
+    hi = jnp.max(a)
+    lo = jnp.zeros_like(hi)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        cnt = jnp.sum((a >= mid).astype(jnp.int32))
+        # too few kept -> threshold too high; too many -> raise it
+        return jax.lax.cond(cnt >= k,
+                            lambda: (mid, hi),
+                            lambda: (lo, mid))
+
+    lo, hi = jax.lax.fori_loop(0, N_ITERS, body, (lo, hi))
+    thresh = lo                                  # keeps >= k elements
+    o_ref[...] = jnp.where(a >= thresh, x, 0.0).astype(o_ref.dtype)
+
+
+def block_topk(x2d: jax.Array, k: int, interpret: bool = False) -> jax.Array:
+    """Keep ~k largest-|.| elements per BLOCK row.  x2d: (blocks, BLOCK)."""
+    blocks = x2d.shape[0]
+    blk = pl.BlockSpec((1, BLOCK), lambda i: (i, 0))
+    return pl.pallas_call(
+        _block_topk_kernel,
+        grid=(blocks,),
+        in_specs=[blk, pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=blk,
+        out_shape=jax.ShapeDtypeStruct(x2d.shape, x2d.dtype),
+        interpret=interpret,
+    )(x2d, jnp.full((1,), k, jnp.int32))

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: fused PORTER error-feedback / tracking update.
+
+Algorithm 1 lines 11-14 perform, per agent, a chain of parameter-sized AXPYs:
+
+    q  +=  c                       (surrogate accumulate)
+    m  +=  wc                      (mixing-mirror accumulate)
+    v   =  v + gamma*(m - q) + g - g_prev      (gradient track)
+    x   =  x + gamma*(mx - qx) - eta*v         (parameter step)
+
+Issued as separate jnp ops this is ~13 HBM reads + 4 writes of parameter-
+sized buffers; fused it is 7 reads + 4 writes in a single pass.  On a
+bandwidth-bound v5e (819 GB/s) that is the dominant cost of a PORTER step
+outside the model itself, which is why this is a kernel (see EXPERIMENTS.md
+§Perf for the measured effect on the memory roofline term).
+
+This kernel fuses the V-side (``ef_track``):   q+=c; m+=wc; v = v + gamma*
+(m-q) + g - gp;   the X-side (``ef_step``) is the same shape with the
+gradient terms swapped for -eta*v.  Tiles: (8, 1024) f32 VPU blocks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 1024
+TILE = 8 * LANE
+
+
+def _track_kernel(q_ref, m_ref, v_ref, c_ref, wc_ref, g_ref, gp_ref,
+                  gamma_ref, q_out, m_out, v_out):
+    q = q_ref[...].astype(jnp.float32) + c_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32) + wc_ref[...].astype(jnp.float32)
+    gamma = gamma_ref[0]
+    v = (v_ref[...].astype(jnp.float32) + gamma * (m - q)
+         + g_ref[...].astype(jnp.float32) - gp_ref[...].astype(jnp.float32))
+    q_out[...] = q.astype(q_out.dtype)
+    m_out[...] = m.astype(m_out.dtype)
+    v_out[...] = v.astype(v_out.dtype)
+
+
+def ef_track(q, m, v, c, wc, g, gp, gamma, interpret: bool = False):
+    """(q,m,v) update of Algorithm 1 lines 11-12.  All inputs (tiles, TILE)."""
+    tiles = q.shape[0]
+    blk = pl.BlockSpec((1, TILE), lambda i: (i, 0))
+    scl = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        _track_kernel,
+        grid=(tiles,),
+        in_specs=[blk] * 7 + [scl],
+        out_specs=[blk] * 3,
+        out_shape=[jax.ShapeDtypeStruct(q.shape, q.dtype)] * 3,
+        interpret=interpret,
+    )(q, m, v, c, wc, g, gp, jnp.asarray(gamma, jnp.float32).reshape(1))
+
+
+def _step_kernel(q_ref, m_ref, x_ref, c_ref, wc_ref, v_ref,
+                 gamma_ref, eta_ref, q_out, m_out, x_out):
+    q = q_ref[...].astype(jnp.float32) + c_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32) + wc_ref[...].astype(jnp.float32)
+    x = (x_ref[...].astype(jnp.float32) + gamma_ref[0] * (m - q)
+         - eta_ref[0] * v_ref[...].astype(jnp.float32))
+    q_out[...] = q.astype(q_out.dtype)
+    m_out[...] = m.astype(m_out.dtype)
+    x_out[...] = x.astype(x_out.dtype)
+
+
+def ef_step(q, m, x, c, wc, v, gamma, eta, interpret: bool = False):
+    """(q,m,x) update of Algorithm 1 lines 13-14.  All inputs (tiles, TILE)."""
+    tiles = q.shape[0]
+    blk = pl.BlockSpec((1, TILE), lambda i: (i, 0))
+    scl = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        _step_kernel,
+        grid=(tiles,),
+        in_specs=[blk] * 6 + [scl, scl],
+        out_specs=[blk] * 3,
+        out_shape=[jax.ShapeDtypeStruct(q.shape, q.dtype)] * 3,
+        interpret=interpret,
+    )(q, m, x, c, wc, v, jnp.asarray(gamma, jnp.float32).reshape(1),
+      jnp.asarray(eta, jnp.float32).reshape(1))

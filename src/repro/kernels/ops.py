@@ -1,0 +1,157 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Handles shape plumbing (flatten -> pad to tile multiples -> 2D tile grid ->
+un-pad) and the interpret switch: on CPU (this container) kernels execute in
+``interpret=True`` mode, which runs the kernel body in Python/XLA-CPU and is
+what the allclose tests validate; on TPU the same code lowers to Mosaic.
+
+Use ``repro.kernels.ops`` from the algorithm layer; never call the raw
+kernels directly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import block_topk as _bt
+from . import ef_update as _ef
+from . import rwkv6_chunk as _rw
+from . import ssd_chunk as _ssd
+from . import smooth_clip as _sc
+from . import ref
+
+__all__ = ["smooth_clip", "block_topk", "ef_track", "ef_step",
+           "rwkv6_scan", "ssd_scan", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_2d(flat: jax.Array, tile: int):
+    d = flat.shape[0]
+    pad = (-d) % tile
+    padded = jnp.pad(flat, (0, pad))
+    return padded.reshape(-1, tile), d
+
+
+@functools.partial(jax.jit, static_argnames=("tau", "sigma", "interpret"))
+def smooth_clip(x: jax.Array, tau: float, noise=None, sigma: float = 0.0,
+                interpret: bool | None = None) -> jax.Array:
+    """Fused Clip_tau(x) (+ sigma*noise) over an arbitrary-shape array."""
+    interpret = default_interpret() if interpret is None else interpret
+    shape = x.shape
+    x2d, d = _pad_2d(x.reshape(-1), _sc.TILE)
+    partials = _sc.sumsq(x2d, interpret=interpret)
+    nrm = jnp.sqrt(jnp.sum(partials))
+    factor = (tau / (tau + nrm)).astype(jnp.float32)
+    if noise is not None:
+        n2d, _ = _pad_2d(noise.reshape(-1), _sc.TILE)
+        y2d = _sc.scale(x2d, factor, n2d, jnp.asarray(sigma, jnp.float32),
+                        interpret=interpret)
+    else:
+        y2d = _sc.scale(x2d, factor, interpret=interpret)
+    return y2d.reshape(-1)[:d].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("frac", "interpret"))
+def block_topk(x: jax.Array, frac: float,
+               interpret: bool | None = None) -> jax.Array:
+    """rho = frac compressor: per-2048-block magnitude top-k (kernel)."""
+    interpret = default_interpret() if interpret is None else interpret
+    shape = x.shape
+    x2d, d = _pad_2d(x.reshape(-1), _bt.BLOCK)
+    k = max(int(round(frac * _bt.BLOCK)), 1)
+    y2d = _bt.block_topk(x2d, k, interpret=interpret)
+    return y2d.reshape(-1)[:d].reshape(shape)
+
+
+def _tile_args(arrays, tile):
+    flat = [a.reshape(-1) for a in arrays]
+    d = flat[0].shape[0]
+    out = []
+    for f in flat:
+        assert f.shape[0] == d, "ef kernels need same-size operands"
+        x2d, _ = _pad_2d(f, tile)
+        out.append(x2d)
+    return out, d
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ef_track(q, m, v, c, wc, g, gp, gamma, interpret: bool | None = None):
+    """Fused Algorithm-1 lines 11-12 (q += c; m += wc; v update)."""
+    interpret = default_interpret() if interpret is None else interpret
+    shape = q.shape
+    (q2, m2, v2, c2, wc2, g2, gp2), d = _tile_args(
+        (q, m, v, c, wc, g, gp), _ef.TILE)
+    qo, mo, vo = _ef.ef_track(q2, m2, v2, c2, wc2, g2, gp2, gamma,
+                              interpret=interpret)
+    unpad = lambda a: a.reshape(-1)[:d].reshape(shape)
+    return unpad(qo), unpad(mo), unpad(vo)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ef_step(q, m, x, c, wc, v, gamma, eta, interpret: bool | None = None):
+    """Fused Algorithm-1 lines 13-14 (q += c; m += wc; x update)."""
+    interpret = default_interpret() if interpret is None else interpret
+    shape = q.shape
+    (q2, m2, x2, c2, wc2, v2), d = _tile_args((q, m, x, c, wc, v), _ef.TILE)
+    qo, mo, xo = _ef.ef_step(q2, m2, x2, c2, wc2, v2, gamma, eta,
+                             interpret=interpret)
+    unpad = lambda a: a.reshape(-1)[:d].reshape(shape)
+    return unpad(qo), unpad(mo), unpad(xo)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rwkv6_scan(r, k, v, logw, u, s0, interpret: bool | None = None):
+    """RWKV6 chunked linear-attention scan (kernel).
+
+    r,k,v,logw: (B,S,H,N) with S % 16 == 0; u: (H,N); s0: (B,H,N,N).
+    Returns (o: (B,S,H,N) f32, s_final: (B,H,N,N) f32).  The VMEM-resident
+    state makes this the TPU-native replacement for the lax.scan chunk loop
+    in repro.nn.ssm (which round-trips the state through HBM every chunk).
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    b, s_len, h, n = r.shape
+    c = _rw.CHUNK
+    assert s_len % c == 0, "pad sequence to a multiple of 16"
+    nc = s_len // c
+
+    def to_bh(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, nc, c, n)
+
+    u_bh = jnp.tile(u, (b, 1))
+    o, s_fin = _rw.rwkv6_chunk(to_bh(r), to_bh(k), to_bh(v), to_bh(logw),
+                               u_bh, s0.reshape(b * h, n, n),
+                               interpret=interpret)
+    o = o.reshape(b, h, s_len, n).transpose(0, 2, 1, 3)
+    return o, s_fin.reshape(b, h, n, n)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_scan(xh, bmat, cmat, dla, h0, interpret: bool | None = None):
+    """Mamba2 SSD chunked scan (kernel).
+
+    xh: (B,S,H,P); bmat/cmat: (B,S,N); dla: (B,S,H) per-step log-decay;
+    h0: (B,H,P,N).  S % 64 == 0.  Returns (y: (B,S,H,P), h_fin: (B,H,P,N)).
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    b, s_len, h, p = xh.shape
+    n = bmat.shape[-1]
+    c = _ssd.CHUNK
+    assert s_len % c == 0, "pad sequence to a multiple of 64"
+    nc = s_len // c
+
+    xh_bh = xh.transpose(0, 2, 1, 3).reshape(b * h, nc, c, p)
+    dla_bh = dla.transpose(0, 2, 1).reshape(b * h, nc, c, 1)
+    bm = jnp.broadcast_to(bmat[:, None], (b, h, s_len, n)).reshape(
+        b * h, nc, c, n)
+    cm = jnp.broadcast_to(cmat[:, None], (b, h, s_len, n)).reshape(
+        b * h, nc, c, n)
+    y, h_fin = _ssd.ssd_chunk(xh_bh, bm, cm, dla_bh,
+                              h0.reshape(b * h, p, n), interpret=interpret)
+    y = y.reshape(b, h, s_len, p).transpose(0, 2, 1, 3)
+    return y, h_fin.reshape(b, h, p, n)

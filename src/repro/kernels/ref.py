@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose against
+these; they are also the CPU fallback path in ops.py)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def smooth_clip_ref(x: jax.Array, tau: float, noise=None,
+                    sigma: float = 0.0) -> jax.Array:
+    """Definition 2 over the flattened vector, plus optional Gaussian noise."""
+    nrm = jnp.linalg.norm(x.reshape(-1).astype(jnp.float32))
+    y = x.astype(jnp.float32) * (tau / (tau + nrm))
+    if noise is not None:
+        y = y + sigma * noise.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def block_topk_ref(x2d: jax.Array, k: int) -> jax.Array:
+    """Exact per-row top-k by magnitude (keeps exactly k; tie-free oracle)."""
+    a = jnp.abs(x2d.astype(jnp.float32))
+    _, idx = jax.lax.top_k(a, k)
+    out = jnp.zeros_like(x2d)
+    vals = jnp.take_along_axis(x2d, idx, axis=1)
+    return jax.vmap(lambda o, i, v: o.at[i].set(v))(out, idx, vals)
+
+
+def ef_track_ref(q, m, v, c, wc, g, gp, gamma):
+    f = jnp.float32
+    q2 = q.astype(f) + c.astype(f)
+    m2 = m.astype(f) + wc.astype(f)
+    v2 = v.astype(f) + gamma * (m2 - q2) + g.astype(f) - gp.astype(f)
+    return q2.astype(q.dtype), m2.astype(m.dtype), v2.astype(v.dtype)
+
+
+def ef_step_ref(q, m, x, c, wc, v, gamma, eta):
+    f = jnp.float32
+    q2 = q.astype(f) + c.astype(f)
+    m2 = m.astype(f) + wc.astype(f)
+    x2 = x.astype(f) + gamma * (m2 - q2) - eta * v.astype(f)
+    return q2.astype(q.dtype), m2.astype(m.dtype), x2.astype(x.dtype)
+
+
+def rwkv6_scan_ref(r, k, v, logw, u, s0):
+    """Oracle: the exact per-token RWKV6 recurrence from repro.nn.ssm."""
+    from repro.nn.ssm import rwkv_scan_ref
+    return rwkv_scan_ref(r, k, v, logw, u, s0)

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: RWKV6 chunked linear-attention scan.
+
+The RWKV6 (Finch) recurrence with data-dependent per-channel decay
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    o_t = r_t S_{t-1} + (r_t . (u * k_t)) v_t
+
+is the compute hot spot of the rwkv6-7b architecture (and the reason it can
+run the long_500k shape).  The pure-jnp chunked form (`repro.nn.ssm`) scans
+chunks with `lax.scan`, bouncing the (N,N) state through HBM every chunk.
+
+TPU adaptation: the Pallas grid is **sequential**, so the state can live in a
+VMEM scratch buffer across grid steps.  Grid = (B*H, S/C); for each (bh, c)
+step the kernel:
+
+  1. resets the scratch state from `s0` when c == 0,
+  2. computes the chunk-local cumulative log-decay,
+  3. does the intra-chunk causal part as (C,C) MXU matmuls with the
+     factorized decays rq = r*exp(la_prev), kk = k*exp(-la)  (safe in f32
+     because ssm.py clamps log w to [-5, 0) and C = 16: |la| <= 80),
+  4. adds the inter-chunk contribution rq @ S and the u-bonus diagonal,
+  5. updates the scratch state in place.
+
+Outputs: o (BH, NC, C, N) and the final state (BH, N, N).
+
+Like ssm.py, exactness vs the per-token recurrence is pinned by tests
+(interpret=True on CPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK = 16  # must match repro.nn.ssm.RWKV_CHUNK
+
+
+def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, o_ref, sfin_ref,
+            s_scr):
+    c_idx = pl.program_id(1)
+    n_chunks = pl.num_programs(1)
+
+    @pl.when(c_idx == 0)
+    def _():
+        s_scr[...] = s0_ref[0].astype(jnp.float32)
+
+    r = r_ref[0, 0].astype(jnp.float32)      # (C, N)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    lw = lw_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)         # (N,)
+
+    la = jnp.cumsum(lw, axis=0)              # inclusive, chunk-local
+    la_prev = la - lw
+    la_end = la[-1:, :]                      # (1, N)
+
+    rq = r * jnp.exp(la_prev)                # r_t * exp(la_{t-1})
+    kk = k * jnp.exp(-la)                    # k_s * exp(-la_s)
+    kend = k * jnp.exp(la_end - la)          # k_s * exp(la_C - la_s)
+
+    s = s_scr[...]                           # (N, N)
+    qk = rq @ kk.T                           # (C, C) MXU
+    tri = jnp.tril(jnp.ones((qk.shape[0], qk.shape[0]), jnp.float32), k=-1)
+    o_intra = (qk * tri) @ v
+    bonus = jnp.sum(r * u[None, :] * k, axis=1, keepdims=True) * v
+    o_inter = rq @ s
+    o_ref[0, 0] = (o_intra + o_inter + bonus).astype(o_ref.dtype)
+
+    s_new = s * jnp.exp(la_end).T + kend.T @ v
+    s_scr[...] = s_new
+
+    @pl.when(c_idx == n_chunks - 1)
+    def _():
+        sfin_ref[0] = s_new.astype(sfin_ref.dtype)
+
+
+def rwkv6_chunk(r, k, v, logw, u, s0, interpret: bool = False):
+    """r,k,v,logw: (BH, NC, C, N); u: (BH, N); s0: (BH, N, N).
+
+    Returns (o: (BH, NC, C, N), s_final: (BH, N, N)).
+    """
+    bh, nc, c, n = r.shape
+    blk = pl.BlockSpec((1, 1, c, n), lambda i, j: (i, j, 0, 0))
+    uspec = pl.BlockSpec((1, n), lambda i, j: (i, 0))
+    sspec = pl.BlockSpec((1, n, n), lambda i, j: (i, 0, 0))
+    return pl.pallas_call(
+        _kernel,
+        grid=(bh, nc),
+        in_specs=[blk, blk, blk, blk, uspec, sspec],
+        out_specs=[blk, sspec],
+        out_shape=[jax.ShapeDtypeStruct(r.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(s0.shape, jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u, s0)

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: fused smooth clipping (+ optional DP noise add).
+
+The paper's clipping operator (Definition 2) rescales a d-vector by
+tau / (tau + ||x||_2).  On parameter-sized buffers (PORTER keeps 5-7 of them
+per agent) a naive implementation is three HBM passes (square-reduce, scale,
+noise-add); this kernel does it in two:
+
+  pass 1 (``sumsq_kernel``):   per-tile partial sums of squares -> (tiles,)
+  pass 2 (``scale_kernel``):   y = x * tau/(tau+norm) [+ sigma * noise]
+
+The tiny (tiles,) partials are combined on-chip by jnp.sum between the
+passes (ops.py).  Tiles are (8, 1024) float32 lanes = 32 KiB VMEM blocks --
+8-sublane x 128-lane aligned for the VPU; the MXU is not involved (this is a
+bandwidth-bound elementwise op).
+
+Noise is passed in as a pre-generated buffer (jax.random on TPU is itself a
+kernel; fusing threefry into Pallas is possible but out of scope -- the win
+here is eliding the extra read of x, not the RNG).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 1024           # elements per tile row chunk (8 sublanes x 128 lanes)
+TILE = 8 * LANE       # elements per grid step
+
+
+def _sumsq_kernel(x_ref, out_ref):
+    x = x_ref[...].astype(jnp.float32)
+    out_ref[0] = jnp.sum(x * x)
+
+
+def sumsq(x2d: jax.Array, interpret: bool = False) -> jax.Array:
+    """Per-tile partial sums of squares.  x2d: (tiles, TILE) padded input."""
+    tiles = x2d.shape[0]
+    return pl.pallas_call(
+        _sumsq_kernel,
+        grid=(tiles,),
+        in_specs=[pl.BlockSpec((1, TILE), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((tiles,), jnp.float32),
+        interpret=interpret,
+    )(x2d)
+
+
+def _scale_kernel(x_ref, scale_ref, o_ref):
+    o_ref[...] = (x_ref[...].astype(jnp.float32)
+                  * scale_ref[0]).astype(o_ref.dtype)
+
+
+def _scale_noise_kernel(x_ref, scale_ref, noise_ref, sigma_ref, o_ref):
+    y = x_ref[...].astype(jnp.float32) * scale_ref[0]
+    y = y + sigma_ref[0] * noise_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def scale(x2d: jax.Array, scale_val: jax.Array, noise2d=None, sigma=None,
+          interpret: bool = False) -> jax.Array:
+    """y = x * scale [+ sigma * noise], tile-wise."""
+    tiles = x2d.shape[0]
+    blk = pl.BlockSpec((1, TILE), lambda i: (i, 0))
+    scl = pl.BlockSpec((1,), lambda i: (0,))
+    if noise2d is None:
+        return pl.pallas_call(
+            _scale_kernel,
+            grid=(tiles,),
+            in_specs=[blk, scl],
+            out_specs=blk,
+            out_shape=jax.ShapeDtypeStruct(x2d.shape, x2d.dtype),
+            interpret=interpret,
+        )(x2d, scale_val.reshape(1))
+    return pl.pallas_call(
+        _scale_noise_kernel,
+        grid=(tiles,),
+        in_specs=[blk, scl, blk, scl],
+        out_specs=blk,
+        out_shape=jax.ShapeDtypeStruct(x2d.shape, x2d.dtype),
+        interpret=interpret,
+    )(x2d, scale_val.reshape(1), noise2d, sigma.reshape(1))

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan (zamba2's backbone hot spot).
+
+Recurrence per head (head dim P, state dim N, *scalar* per-step decay a_t):
+
+    h_t = a_t h_{t-1} + (dt_t x_t) B_t^T          h in R^{P x N}
+    y_t = h_t C_t
+
+Same VMEM-resident-state trick as rwkv6_chunk.py (sequential grid over
+chunks), but the scalar decay lets the intra-chunk (C,C) decay matrix
+exp(la_t - la_s), t >= s, be formed directly (exponent <= 0 -- no
+factorization, no overflow), so the chunk can be CHUNK=64 for full MXU
+utilization rather than rwkv6's clamped 16.
+
+Grid = (B*H, S/CHUNK).  Inputs per (bh, c) step: xh (C,P) dt-scaled inputs,
+bmat/cmat (C,N), dla (C,) per-step log-decay.  Outputs y (C,P) and the final
+(P,N) state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK = 64  # must match repro.nn.ssm.SSD_CHUNK
+
+
+def _kernel(xh_ref, b_ref, c_ref, dla_ref, h0_ref, y_ref, hfin_ref, h_scr):
+    c_idx = pl.program_id(1)
+    n_chunks = pl.num_programs(1)
+
+    @pl.when(c_idx == 0)
+    def _():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    xh = xh_ref[0, 0].astype(jnp.float32)    # (C, P)
+    bm = b_ref[0, 0].astype(jnp.float32)     # (C, N)
+    cm = c_ref[0, 0].astype(jnp.float32)     # (C, N)
+    dla = dla_ref[0, 0].astype(jnp.float32)  # (C,) -- as (C, 1) block below
+
+    la = jnp.cumsum(dla, axis=0)             # (C, 1) inclusive
+    lend = la[-1:, :]                        # (1, 1)
+
+    # intra-chunk: y[t] += sum_{s<=t} exp(la_t - la_s) (C_t.B_s) xh_s
+    dmat = la - la.T                         # (C, C), exponent <= 0 on tril
+    clen = dmat.shape[0]
+    tri = jnp.tril(jnp.ones((clen, clen), jnp.float32))
+    dec = jnp.exp(jnp.where(tri > 0, dmat, -jnp.inf))
+    cb = cm @ bm.T                           # (C, C) MXU
+    y_intra = (cb * dec) @ xh
+
+    # inter-chunk: y[t] += exp(la_t) C_t h_prev^T    (h: (P, N))
+    h = h_scr[...]
+    y_inter = jnp.exp(la) * (cm @ h.T)
+
+    y_ref[0, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: h = exp(lend) h + sum_s exp(lend - la_s) xh_s B_s^T
+    xdec = xh * jnp.exp(lend - la)
+    h_new = h * jnp.exp(lend[0, 0]) + xdec.T @ bm
+    h_scr[...] = h_new
+
+    @pl.when(c_idx == n_chunks - 1)
+    def _():
+        hfin_ref[0] = h_new.astype(hfin_ref.dtype)
+
+
+def ssd_chunk(xh, bmat, cmat, dla, h0, interpret: bool = False):
+    """xh: (BH, NC, C, P); bmat/cmat: (BH, NC, C, N); dla: (BH, NC, C, 1);
+    h0: (BH, P, N).  Returns (y: (BH, NC, C, P), h_final: (BH, P, N))."""
+    bh, nc, c, p = xh.shape
+    n = bmat.shape[-1]
+    xblk = pl.BlockSpec((1, 1, c, p), lambda i, j: (i, j, 0, 0))
+    nblk = pl.BlockSpec((1, 1, c, n), lambda i, j: (i, j, 0, 0))
+    dblk = pl.BlockSpec((1, 1, c, 1), lambda i, j: (i, j, 0, 0))
+    hspec = pl.BlockSpec((1, p, n), lambda i, j: (i, 0, 0))
+    return pl.pallas_call(
+        _kernel,
+        grid=(bh, nc),
+        in_specs=[xblk, nblk, nblk, dblk, hspec],
+        out_specs=[xblk, hspec],
+        out_shape=[jax.ShapeDtypeStruct(xh.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(h0.shape, jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xh, bmat, cmat, dla, h0)

@@ -1,0 +1,10 @@
+"""Launcher: production meshes, input specs, sharded step builders, dry-run.
+
+NOTE: repro.launch.dryrun must be imported/run FIRST in its process (it sets
+XLA_FLAGS before jax initializes); do not import it from here.
+"""
+from . import mesh, shapes, steps
+from .mesh import HW, agent_axes, make_production_mesh, n_agents
+
+__all__ = ["mesh", "shapes", "steps", "make_production_mesh", "agent_axes",
+           "n_agents", "HW"]

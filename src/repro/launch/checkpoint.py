@@ -1,0 +1,95 @@
+"""Checkpointing for PORTER training state (orbax is not available offline).
+
+Layout: one directory per step, one .npz per top-level PorterState buffer,
+plus a JSON manifest with the treedef and step metadata.  Pytrees are
+flattened with key-paths so restore is structure-checked; device arrays are
+pulled to host as numpy.  Works for agent-stacked states of any size the
+host can hold (per-agent sharded save on real pods would stream shard-wise;
+the manifest format already records per-leaf shapes/dtypes to support that).
+
+    save_state(dir, state, step=10)
+    state = restore_state(dir, like=state)           # latest
+    state = restore_state(dir, like=state, step=10)
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core.porter import PorterState
+
+__all__ = ["save_state", "restore_state", "latest_step"]
+
+_BUFFERS = ("x", "v", "q_x", "q_v", "g_prev", "m_x", "m_v")
+
+
+def _flatten(tree):
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_state(ckpt_dir: str, state: PorterState, step: Optional[int] = None):
+    step = int(state.step) if step is None else step
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    d.mkdir(parents=True, exist_ok=True)
+    manifest = {"step": step, "buffers": {}}
+    for name in _BUFFERS:
+        flat = _flatten(getattr(state, name))
+        np.savez(d / f"{name}.npz", **flat)
+        manifest["buffers"][name] = {
+            k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+            for k, v in flat.items()
+        }
+    (d / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    return str(d)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    d = Path(ckpt_dir)
+    if not d.exists():
+        return None
+    steps = sorted(int(p.name.split("_")[1]) for p in d.glob("step_*"))
+    return steps[-1] if steps else None
+
+
+def restore_state(ckpt_dir: str, like: PorterState,
+                  step: Optional[int] = None) -> PorterState:
+    """Restore into the structure of ``like`` (shape/dtype checked)."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    new = {}
+    for name in _BUFFERS:
+        data = np.load(d / f"{name}.npz")
+        ref = getattr(like, name)
+        flat_ref = _flatten(ref)
+        if set(data.files) != set(flat_ref):
+            raise ValueError(f"checkpoint buffer {name} keys mismatch: "
+                             f"{sorted(set(data.files) ^ set(flat_ref))[:5]}")
+        leaves_ref, treedef = jax.tree_util.tree_flatten(ref)
+        paths = [
+            "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path)
+            for path, _ in jax.tree_util.tree_flatten_with_path(ref)[0]
+        ]
+        leaves = []
+        for path_key, ref_leaf in zip(paths, leaves_ref):
+            arr = data[path_key]
+            if tuple(arr.shape) != tuple(ref_leaf.shape):
+                raise ValueError(f"{name}/{path_key}: shape {arr.shape} != "
+                                 f"{ref_leaf.shape}")
+            leaves.append(jax.numpy.asarray(arr, dtype=ref_leaf.dtype))
+        new[name] = treedef.unflatten(leaves)
+    return PorterState(step=jax.numpy.asarray(manifest["step"],
+                                              jax.numpy.int32), **new)

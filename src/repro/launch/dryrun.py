@@ -1,0 +1,293 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and extract roofline terms from the compiled artifact.
+
+The two lines above MUST stay the first statements of this module (before any
+jax-importing import): jax locks the device count at first backend init, and
+the dry-run needs 512 placeholder host devices to build the (2,16,16) mesh.
+Do NOT set this flag globally -- smoke tests and benchmarks see 1 device.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch rwkv6-7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # single-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+
+Artifacts: artifacts/dryrun/<arch>__<shape>__<mesh>[__tag].json with
+memory/cost analysis, per-category collective bytes parsed from the
+optimized HLO, and the three roofline terms (seconds, per device):
+
+    compute    = HLO_FLOPs / 197e12           (bf16 peak, v5e)
+    memory     = HLO_bytes / 819e9            (HBM bandwidth)
+    collective = wire_bytes / 50e9            (ICI link bandwidth)
+
+The compiled module is the per-device SPMD program, so all three terms are
+per-chip without further division.
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.launch import shapes as SH
+from repro.launch.mesh import HW, make_production_mesh
+from repro.launch.steps import (build_prefill_step, build_serve_step,
+                                build_train_step)
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+# effective wire traffic per byte of result (all-reduce = RS + AG)
+WIRE_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+                "c128": 16, "token": 0}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes of every typed shape in an HLO result-type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str):
+    """Per-category result bytes for every collective op in the HLO."""
+    out = {c: {"bytes": 0, "count": 0} for c in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"^%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", line)
+        if not m:
+            continue
+        result_type, op = m.groups()
+        base = op
+        for c in COLLECTIVES:
+            if base == c or base.startswith(c + "-start") or base == c + "-done":
+                if base.endswith("-done"):
+                    break  # counted at -start
+                out[c]["bytes"] += _shape_bytes(result_type)
+                out[c]["count"] += 1
+                break
+    return out
+
+
+def count_params(shapes_tree, top_k: int = 2):
+    """(total, active) parameter counts; MoE experts scaled by top_k/E."""
+    total = active = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes_tree)[0]:
+        n = int(np.prod(leaf.shape))
+        total += n
+        keys = [str(p.key) for p in path if hasattr(p, "key")]
+        if any(k in ("w_gate", "w_in", "w_out") for k in keys) and \
+                len(leaf.shape) >= 3 and "ffn" in keys:
+            # expert-stacked weight (L, E, d, f) or (E, d, f)
+            e = leaf.shape[-3]
+            active += int(n * min(top_k, e) / e)
+        else:
+            active += n
+    return total, active
+
+
+def model_flops(cfg, shape, params_shapes, kind: str) -> float:
+    total, active = count_params(params_shapes, cfg.top_k)
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    return 2.0 * active * shape.global_batch  # decode: one token per seq
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, variant: str,
+            gossip: str, out_dir: Path, tag: str = "", fsdp: bool = False,
+            compressor: str = "block_top_k", remat: bool = True,
+            local_compress: bool = False, buffer_dtype="f32",
+            q_chunk=None, capacity: float = None, cache_dtype="bf16",
+            topology: str = "ring"):
+    shape = SH.SHAPES[shape_name]
+    cfg = get_config(arch)
+    if capacity is not None:
+        cfg = dataclasses.replace(cfg, capacity_factor=capacity)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "variant": variant, "gossip": gossip,
+        "tag": tag, "ok": False,
+    }
+    t0 = time.time()
+    try:
+        if shape.kind == "train":
+            setup = build_train_step(
+                cfg, mesh, shape, variant=variant, gossip_mode=gossip,
+                compressor_name=compressor, remat=remat,
+                local_compress=local_compress,
+                topology_kind=topology,
+                buffer_dtype=jnp.bfloat16 if buffer_dtype == "bf16"
+                else jnp.float32)
+            params_shapes = setup.state_shapes.x
+        elif shape.kind == "prefill":
+            setup = build_prefill_step(cfg, mesh, shape, fsdp=fsdp,
+                                       q_chunk=q_chunk)
+            params_shapes = setup.arg_shapes[0]
+        else:
+            setup = build_serve_step(
+                cfg, mesh, shape, fsdp=fsdp,
+                cache_dtype=jnp.int8 if cache_dtype == "int8"
+                else jnp.bfloat16)
+            params_shapes = setup.arg_shapes[0]
+
+        lowered = setup.lower()
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+        ca = compiled.cost_analysis() or {}
+        flops = float(ca.get("flops", 0.0))
+        bytes_acc = float(ca.get("bytes accessed", 0.0))
+        rec["cost_analysis"] = {"flops": flops, "bytes_accessed": bytes_acc}
+
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory_analysis"] = {
+                k: int(getattr(ma, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes",
+                          "alias_size_in_bytes")
+                if hasattr(ma, k)
+            } if ma is not None else None
+        except Exception:
+            rec["memory_analysis"] = None
+
+        hlo = compiled.as_text()
+        coll = parse_collectives(hlo)
+        rec["collectives"] = coll
+        wire = sum(WIRE_FACTOR[c] * v["bytes"] for c, v in coll.items())
+        rec["hlo_ops"] = {"lines": hlo.count("\n")}
+
+        mf = model_flops(cfg, shape, params_shapes, shape.kind)
+        n_chips = int(np.prod(list(mesh.shape.values())))
+        total_p, active_p = count_params(params_shapes, cfg.top_k)
+        rec["params_total"] = total_p
+        rec["params_active"] = active_p
+
+        compute_t = flops / HW.PEAK_FLOPS_BF16
+        memory_t = bytes_acc / HW.HBM_BW
+        coll_t = wire / HW.ICI_BW
+        dominant = max(
+            (("compute", compute_t), ("memory", memory_t),
+             ("collective", coll_t)), key=lambda kv: kv[1])[0]
+        rec["roofline"] = {
+            "compute_s": compute_t, "memory_s": memory_t,
+            "collective_s": coll_t, "dominant": dominant,
+            "model_flops_global": mf,
+            "hlo_flops_per_chip": flops,
+            "useful_flops_ratio": (mf / n_chips) / flops if flops else None,
+            "n_chips": n_chips,
+            "wire_bytes_per_chip": wire,
+        }
+        rec["ok"] = True
+    except Exception as e:  # record the failure, keep sweeping
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    fname = out_dir / f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+    fname.write_text(json.dumps(rec, indent=2))
+    status = "ok" if rec["ok"] else "FAIL"
+    r = rec.get("roofline", {})
+    print(f"[{status}] {arch:>20s} {shape_name:>12s} {mesh_name:>10s} "
+          f"lower={rec.get('lower_s', '-')}s compile={rec.get('compile_s', '-')}s "
+          f"dom={r.get('dominant', '-')} "
+          f"c/m/x={r.get('compute_s', 0):.3g}/{r.get('memory_s', 0):.3g}/"
+          f"{r.get('collective_s', 0):.3g}s",
+          flush=True)
+    if not rec["ok"]:
+        print("   ", rec["error"], flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="architecture id or 'all'")
+    ap.add_argument("--shape", default=None, help="input shape name or 'all'")
+    ap.add_argument("--all", action="store_true",
+                    help="sweep all (arch x shape)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--variant", default="gc", choices=["gc", "dp", "beer"])
+    ap.add_argument("--gossip", default="dense",
+                    choices=["dense", "ring", "packed"])
+    ap.add_argument("--compressor", default="block_top_k")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--fsdp", action="store_true",
+                    help="FSDP the serving params over the data axis")
+    ap.add_argument("--local-compress", action="store_true",
+                    help="shard-local compression (no resharding gathers)")
+    ap.add_argument("--buffer-dtype", default="f32", choices=["f32", "bf16"])
+    ap.add_argument("--q-chunk", type=int, default=None,
+                    help="chunked-query attention block for prefill")
+    ap.add_argument("--capacity", type=float, default=None,
+                    help="MoE capacity factor override (default 1.25)")
+    ap.add_argument("--cache-dtype", default="bf16",
+                    choices=["bf16", "int8"],
+                    help="decode KV/state cache dtype")
+    ap.add_argument("--topology", default="ring",
+                    help="agent graph for train shapes (ring, exponential, "
+                         "hypercube, erdos_renyi, complete, torus)")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    # explicit --arch/--shape override --all
+    archs = [args.arch] if args.arch not in (None, "all") else ARCHS
+    shapes = [args.shape] if args.shape not in (None, "all") \
+        else list(SH.SHAPES)
+
+    results = []
+    for arch in archs:
+        for shape_name in shapes:
+            if not SH.shape_applicable(arch, shape_name):
+                print(f"[skip] {arch} {shape_name} (full attention; "
+                      f"see DESIGN.md)", flush=True)
+                continue
+            results.append(run_one(
+                arch, shape_name, args.multi_pod, args.variant, args.gossip,
+                out_dir, tag=args.tag, fsdp=args.fsdp,
+                compressor=args.compressor, remat=not args.no_remat,
+                local_compress=args.local_compress,
+                buffer_dtype=args.buffer_dtype, q_chunk=args.q_chunk,
+                capacity=args.capacity, cache_dtype=args.cache_dtype,
+                topology=args.topology))
+    n_ok = sum(r["ok"] for r in results)
+    print(f"\n{n_ok}/{len(results)} combinations lowered+compiled OK")
+    return 0 if n_ok == len(results) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

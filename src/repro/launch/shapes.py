@@ -1,0 +1,205 @@
+"""Input-shape registry and ShapeDtypeStruct builders for every
+(architecture x input shape) combination, plus PartitionSpec assignment for
+batches, parameters and decode caches.
+
+The four assigned shapes:
+
+    train_4k       seq=4096    global_batch=256   train_step (PORTER)
+    prefill_32k    seq=32768   global_batch=32    prefill
+    decode_32k     seq=32768   global_batch=128   serve_step (1 new token)
+    long_500k      seq=524288  global_batch=1     serve_step, sub-quadratic only
+
+long_500k applicability (see DESIGN.md): rwkv6-7b (SSM), h2o-danube-3-4b
+(sliding window), zamba2-7b (hybrid; shared attention runs a 4096 window for
+this shape).  The six pure full-attention archs skip it.
+
+Encoder-decoder split: seamless uses S_enc = S_dec = seq/2 for train/prefill
+and enc_len = min(seq, 4096) for decode shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models import ModelConfig
+
+__all__ = ["ShapeSpec", "SHAPES", "LONG_CONTEXT_ARCHS", "shape_applicable",
+           "train_batch_specs", "serve_token_specs", "cache_pspecs",
+           "decode_window"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+LONG_CONTEXT_ARCHS = ("rwkv6-7b", "h2o-danube-3-4b", "zamba2-7b")
+
+
+def shape_applicable(arch: str, shape: str) -> bool:
+    if shape == "long_500k":
+        return arch in LONG_CONTEXT_ARCHS
+    return True
+
+
+def decode_window(cfg: ModelConfig, shape: ShapeSpec) -> Optional[int]:
+    """Effective attention window for a decode shape (None = cfg default)."""
+    if shape.name == "long_500k" and cfg.family == "hybrid":
+        return 4096  # zamba2 shared attention runs windowed at 500k
+    return "cfg"
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Train batches: leaves carry a leading agent axis.
+# ---------------------------------------------------------------------------
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec, n_agents: int,
+                      agent_axes: Tuple[str, ...]):
+    """Returns (batch ShapeDtypeStructs, batch PartitionSpecs).
+
+    Leaves: (n_agents, per_agent_batch, ...).
+    """
+    assert shape.kind == "train"
+    b = shape.global_batch // n_agents
+    s = shape.seq_len
+    ax = agent_axes if len(agent_axes) > 1 else agent_axes[0]
+    if cfg.family == "vlm":
+        batch = {
+            "tokens": _sds((n_agents, b, s - cfg.n_prefix), jnp.int32),
+            "patches": _sds((n_agents, b, cfg.n_prefix, cfg.frontend_dim),
+                            jnp.float32),
+        }
+        specs = {"tokens": P(ax, None, None),
+                 "patches": P(ax, None, None, None)}
+    elif cfg.family == "encdec":
+        half = s // 2
+        batch = {
+            "frames": _sds((n_agents, b, half, cfg.frontend_dim),
+                           jnp.float32),
+            "tokens": _sds((n_agents, b, half), jnp.int32),
+        }
+        specs = {"frames": P(ax, None, None, None),
+                 "tokens": P(ax, None, None)}
+    else:
+        batch = {"tokens": _sds((n_agents, b, s), jnp.int32)}
+        specs = {"tokens": P(ax, None, None)}
+    return batch, specs
+
+
+# ---------------------------------------------------------------------------
+# Inference batches.
+# ---------------------------------------------------------------------------
+
+def serve_token_specs(cfg: ModelConfig, shape: ShapeSpec,
+                      batch_axes: Tuple[str, ...], n_batch_devices: int):
+    """Prefill: full token batch.  Decode: (B, 1) next-token ids."""
+    bsz = shape.global_batch
+    ax = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    b_ax = ax if bsz % n_batch_devices == 0 and bsz >= n_batch_devices else None
+    if shape.kind == "prefill":
+        s = shape.seq_len
+        if cfg.family == "vlm":
+            batch = {"tokens": _sds((bsz, s - cfg.n_prefix), jnp.int32),
+                     "patches": _sds((bsz, cfg.n_prefix, cfg.frontend_dim),
+                                     jnp.float32)}
+            specs = {"tokens": P(b_ax, None), "patches": P(b_ax, None, None)}
+        elif cfg.family == "encdec":
+            half = s // 2
+            batch = {"frames": _sds((bsz, half, cfg.frontend_dim),
+                                    jnp.float32),
+                     "tokens": _sds((bsz, half), jnp.int32)}
+            specs = {"frames": P(b_ax, None, None), "tokens": P(b_ax, None)}
+        else:
+            batch = {"tokens": _sds((bsz, s), jnp.int32)}
+            specs = {"tokens": P(b_ax, None)}
+        return batch, specs
+    # decode: one token per sequence
+    return (_sds((bsz, 1), jnp.int32), P(b_ax, None))
+
+
+# ---------------------------------------------------------------------------
+# Decode-cache partition specs, assigned by leaf name + rank.
+# ---------------------------------------------------------------------------
+
+def cache_pspecs(cache_shapes, batch_axes: Tuple[str, ...],
+                 n_batch_devices: int, model_axis: str = "model",
+                 model_size: int = 16):
+    """Build a PartitionSpec tree mirroring an (abstract) cache pytree.
+
+    Conventions (leading L or G stack axis is never sharded):
+      k/v/ckv/krope  (L,B,T,...) : B over batch axes when divisible, and the
+                                   time axis over 'model' when divisible;
+                                   when B is too small the time axis takes
+                                   (batch_axes + model) combined.
+      positions      (L,B,W)     : follow B.
+      S (rwkv state) (L,B,H,N,N) : B over batch axes, H over 'model'.
+      h (ssd state)  (L,B,H,P,N) : same.
+      shift/conv     (L,B,...)   : B over batch axes, channels over 'model'.
+    """
+    ax = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+
+    def rule(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        shape = leaf.shape
+        b = shape[1] if len(shape) > 1 else 1
+        b_ok = b % n_batch_devices == 0 and b >= n_batch_devices
+        b_ax = ax if b_ok else None
+
+        if name in ("k", "v") and len(shape) == 5:
+            t = shape[2]
+            if b_ok:
+                t_ax = model_axis if t % model_size == 0 else None
+            else:
+                both = tuple(batch_axes) + (model_axis,)
+                t_ax = both if t % (n_batch_devices * model_size) == 0 else (
+                    model_axis if t % model_size == 0 else None)
+            return P(None, b_ax, t_ax, None, None)
+        if name == "ckv" or name == "krope":
+            t = shape[2]
+            t_ax = model_axis if t % model_size == 0 else None
+            return P(None, b_ax, t_ax, None)
+        if name == "positions":
+            return P(None, b_ax, None)
+        if name in ("S",) and len(shape) == 5:
+            h = shape[2]
+            h_ax = model_axis if h % model_size == 0 else None
+            return P(None, b_ax, h_ax, None, None)
+        if name == "h" and len(shape) == 5:
+            h = shape[2]
+            h_ax = model_axis if h % model_size == 0 else None
+            return P(None, b_ax, h_ax, None, None)
+        if name in ("shift_t", "shift_c") and len(shape) == 3:
+            d = shape[2]
+            return P(None, b_ax, model_axis if d % model_size == 0 else None)
+        if name == "conv" and len(shape) == 4:
+            c = shape[3]
+            return P(None, b_ax, None,
+                     model_axis if c % model_size == 0 else None)
+        # fallback: replicate
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shapes)

@@ -1,0 +1,103 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Reproduce the full artifacts/dryrun set used by EXPERIMENTS.md with one
+command (baselines on both meshes + optimized sweeps + every SPerf
+iteration tag).  This is the provenance script for the roofline/perf tables.
+
+    PYTHONPATH=src python -m repro.launch.sweep             # everything (~1.5h on 1 CPU)
+    PYTHONPATH=src python -m repro.launch.sweep --only perf # just the SPerf ladders
+"""
+
+import argparse
+from pathlib import Path
+
+from repro.configs import ARCHS
+from repro.launch import shapes as SH
+from repro.launch.dryrun import run_one
+
+OUT = Path("artifacts/dryrun")
+
+# (arch, shape, multi_pod, kwargs, tag)
+PERF_LADDERS = [
+    # Perf-1: rwkv6-7b x train_4k
+    ("rwkv6-7b", "train_4k", False, {}, ""),
+    ("rwkv6-7b", "train_4k", False, dict(local_compress=True), "lc"),
+    ("rwkv6-7b", "train_4k", False,
+     dict(local_compress=True, gossip="ring"), "lc_ring"),
+    ("rwkv6-7b", "train_4k", False,
+     dict(local_compress=True, gossip="ring", buffer_dtype="bf16"),
+     "lc_ring_bf16"),
+    ("rwkv6-7b", "train_4k", False,
+     dict(local_compress=True, gossip="packed"), "lc_packed"),
+    # Perf-2: minicpm3-4b x prefill_32k
+    ("minicpm3-4b", "prefill_32k", False, {}, ""),
+    ("minicpm3-4b", "prefill_32k", False, dict(q_chunk=512), "qc512"),
+    ("minicpm3-4b", "prefill_32k", False, dict(q_chunk=1024), "qc1024"),
+    ("minicpm3-4b", "prefill_32k", False, dict(q_chunk=2048), "qc2048"),
+    ("minicpm3-4b", "prefill_32k", False, dict(q_chunk=4096), "qc4096"),
+    # Perf-3: arctic-480b x train_4k
+    ("arctic-480b", "train_4k", False, {}, ""),
+    ("arctic-480b", "train_4k", False, dict(local_compress=True), "lc"),
+    ("arctic-480b", "train_4k", False,
+     dict(local_compress=True, gossip="ring"), "lc_ring"),
+    ("arctic-480b", "train_4k", False,
+     dict(local_compress=True, gossip="packed"), "lc_packed"),
+    ("arctic-480b", "train_4k", False,
+     dict(local_compress=True, buffer_dtype="bf16"), "lc_bf16"),
+    ("arctic-480b", "train_4k", False,
+     dict(local_compress=True, capacity=1.0), "lc_cap1"),
+    # Perf-4: serving levers
+    ("grok-1-314b", "decode_32k", False, dict(fsdp=True), "fsdp"),
+    ("grok-1-314b", "decode_32k", False,
+     dict(fsdp=True, cache_dtype="int8"), "fsdp_int8"),
+    ("zamba2-7b", "decode_32k", False, dict(cache_dtype="int8"), "int8"),
+    # PORTER-DP at scale
+    ("tinyllama-1.1b", "train_4k", False,
+     dict(variant="dp", local_compress=True), "dp"),
+]
+
+
+def _baselines(multi_pod: bool):
+    for arch in ARCHS:
+        for shape in SH.SHAPES:
+            if SH.shape_applicable(arch, shape):
+                yield (arch, shape, multi_pod, {}, "")
+
+
+def _optimized():
+    for arch in ARCHS:
+        yield (arch, "train_4k", False,
+               dict(local_compress=True, gossip="ring"), "opt_train")
+        yield (arch, "train_4k", True,
+               dict(local_compress=True, gossip="ring"), "opt_train")
+        yield (arch, "prefill_32k", False, dict(q_chunk=1024), "opt_prefill")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all",
+                    choices=["all", "baseline", "opt", "perf"])
+    args = ap.parse_args()
+
+    jobs = []
+    if args.only in ("all", "baseline"):
+        jobs += list(_baselines(False)) + list(_baselines(True))
+    if args.only in ("all", "opt"):
+        jobs += list(_optimized())
+    if args.only in ("all", "perf"):
+        jobs += PERF_LADDERS
+
+    n_ok = 0
+    for arch, shape, mp, kw, tag in jobs:
+        kwargs = dict(variant=kw.pop("variant", "gc"),
+                      gossip=kw.pop("gossip", "dense"))
+        rec = run_one(arch, shape, mp, kwargs["variant"], kwargs["gossip"],
+                      OUT, tag=tag, **kw)
+        n_ok += rec["ok"]
+    print(f"\n{n_ok}/{len(jobs)} sweep jobs ok")
+    return 0 if n_ok == len(jobs) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,5 @@
+"""Model zoo: composable architecture definitions over repro.nn."""
+from .blocks import ModelConfig
+from .model import ModelBundle, build_model
+
+__all__ = ["ModelConfig", "ModelBundle", "build_model"]

@@ -1,0 +1,331 @@
+"""Transformer-layer building blocks per architecture family.
+
+Each family exposes:
+    init_layer(key, cfg)                         -> Px param tree (one layer)
+    apply_seq(p, cfg, x, positions, ...)         -> (x, cache_or_None, aux)
+    apply_decode(p, cfg, x, cache, pos, ...)     -> (x, new_cache)
+    init_cache(cfg, batch, cache_len, dtype)     -> cache pytree (one layer)
+
+The model assembly (models/model.py) stacks layers with jax.vmap at init and
+jax.lax.scan at apply so HLO size / compile time are depth-independent.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.nn import attention as A
+from repro.nn import moe as M
+from repro.nn import ssm as S
+from repro.nn.module import (Px, dense, init_dense, init_rmsnorm,
+                             init_layernorm, layernorm, rmsnorm)
+
+__all__ = ["ModelConfig", "FAMILIES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One architecture.  Source citations live in repro/configs/<name>.py."""
+
+    name: str
+    family: str               # dense | moe | rwkv6 | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    vocab: int
+    d_ff: int = 0
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0         # 0 -> d_model // n_heads
+    activation: str = "silu"
+    rotary_frac: float = 1.0  # chatglm3: 0.5
+    rope_theta: float = 10000.0
+    window: Optional[int] = None          # sliding-window attention
+    qkv_bias: bool = False
+    tie_embeddings: bool = True
+    norm: str = "rmsnorm"     # rmsnorm | layernorm
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 2
+    dense_residual: bool = False
+    capacity_factor: float = 1.25
+    # --- MLA (minicpm3) ---
+    mla: bool = False
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_dim: int = 64
+    qk_rope_dim: int = 32
+    v_head_dim: int = 64
+    # --- SSM / hybrid ---
+    ssm_state: int = 64
+    ssm_head_dim: int = 64
+    attn_every: int = 6       # hybrid: shared attn after every k mamba layers
+    # --- enc-dec / prefix frontends ---
+    n_enc_layers: int = 0
+    frontend: str = "none"    # none | vision | audio
+    frontend_dim: int = 0     # raw embedding dim from the stub frontend
+    n_prefix: int = 0         # vlm: number of patch tokens
+    # --- numerics / perf ---
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    q_chunk: Optional[int] = None   # chunked-query attention (flash-coarse)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    def attn_cfg(self, window: Optional[int] = "cfg") -> A.AttnConfig:
+        return A.AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.hd,
+            rotary_frac=self.rotary_frac, rope_theta=self.rope_theta,
+            window=self.window if window == "cfg" else window,
+            qkv_bias=self.qkv_bias)
+
+    def mla_cfg(self) -> A.MLAConfig:
+        return A.MLAConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            q_lora_rank=self.q_lora_rank, kv_lora_rank=self.kv_lora_rank,
+            qk_nope_dim=self.qk_nope_dim, qk_rope_dim=self.qk_rope_dim,
+            v_head_dim=self.v_head_dim, rope_theta=self.rope_theta)
+
+    def mlp_cfg(self) -> M.MlpConfig:
+        return M.MlpConfig(self.d_model, self.d_ff, self.activation)
+
+    def moe_cfg(self) -> M.MoeConfig:
+        return M.MoeConfig(
+            d_model=self.d_model, d_ff=self.d_ff, n_experts=self.n_experts,
+            top_k=self.top_k, activation=self.activation,
+            dense_residual=self.dense_residual,
+            capacity_factor=self.capacity_factor)
+
+    def rwkv_cfg(self) -> S.Rwkv6Config:
+        return S.Rwkv6Config(d_model=self.d_model, head_dim=self.ssm_head_dim,
+                             d_ff=self.d_ff)
+
+    def mamba_cfg(self) -> S.Mamba2Config:
+        return S.Mamba2Config(d_model=self.d_model, d_state=self.ssm_state,
+                              head_dim=self.ssm_head_dim)
+
+
+def _norm_fns(cfg: ModelConfig):
+    if cfg.norm == "rmsnorm":
+        return init_rmsnorm, rmsnorm
+    return init_layernorm, layernorm
+
+
+# ---------------------------------------------------------------------------
+# dense / MLA / MoE decoder layers (attention + FFN)
+# ---------------------------------------------------------------------------
+
+def init_decoder_layer(key, cfg: ModelConfig):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    init_n, _ = _norm_fns(cfg)
+    p = {"ln1": init_n(k1, cfg.d_model), "ln2": init_n(k2, cfg.d_model)}
+    if cfg.mla:
+        p["attn"] = A.init_mla(k3, cfg.mla_cfg())
+    else:
+        p["attn"] = A.init_attention(k3, cfg.attn_cfg())
+    if cfg.n_experts > 0:
+        p["ffn"] = M.init_moe(k4, cfg.moe_cfg())
+    else:
+        p["ffn"] = M.init_mlp(k4, cfg.mlp_cfg())
+    return p
+
+
+def decoder_layer_seq(p, cfg: ModelConfig, x, positions, mode="causal",
+                      prefix_len: int = 0, collect_cache: bool = False,
+                      cache_dtype=jnp.bfloat16,
+                      window: Optional[int] = "cfg"):
+    _, norm = _norm_fns(cfg)
+    h = norm(p["ln1"], x)
+    cache = None
+    if cfg.mla:
+        y = A.mla_attention(p["attn"], cfg.mla_cfg(), h, positions,
+                            q_chunk=cfg.q_chunk)
+        if collect_cache:
+            q_nope, q_rope, ckv, krope = A._mla_qkv(
+                p["attn"], cfg.mla_cfg(), h, positions)
+            del q_nope, q_rope
+            cache = {"ckv": ckv.astype(cache_dtype),
+                     "krope": krope.astype(cache_dtype)}
+    else:
+        acfg = cfg.attn_cfg(window)
+        y = A.attention(p["attn"], acfg, h, positions, mode, prefix_len,
+                        q_chunk=cfg.q_chunk)
+        if collect_cache:
+            k = A._split_heads(dense(p["attn"]["wk"], h), acfg.n_kv_heads,
+                               acfg.head_dim)
+            v = A._split_heads(dense(p["attn"]["wv"], h), acfg.n_kv_heads,
+                               acfg.head_dim)
+            if acfg.rotary_dim > 0:
+                k = A.apply_rope(k, positions, acfg.rotary_dim,
+                                 acfg.rope_theta)
+            cache = {"k": k.astype(cache_dtype), "v": v.astype(cache_dtype)}
+    x = x + y
+    h = norm(p["ln2"], x)
+    if cfg.n_experts > 0:
+        y, aux = M.moe(p["ffn"], cfg.moe_cfg(), h)
+    else:
+        y, aux = M.mlp(p["ffn"], cfg.mlp_cfg(), h), jnp.zeros((), jnp.float32)
+    return x + y, cache, aux
+
+
+def decoder_layer_decode(p, cfg: ModelConfig, x, cache, pos,
+                         window: Optional[int] = "cfg"):
+    _, norm = _norm_fns(cfg)
+    h = norm(p["ln1"], x)
+    if cfg.mla:
+        y, cache = A.mla_decode(p["attn"], cfg.mla_cfg(), h, cache, pos)
+    else:
+        y, cache = A.attention_decode(p["attn"], cfg.attn_cfg(window), h,
+                                      cache, pos)
+    x = x + y
+    h = norm(p["ln2"], x)
+    if cfg.n_experts > 0:
+        y, _ = M.moe(p["ffn"], cfg.moe_cfg(), h)
+    else:
+        y = M.mlp(p["ffn"], cfg.mlp_cfg(), h)
+    return x + y, cache
+
+
+def init_decoder_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                       dtype=jnp.bfloat16, window: Optional[int] = "cfg"):
+    if cfg.mla:
+        return A.init_mla_cache(batch, cache_len, cfg.mla_cfg(), dtype)
+    w = cfg.window if window == "cfg" else window
+    if w is not None and w < cache_len:
+        return A.init_window_cache(batch, w, cfg.attn_cfg(w), dtype)
+    return A.init_full_cache(batch, cache_len, cfg.attn_cfg(w), dtype)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 layer (time mix + channel mix live inside rwkv6_block)
+# ---------------------------------------------------------------------------
+
+def init_rwkv_layer(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    init_n, _ = _norm_fns(cfg)
+    return {"ln": init_n(k1, cfg.d_model),
+            "blk": S.init_rwkv6_block(k2, cfg.rwkv_cfg())}
+
+
+def rwkv_layer_seq(p, cfg: ModelConfig, x, state=None):
+    _, norm = _norm_fns(cfg)
+    y, st = S.rwkv6_block(p["blk"], cfg.rwkv_cfg(), norm(p["ln"], x), state)
+    return y, st
+
+
+def rwkv_layer_decode(p, cfg: ModelConfig, x, state):
+    _, norm = _norm_fns(cfg)
+    return S.rwkv6_decode(p["blk"], cfg.rwkv_cfg(), norm(p["ln"], x), state)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 layer (hybrid backbone)
+# ---------------------------------------------------------------------------
+
+def init_mamba_layer(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    init_n, _ = _norm_fns(cfg)
+    return {"ln": init_n(k1, cfg.d_model),
+            "blk": S.init_mamba2_block(k2, cfg.mamba_cfg())}
+
+
+def mamba_layer_seq(p, cfg: ModelConfig, x, state=None):
+    _, norm = _norm_fns(cfg)
+    y, st = S.mamba2_block(p["blk"], cfg.mamba_cfg(), norm(p["ln"], x), state)
+    return x + y, st
+
+
+def mamba_layer_decode(p, cfg: ModelConfig, x, state):
+    _, norm = _norm_fns(cfg)
+    y, st = S.mamba2_decode(p["blk"], cfg.mamba_cfg(), norm(p["ln"], x), state)
+    return x + y, st
+
+
+# ---------------------------------------------------------------------------
+# Encoder layer (seamless encoder: bidirectional self-attn + MLP)
+# ---------------------------------------------------------------------------
+
+def init_encoder_layer(key, cfg: ModelConfig):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    init_n, _ = _norm_fns(cfg)
+    return {"ln1": init_n(k1, cfg.d_model), "ln2": init_n(k2, cfg.d_model),
+            "attn": A.init_attention(k3, cfg.attn_cfg()),
+            "ffn": M.init_mlp(k4, cfg.mlp_cfg())}
+
+
+def encoder_layer_seq(p, cfg: ModelConfig, x, positions):
+    _, norm = _norm_fns(cfg)
+    x = x + A.attention(p["attn"], cfg.attn_cfg(), norm(p["ln1"], x),
+                        positions, mode="full", q_chunk=cfg.q_chunk)
+    return x + M.mlp(p["ffn"], cfg.mlp_cfg(), norm(p["ln2"], x))
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention decoder layer (seamless decoder)
+# ---------------------------------------------------------------------------
+
+def init_xattn_decoder_layer(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 6)
+    init_n, _ = _norm_fns(cfg)
+    return {
+        "ln1": init_n(ks[0], cfg.d_model), "ln2": init_n(ks[1], cfg.d_model),
+        "ln3": init_n(ks[2], cfg.d_model),
+        "self_attn": A.init_attention(ks[3], cfg.attn_cfg()),
+        "cross_attn": A.init_cross_attention(ks[4], cfg.attn_cfg()),
+        "ffn": M.init_mlp(ks[5], cfg.mlp_cfg()),
+    }
+
+
+def xattn_decoder_layer_seq(p, cfg: ModelConfig, x, positions, enc_out,
+                            collect_cache=False, cache_dtype=jnp.bfloat16):
+    _, norm = _norm_fns(cfg)
+    acfg = cfg.attn_cfg()
+    h = norm(p["ln1"], x)
+    x = x + A.attention(p["self_attn"], acfg, h, positions, mode="causal",
+                        q_chunk=cfg.q_chunk)
+    x = x + A.cross_attention(p["cross_attn"], acfg, norm(p["ln2"], x),
+                              enc_out, q_chunk=cfg.q_chunk)
+    x = x + M.mlp(p["ffn"], cfg.mlp_cfg(), norm(p["ln3"], x))
+    cache = None
+    if collect_cache:
+        k = A._split_heads(dense(p["self_attn"]["wk"], h), acfg.n_kv_heads,
+                           acfg.head_dim)
+        v = A._split_heads(dense(p["self_attn"]["wv"], h), acfg.n_kv_heads,
+                           acfg.head_dim)
+        if acfg.rotary_dim > 0:
+            k = A.apply_rope(k, positions, acfg.rotary_dim, acfg.rope_theta)
+        cache = {
+            "self": {"k": k.astype(cache_dtype), "v": v.astype(cache_dtype)},
+            "cross": A.make_cross_cache(p["cross_attn"], acfg, enc_out,
+                                        cache_dtype),
+        }
+    return x, cache
+
+
+def xattn_decoder_layer_decode(p, cfg: ModelConfig, x, cache, pos):
+    _, norm = _norm_fns(cfg)
+    acfg = cfg.attn_cfg()
+    y, self_cache = A.attention_decode(p["self_attn"], acfg,
+                                       norm(p["ln1"], x), cache["self"], pos)
+    x = x + y
+    x = x + A.cross_attention_decode(p["cross_attn"], acfg,
+                                     norm(p["ln2"], x), cache["cross"])
+    x = x + M.mlp(p["ffn"], cfg.mlp_cfg(), norm(p["ln3"], x))
+    return x, {"self": self_cache, "cross": cache["cross"]}
+
+
+def init_xattn_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                     enc_len: int, dtype=jnp.bfloat16):
+    acfg = cfg.attn_cfg()
+    return {"self": A.init_full_cache(batch, cache_len, acfg, dtype),
+            "cross": A.init_full_cache(batch, enc_len, acfg, dtype)}
+
+
+FAMILIES = ("dense", "moe", "rwkv6", "hybrid", "encdec", "vlm")

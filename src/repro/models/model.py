@@ -1,0 +1,495 @@
+"""Model assembly: stacked-layer scans + the ModelBundle public API.
+
+A ModelBundle packages everything the launcher/optimizer need:
+
+    init(key)                  -> (params, specs)   pure pytrees
+    forward(params, batch)     -> logits            (train / eval)
+    loss(params, batch)        -> scalar            (next-token CE)
+    prefill(params, batch)     -> (logits, cache)
+    init_cache(batch, S, ...)  -> cache pytree      (decode)
+    decode_step(params, cache, tokens, pos) -> (logits, cache)
+
+Layer stacks are initialized with vmap (stacked leading L axis) and applied
+with lax.scan (+ optional jax.checkpoint), so compile time and HLO size do
+not grow with depth -- essential for the 512-device dry-runs on one CPU.
+
+Batch dict formats:
+    dense/moe/rwkv6/hybrid : {"tokens": (B, S)}
+    vlm                    : {"tokens": (B, S - n_prefix),
+                              "patches": (B, n_prefix, frontend_dim)}
+    encdec                 : {"frames": (B, S_enc, frontend_dim),
+                              "tokens": (B, S_dec)}
+The modality frontends (SigLIP / conv audio codec) are stubs by assignment:
+``patches``/``frames`` arrive as precomputed embeddings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.nn.module import (Px, cross_entropy_loss, dense, embedding,
+                             init_dense, init_embedding, init_rmsnorm,
+                             init_layernorm, layernorm, rmsnorm, split_tree,
+                             stack_inits)
+from . import blocks as B
+from .blocks import ModelConfig
+
+__all__ = ["ModelConfig", "ModelBundle", "build_model"]
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable
+    loss: Callable
+    prefill: Callable
+    init_cache: Callable
+    decode_step: Callable
+
+    def init_params(self, key):
+        return self.init(key)
+
+
+def _norm(cfg):
+    return (rmsnorm if cfg.norm == "rmsnorm" else layernorm)
+
+
+def _init_norm(cfg):
+    return (init_rmsnorm if cfg.norm == "rmsnorm" else init_layernorm)
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _positions(b, s, offset=0):
+    return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32) + offset, (b, s))
+
+
+def _logits(cfg: ModelConfig, params, x):
+    if cfg.tie_embeddings:
+        table = params["embed"]["table"]
+        return x @ table.T.astype(x.dtype)
+    return dense(params["head"], x)
+
+
+def _lm_loss(logits, tokens, mask=None):
+    return cross_entropy_loss(logits[:, :-1], tokens[:, 1:],
+                              None if mask is None else mask[:, 1:])
+
+
+# production tensor-parallel axis size; specs fall back to sharding the
+# d_model axis when a dimension is not divisible (e.g. vocab 73448, 256206)
+MODEL_AXIS_SIZE = 16
+
+
+def _init_common(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 4)
+    vocab_ok = cfg.vocab % MODEL_AXIS_SIZE == 0
+    emb_spec = ("model", None) if vocab_ok else (None, "model")
+    p = {"embed": init_embedding(ks[0], cfg.vocab, cfg.d_model, emb_spec),
+         "final_norm": _init_norm(cfg)(ks[1], cfg.d_model)}
+    if not cfg.tie_embeddings:
+        head_spec = (None, "model") if vocab_ok else ("model", None)
+        p["head"] = init_dense(ks[2], cfg.d_model, cfg.vocab, head_spec)
+    return p, ks[3]
+
+
+# ===========================================================================
+# dense / moe decoder (also the vlm text stack)
+# ===========================================================================
+
+def _build_decoder(cfg: ModelConfig) -> ModelBundle:
+    is_vlm = cfg.family == "vlm"
+
+    def init(key):
+        p, k = _init_common(cfg, key)
+        k1, k2 = jax.random.split(k)
+        p["layers"] = stack_inits(
+            lambda kk: B.init_decoder_layer(kk, cfg), k1, cfg.n_layers)
+        if is_vlm:
+            p["projector"] = init_dense(k2, cfg.frontend_dim, cfg.d_model,
+                                        (None, None))
+        return split_tree(p)
+
+    def _embed_inputs(params, batch):
+        tokens = batch["tokens"]
+        x = embedding(params["embed"], tokens, cfg.dtype)
+        prefix_len = 0
+        if is_vlm:
+            patches = dense(params["projector"],
+                            batch["patches"].astype(cfg.dtype))
+            x = jnp.concatenate([patches, x], axis=1)
+            prefix_len = cfg.n_prefix
+        return x, prefix_len
+
+    def _run_layers(params, x, positions, prefix_len, collect_cache,
+                    window="cfg"):
+        mode = "prefix" if is_vlm else "causal"
+
+        def body(carry, layer_p):
+            h, aux = carry
+            h, cache, a = B.decoder_layer_seq(
+                layer_p, cfg, h, positions, mode, prefix_len,
+                collect_cache=collect_cache, cache_dtype=cfg.dtype,
+                window=window)
+            return (h, aux + a), cache
+
+        (x, aux), caches = jax.lax.scan(
+            _maybe_remat(body, cfg), (x, jnp.zeros((), jnp.float32)),
+            params["layers"])
+        return x, caches, aux
+
+    def forward(params, batch):
+        x, prefix_len = _embed_inputs(params, batch)
+        pos = _positions(*x.shape[:2])
+        x, _, _ = _run_layers(params, x, pos, prefix_len, False)
+        x = _norm(cfg)(params["final_norm"], x)
+        return _logits(cfg, params, x)
+
+    def loss(params, batch):
+        x, prefix_len = _embed_inputs(params, batch)
+        pos = _positions(*x.shape[:2])
+        x, _, aux = _run_layers(params, x, pos, prefix_len, False)
+        x = _norm(cfg)(params["final_norm"], x)
+        if is_vlm:  # only text positions predict
+            x = x[:, cfg.n_prefix:]
+        logits = _logits(cfg, params, x)
+        return _lm_loss(logits, batch["tokens"]) + 0.01 * aux / max(cfg.n_layers, 1)
+
+    def prefill(params, batch, window="cfg"):
+        x, prefix_len = _embed_inputs(params, batch)
+        pos = _positions(*x.shape[:2])
+        x, caches, _ = _run_layers(params, x, pos, prefix_len, True,
+                                   window=window)
+        x = _norm(cfg)(params["final_norm"], x[:, -1:])
+        return _logits(cfg, params, x), caches
+
+    def init_cache(batch, cache_len, dtype=jnp.bfloat16, window="cfg",
+                   enc_len=None):
+        del enc_len
+        one = B.init_decoder_cache(cfg, batch, cache_len, dtype, window)
+        return jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l, (cfg.n_layers,) + l.shape), one)
+
+    def decode_step(params, cache, tokens, pos, window="cfg"):
+        x = embedding(params["embed"], tokens, cfg.dtype)  # (B,1,D)
+
+        def body(h, scanned):
+            layer_p, cache_l = scanned
+            h, new_cache = B.decoder_layer_decode(layer_p, cfg, h, cache_l,
+                                                  pos, window=window)
+            return h, new_cache
+
+        x, new_caches = jax.lax.scan(body, x, (params["layers"], cache))
+        x = _norm(cfg)(params["final_norm"], x)
+        return _logits(cfg, params, x)[:, 0], new_caches
+
+    return ModelBundle(cfg, init, forward, loss, prefill, init_cache,
+                       decode_step)
+
+
+# ===========================================================================
+# RWKV6 (attention-free; cache = recurrent state)
+# ===========================================================================
+
+def _build_rwkv(cfg: ModelConfig) -> ModelBundle:
+    from repro.nn import ssm as S
+
+    def init(key):
+        p, k = _init_common(cfg, key)
+        p["layers"] = stack_inits(
+            lambda kk: B.init_rwkv_layer(kk, cfg), k, cfg.n_layers)
+        return split_tree(p)
+
+    def _run(params, x, states):
+        def body(h, scanned):
+            layer_p, st = scanned
+            h, new_st = B.rwkv_layer_seq(layer_p, cfg, h, st)
+            return h, new_st
+
+        x, new_states = jax.lax.scan(_maybe_remat(body, cfg), x,
+                                     (params["layers"], states))
+        return x, new_states
+
+    def init_cache(batch, cache_len=0, dtype=jnp.float32, window=None,
+                   enc_len=None):
+        del cache_len, window, enc_len
+        one = S.init_rwkv6_state(batch, cfg.rwkv_cfg(), dtype)
+        return jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l, (cfg.n_layers,) + l.shape), one)
+
+    def forward(params, batch):
+        tokens = batch["tokens"]
+        x = embedding(params["embed"], tokens, cfg.dtype)
+        states = init_cache(tokens.shape[0])
+        x, _ = _run(params, x, states)
+        x = _norm(cfg)(params["final_norm"], x)
+        return _logits(cfg, params, x)
+
+    def loss(params, batch):
+        return _lm_loss(forward(params, batch), batch["tokens"])
+
+    def prefill(params, batch):
+        tokens = batch["tokens"]
+        x = embedding(params["embed"], tokens, cfg.dtype)
+        states = init_cache(tokens.shape[0])
+        x, new_states = _run(params, x, states)
+        x = _norm(cfg)(params["final_norm"], x[:, -1:])
+        return _logits(cfg, params, x), new_states
+
+    def decode_step(params, cache, tokens, pos, window=None):
+        del pos, window  # recurrent state carries position implicitly
+        x = embedding(params["embed"], tokens, cfg.dtype)
+
+        def body(h, scanned):
+            layer_p, st = scanned
+            h, new_st = B.rwkv_layer_decode(layer_p, cfg, h, st)
+            return h, new_st
+
+        x, new_states = jax.lax.scan(body, x, (params["layers"], cache))
+        x = _norm(cfg)(params["final_norm"], x)
+        return _logits(cfg, params, x)[:, 0], new_states
+
+    return ModelBundle(cfg, init, forward, loss, prefill, init_cache,
+                       decode_step)
+
+
+# ===========================================================================
+# Hybrid: mamba2 backbone + one shared attention block every `attn_every`
+# layers (zamba2).  Group scan: G groups of g mamba layers + shared attn;
+# remainder mamba layers run in a trailing scan.
+# ===========================================================================
+
+def _build_hybrid(cfg: ModelConfig) -> ModelBundle:
+    from repro.nn import ssm as S
+
+    g = cfg.attn_every
+    n_groups = cfg.n_layers // g
+    rem = cfg.n_layers - n_groups * g
+
+    def init(key):
+        p, k = _init_common(cfg, key)
+        k1, k2 = jax.random.split(k)
+        p["mamba"] = stack_inits(
+            lambda kk: B.init_mamba_layer(kk, cfg), k1, cfg.n_layers)
+        p["shared_attn"] = B.init_decoder_layer(
+            k2, dataclasses.replace(cfg, n_experts=0, mla=False))
+        return split_tree(p)
+
+    def _reshape_groups(tree):
+        head = jax.tree_util.tree_map(
+            lambda l: l[: n_groups * g].reshape((n_groups, g) + l.shape[1:]),
+            tree)
+        tail = jax.tree_util.tree_map(lambda l: l[n_groups * g:], tree)
+        return head, tail
+
+    def _mamba_scan(layers, states, x, decode=False):
+        apply = B.mamba_layer_decode if decode else B.mamba_layer_seq
+
+        def body(h, scanned):
+            layer_p, st = scanned
+            h, new_st = apply(layer_p, cfg, h, st)
+            return h, new_st
+
+        return jax.lax.scan(body, x, (layers, states))
+
+    def _run(params, x, mamba_states, positions, attn_ctx, decode=False,
+             window="cfg"):
+        """attn_ctx: None (fresh fwd), caches (G,...) for decode, or
+        'collect' to gather prefill caches."""
+        head_p, tail_p = _reshape_groups(params["mamba"])
+        head_s, tail_s = _reshape_groups(mamba_states)
+        shared = params["shared_attn"]
+        acfg = dataclasses.replace(cfg, n_experts=0, mla=False)
+        collect = attn_ctx == "collect"
+
+        def group_body(h, scanned):
+            if decode:
+                layer_p, st, cache_g = scanned
+            else:
+                layer_p, st = scanned
+            h, new_st = _mamba_scan(layer_p, st, h, decode)
+            if decode:
+                h, new_cache = B.decoder_layer_decode(shared, acfg, h,
+                                                      cache_g, positions,
+                                                      window=window)
+                return h, (new_st, new_cache)
+            h, cache, _ = B.decoder_layer_seq(
+                shared, acfg, h, positions, collect_cache=collect,
+                cache_dtype=cfg.dtype, window=window)
+            return h, (new_st, cache) if collect else (new_st, 0)
+
+        scanned = (head_p, head_s)
+        if decode:
+            scanned = (head_p, head_s, attn_ctx)
+        x, (new_head_s, attn_out) = jax.lax.scan(
+            _maybe_remat(group_body, cfg) if not decode else group_body,
+            x, scanned)
+        if rem:
+            x, new_tail_s = _mamba_scan(tail_p, tail_s, x, decode)
+        else:
+            new_tail_s = tail_s
+        new_states = jax.tree_util.tree_map(
+            lambda hd, tl: jnp.concatenate(
+                [hd.reshape((n_groups * g,) + hd.shape[2:]), tl], axis=0),
+            new_head_s, new_tail_s)
+        return x, new_states, attn_out
+
+    def _mamba_cache(batch, dtype=jnp.float32):
+        one = S.init_mamba2_state(batch, cfg.mamba_cfg(), dtype)
+        return jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l, (cfg.n_layers,) + l.shape), one)
+
+    def init_cache(batch, cache_len, dtype=jnp.bfloat16, window="cfg",
+                   enc_len=None):
+        del enc_len
+        acfg = dataclasses.replace(cfg, n_experts=0, mla=False)
+        attn_one = B.init_decoder_cache(acfg, batch, cache_len, dtype, window)
+        attn = jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l, (n_groups,) + l.shape), attn_one)
+        return {"mamba": _mamba_cache(batch), "attn": attn}
+
+    def forward(params, batch):
+        tokens = batch["tokens"]
+        x = embedding(params["embed"], tokens, cfg.dtype)
+        pos = _positions(*tokens.shape[:2])
+        x, _, _ = _run(params, x, _mamba_cache(tokens.shape[0]), pos, None)
+        x = _norm(cfg)(params["final_norm"], x)
+        return _logits(cfg, params, x)
+
+    def loss(params, batch):
+        return _lm_loss(forward(params, batch), batch["tokens"])
+
+    def prefill(params, batch, window="cfg"):
+        tokens = batch["tokens"]
+        x = embedding(params["embed"], tokens, cfg.dtype)
+        pos = _positions(*tokens.shape[:2])
+        x, new_states, attn_caches = _run(
+            params, x, _mamba_cache(tokens.shape[0]), pos, "collect",
+            window=window)
+        x = _norm(cfg)(params["final_norm"], x[:, -1:])
+        return (_logits(cfg, params, x),
+                {"mamba": new_states, "attn": attn_caches})
+
+    def decode_step(params, cache, tokens, pos, window="cfg"):
+        x = embedding(params["embed"], tokens, cfg.dtype)
+        x, new_states, new_attn = _run(params, x, cache["mamba"], pos,
+                                       cache["attn"], decode=True,
+                                       window=window)
+        x = _norm(cfg)(params["final_norm"], x)
+        return (_logits(cfg, params, x)[:, 0],
+                {"mamba": new_states, "attn": new_attn})
+
+    return ModelBundle(cfg, init, forward, loss, prefill, init_cache,
+                       decode_step)
+
+
+# ===========================================================================
+# Encoder-decoder (seamless-m4t): audio frames -> encoder; text decoder with
+# cross-attention.
+# ===========================================================================
+
+def _build_encdec(cfg: ModelConfig) -> ModelBundle:
+
+    def init(key):
+        p, k = _init_common(cfg, key)
+        k1, k2, k3 = jax.random.split(k, 3)
+        p["adapter"] = init_dense(k1, cfg.frontend_dim, cfg.d_model,
+                                  (None, None))
+        p["enc_layers"] = stack_inits(
+            lambda kk: B.init_encoder_layer(kk, cfg), k2, cfg.n_enc_layers)
+        p["dec_layers"] = stack_inits(
+            lambda kk: B.init_xattn_decoder_layer(kk, cfg), k3, cfg.n_layers)
+        return split_tree(p)
+
+    def _encode(params, frames):
+        x = dense(params["adapter"], frames.astype(cfg.dtype))
+        pos = _positions(*x.shape[:2])
+
+        def body(h, layer_p):
+            return B.encoder_layer_seq(layer_p, cfg, h, pos), None
+
+        x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["enc_layers"])
+        return x
+
+    def _decode_seq(params, tokens, enc_out, collect_cache=False):
+        x = embedding(params["embed"], tokens, cfg.dtype)
+        pos = _positions(*tokens.shape[:2])
+
+        def body(h, layer_p):
+            h, cache = B.xattn_decoder_layer_seq(
+                layer_p, cfg, h, pos, enc_out, collect_cache=collect_cache,
+                cache_dtype=cfg.dtype)
+            return h, cache
+
+        x, caches = jax.lax.scan(_maybe_remat(body, cfg), x,
+                                 params["dec_layers"])
+        return x, caches
+
+    def forward(params, batch):
+        enc_out = _encode(params, batch["frames"])
+        x, _ = _decode_seq(params, batch["tokens"], enc_out)
+        x = _norm(cfg)(params["final_norm"], x)
+        return _logits(cfg, params, x)
+
+    def loss(params, batch):
+        return _lm_loss(forward(params, batch), batch["tokens"])
+
+    def prefill(params, batch):
+        enc_out = _encode(params, batch["frames"])
+        x, caches = _decode_seq(params, batch["tokens"], enc_out,
+                                collect_cache=True)
+        x = _norm(cfg)(params["final_norm"], x[:, -1:])
+        return _logits(cfg, params, x), caches
+
+    def init_cache(batch, cache_len, dtype=jnp.bfloat16, window=None,
+                   enc_len=None):
+        del window
+        enc_len = enc_len or cache_len
+        one = B.init_xattn_cache(cfg, batch, cache_len, enc_len, dtype)
+        return jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l, (cfg.n_layers,) + l.shape), one)
+
+    def decode_step(params, cache, tokens, pos, window=None):
+        del window
+        x = embedding(params["embed"], tokens, cfg.dtype)
+
+        def body(h, scanned):
+            layer_p, cache_l = scanned
+            h, new_cache = B.xattn_decoder_layer_decode(layer_p, cfg, h,
+                                                        cache_l, pos)
+            return h, new_cache
+
+        x, new_caches = jax.lax.scan(body, x, (params["dec_layers"], cache))
+        x = _norm(cfg)(params["final_norm"], x)
+        return _logits(cfg, params, x)[:, 0], new_caches
+
+    return ModelBundle(cfg, init, forward, loss, prefill, init_cache,
+                       decode_step)
+
+
+# ===========================================================================
+
+_BUILDERS = {
+    "dense": _build_decoder,
+    "moe": _build_decoder,
+    "vlm": _build_decoder,
+    "rwkv6": _build_rwkv,
+    "hybrid": _build_hybrid,
+    "encdec": _build_encdec,
+}
+
+
+def build_model(cfg: ModelConfig) -> ModelBundle:
+    if cfg.family not in _BUILDERS:
+        raise ValueError(f"unknown family {cfg.family!r}")
+    return _BUILDERS[cfg.family](cfg)

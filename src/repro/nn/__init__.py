@@ -1,0 +1,6 @@
+"""Minimal pure-JAX neural-net library (attention, MoE, SSM, modules)."""
+from . import attention, module, moe, ssm
+from .module import Px, split_tree, cross_entropy_loss
+
+__all__ = ["attention", "module", "moe", "ssm", "Px", "split_tree",
+           "cross_entropy_loss"]

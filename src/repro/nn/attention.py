@@ -1,0 +1,382 @@
+"""Attention blocks: MHA/GQA/MQA, sliding-window, prefix-LM, cross-attention,
+and MiniCPM3-style MLA (multi-head latent attention), with decode caches.
+
+Sharding convention over the ('data','model') mesh: head-projection weights
+are sharded over 'model' on the head*head_dim axis; output projections on the
+input axis.  Caches shard batch over the agent/data axes when batch >= axis
+size, otherwise sequence (see launch/shapes.py).
+
+Cache formats
+  full GQA   : {k, v: (B, S, Hk, hd), ...}   write at ``pos``
+  windowed   : {k, v: (B, W, Hk, hd), positions: (B, W) int32}  ring buffer
+  MLA latent : {ckv: (B, S, dc), krope: (B, S, dr)}
+  cross      : {k, v: (B, T_enc, Hk, hd)}    precomputed at prefill
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .module import Px, apply_rope, dense, init_dense, init_rmsnorm, rmsnorm
+
+__all__ = [
+    "AttnConfig", "MLAConfig", "init_attention", "attention",
+    "init_full_cache", "init_window_cache", "attention_decode",
+    "init_mla", "mla_attention", "init_mla_cache", "mla_decode",
+    "init_cross_attention", "cross_attention", "make_cross_cache",
+    "cross_attention_decode",
+]
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rotary_frac: float = 1.0      # chatglm3 "2d" RoPE = 0.5
+    rope_theta: float = 10000.0
+    window: Optional[int] = None  # sliding-window size (h2o-danube3)
+    qkv_bias: bool = False
+
+    @property
+    def rotary_dim(self) -> int:
+        rd = int(self.head_dim * self.rotary_frac)
+        return rd - rd % 2
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_dim: int = 64
+    qk_rope_dim: int = 32
+    v_head_dim: int = 64
+    rope_theta: float = 10000.0
+
+
+# ---------------------------------------------------------------------------
+# Standard GQA attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: AttnConfig):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    h, hk, hd, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    return {
+        "wq": init_dense(kq, d, h * hd, (None, "model"), bias=cfg.qkv_bias),
+        "wk": init_dense(kk, d, hk * hd, (None, "model"), bias=cfg.qkv_bias),
+        "wv": init_dense(kv, d, hk * hd, (None, "model"), bias=cfg.qkv_bias),
+        "wo": init_dense(ko, h * hd, d, ("model", None)),
+    }
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def _gqa_scores(q, k):
+    """q: (B,S,Hk,G,hd), k: (B,T,Hk,hd) -> (B,Hk,G,S,T)."""
+    return jnp.einsum("bskgd,btkd->bkgst", q, k)
+
+
+def _gqa_out(probs, v):
+    return jnp.einsum("bkgst,btkd->bskgd", probs, v)
+
+
+def _mask_bias(mask: jax.Array, dtype) -> jax.Array:
+    return jnp.where(mask, 0.0, NEG_INF).astype(dtype)
+
+
+def make_mask(s: int, t: int, mode: str = "causal",
+              window: Optional[int] = None, prefix_len: int = 0,
+              q_offset: int = 0) -> jax.Array:
+    """(s, t) boolean mask; True = attend.  q position i is q_offset + i."""
+    qi = jnp.arange(s)[:, None] + q_offset
+    ki = jnp.arange(t)[None, :]
+    if mode == "full":
+        m = jnp.ones((s, t), bool)
+    elif mode == "causal":
+        m = ki <= qi
+    elif mode == "prefix":
+        m = (ki <= qi) | (ki < prefix_len)
+    else:
+        raise ValueError(mode)
+    if window is not None:
+        m = m & (ki > qi - window)
+    return m
+
+
+def attention(p, cfg: AttnConfig, x: jax.Array, positions: jax.Array,
+              mode: str = "causal", prefix_len: int = 0,
+              q_chunk: Optional[int] = None) -> jax.Array:
+    """Full-sequence attention.  x: (B,S,D); positions: (B,S).
+
+    q_chunk: process queries in blocks of this size (lax.scan), so the
+    materialized score tensor is (B,H,q_chunk,S) instead of (B,H,S,S) --
+    the coarse-grained flash-attention adaptation that makes 32k prefill
+    fit HBM (see EXPERIMENTS.md SPerf, minicpm3 x prefill_32k).
+    """
+    b, s, _ = x.shape
+    h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // hk
+    q = _split_heads(dense(p["wq"], x), h, hd)
+    k = _split_heads(dense(p["wk"], x), hk, hd)
+    v = _split_heads(dense(p["wv"], x), hk, hd)
+    if cfg.rotary_dim > 0:
+        q = apply_rope(q, positions, cfg.rotary_dim, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rotary_dim, cfg.rope_theta)
+    q = q.reshape(b, s, hk, g, hd)
+
+    def attend_block(q_blk, offset, blk_len):
+        scores = _gqa_scores(q_blk, k) / np.sqrt(hd)
+        mask = make_mask(blk_len, s, mode, cfg.window, prefix_len,
+                         q_offset=offset)
+        scores = scores + _mask_bias(mask, scores.dtype)
+        probs = jax.nn.softmax(scores.astype(jnp.float32),
+                               axis=-1).astype(x.dtype)
+        return _gqa_out(probs, v)
+
+    if q_chunk and s > q_chunk and s % q_chunk == 0:
+        nc = s // q_chunk
+        q_blocks = q.reshape(b, nc, q_chunk, hk, g, hd).transpose(
+            1, 0, 2, 3, 4, 5)
+
+        def body(_, inp):
+            q_blk, i = inp
+            return None, attend_block(q_blk, i * q_chunk, q_chunk)
+
+        _, outs = jax.lax.scan(body, None, (q_blocks, jnp.arange(nc)))
+        out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h * hd)
+    else:
+        out = attend_block(q, 0, s).reshape(b, s, h * hd)
+    return dense(p["wo"], out)
+
+
+def init_full_cache(batch: int, seq: int, cfg: AttnConfig,
+                    dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    hk, hd = cfg.n_kv_heads, cfg.head_dim
+    return {"k": jnp.zeros((batch, seq, hk, hd), dtype),
+            "v": jnp.zeros((batch, seq, hk, hd), dtype)}
+
+
+def init_window_cache(batch: int, window: int, cfg: AttnConfig,
+                      dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    hk, hd = cfg.n_kv_heads, cfg.head_dim
+    return {"k": jnp.zeros((batch, window, hk, hd), dtype),
+            "v": jnp.zeros((batch, window, hk, hd), dtype),
+            "positions": jnp.full((batch, window), -1, jnp.int32)}
+
+
+def attention_decode(p, cfg: AttnConfig, x: jax.Array, cache: Dict[str, Any],
+                     pos: jax.Array) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One-token decode.  x: (B,1,D); pos: scalar int32 (same for the batch).
+
+    Full cache: write kv at ``pos`` and attend over [0, pos].
+    Windowed cache: ring-buffer slot pos % W; mask by stored positions.
+    """
+    b = x.shape[0]
+    h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // hk
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q = _split_heads(dense(p["wq"], x), h, hd)
+    k_new = _split_heads(dense(p["wk"], x), hk, hd)
+    v_new = _split_heads(dense(p["wv"], x), hk, hd)
+    if cfg.rotary_dim > 0:
+        q = apply_rope(q, positions, cfg.rotary_dim, cfg.rope_theta)
+        k_new = apply_rope(k_new, positions, cfg.rotary_dim, cfg.rope_theta)
+    q = q.reshape(b, 1, hk, g, hd)
+
+    windowed = "positions" in cache
+    slot = (pos % cache["k"].shape[1]) if windowed else pos
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    new_cache = dict(cache, k=k, v=v)
+
+    scores = _gqa_scores(q, k.astype(x.dtype)) / np.sqrt(hd)  # (B,Hk,G,1,T)
+    if windowed:
+        pos_ids = jax.lax.dynamic_update_slice_in_dim(
+            cache["positions"], positions, slot, axis=1)
+        new_cache["positions"] = pos_ids
+        valid = (pos_ids <= pos) & (pos_ids >= 0)
+        if cfg.window is not None:
+            valid = valid & (pos_ids > pos - cfg.window)
+        mask = valid[:, None, None, None, :]
+    else:
+        t = k.shape[1]
+        mask = (jnp.arange(t) <= pos)[None, None, None, None, :]
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = _gqa_out(probs, v.astype(x.dtype)).reshape(b, 1, h * hd)
+    return dense(p["wo"], out), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (MiniCPM3 / DeepSeek-style multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: MLAConfig):
+    ks = jax.random.split(key, 8)
+    h = cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "wdq": init_dense(ks[0], cfg.d_model, cfg.q_lora_rank, (None, None)),
+        "q_norm": init_rmsnorm(ks[1], cfg.q_lora_rank),
+        "wuq": init_dense(ks[2], cfg.q_lora_rank, h * qk, (None, "model")),
+        "wdkv": init_dense(ks[3], cfg.d_model,
+                           cfg.kv_lora_rank + cfg.qk_rope_dim, (None, None)),
+        "kv_norm": init_rmsnorm(ks[4], cfg.kv_lora_rank),
+        "wuk": init_dense(ks[5], cfg.kv_lora_rank, h * cfg.qk_nope_dim,
+                          (None, "model")),
+        "wuv": init_dense(ks[6], cfg.kv_lora_rank, h * cfg.v_head_dim,
+                          (None, "model")),
+        "wo": init_dense(ks[7], h * cfg.v_head_dim, cfg.d_model,
+                         ("model", None)),
+    }
+
+
+def _mla_qkv(p, cfg: MLAConfig, x, positions):
+    """Shared q / latent computation.  Returns q_nope, q_rope, ckv, krope."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    cq = rmsnorm(p["q_norm"], dense(p["wdq"], x))
+    q = dense(p["wuq"], cq).reshape(b, s, h, cfg.qk_nope_dim + cfg.qk_rope_dim)
+    q_nope, q_rope = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.qk_rope_dim, cfg.rope_theta)
+    dkv = dense(p["wdkv"], x)
+    ckv = rmsnorm(p["kv_norm"], dkv[..., : cfg.kv_lora_rank])
+    krope = dkv[..., cfg.kv_lora_rank:][:, :, None, :]  # (B,S,1,dr)
+    krope = apply_rope(krope, positions, cfg.qk_rope_dim, cfg.rope_theta)
+    return q_nope, q_rope, ckv, krope[:, :, 0, :]
+
+
+def _mla_attend(p, cfg: MLAConfig, q_nope, q_rope, ckv, krope, mask, dtype):
+    """q_*: (B,S,H,*); ckv: (B,T,dc); krope: (B,T,dr) -> (B,S,H*v)."""
+    b, s, h = q_nope.shape[:3]
+    k_nope = dense(p["wuk"], ckv).reshape(b, -1, h, cfg.qk_nope_dim)
+    v = dense(p["wuv"], ckv).reshape(b, -1, h, cfg.v_head_dim)
+    scores = (jnp.einsum("bshd,bthd->bhst", q_nope, k_nope)
+              + jnp.einsum("bshd,btd->bhst", q_rope, krope))
+    scores = scores / np.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    scores = scores + _mask_bias(mask, scores.dtype)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(dtype)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v).reshape(b, s, -1)
+    return dense(p["wo"], out)
+
+
+def mla_attention(p, cfg: MLAConfig, x, positions,
+                  q_chunk: Optional[int] = None) -> jax.Array:
+    s = x.shape[1]
+    q_nope, q_rope, ckv, krope = _mla_qkv(p, cfg, x, positions)
+    if q_chunk and s > q_chunk and s % q_chunk == 0:
+        # chunked queries: expand k/v once, scan score blocks (flash-coarse)
+        b, _, h = q_nope.shape[:3]
+        k_nope = dense(p["wuk"], ckv).reshape(b, -1, h, cfg.qk_nope_dim)
+        v = dense(p["wuv"], ckv).reshape(b, -1, h, cfg.v_head_dim)
+        nc = s // q_chunk
+        qn = q_nope.reshape(b, nc, q_chunk, h, -1).transpose(1, 0, 2, 3, 4)
+        qr = q_rope.reshape(b, nc, q_chunk, h, -1).transpose(1, 0, 2, 3, 4)
+
+        def body(_, inp):
+            qn_b, qr_b, i = inp
+            scores = (jnp.einsum("bshd,bthd->bhst", qn_b, k_nope)
+                      + jnp.einsum("bshd,btd->bhst", qr_b, krope))
+            scores = scores / np.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+            mask = make_mask(q_chunk, s, "causal", q_offset=i * q_chunk)
+            scores = scores + _mask_bias(mask, scores.dtype)
+            probs = jax.nn.softmax(scores.astype(jnp.float32),
+                                   axis=-1).astype(x.dtype)
+            return None, jnp.einsum("bhst,bthd->bshd", probs, v)
+
+        _, outs = jax.lax.scan(body, None, (qn, qr, jnp.arange(nc)))
+        out = outs.transpose(1, 0, 2, 3, 4).reshape(b, s, -1)
+        return dense(p["wo"], out)
+    mask = make_mask(s, s, "causal")
+    return _mla_attend(p, cfg, q_nope, q_rope, ckv, krope, mask, x.dtype)
+
+
+def init_mla_cache(batch: int, seq: int, cfg: MLAConfig, dtype=jnp.bfloat16):
+    return {"ckv": jnp.zeros((batch, seq, cfg.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, seq, cfg.qk_rope_dim), dtype)}
+
+
+def mla_decode(p, cfg: MLAConfig, x, cache, pos):
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q_nope, q_rope, ckv_new, krope_new = _mla_qkv(p, cfg, x, positions)
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache["ckv"], ckv_new.astype(cache["ckv"].dtype), pos, axis=1)
+    krope = jax.lax.dynamic_update_slice_in_dim(
+        cache["krope"], krope_new.astype(cache["krope"].dtype), pos, axis=1)
+    t = ckv.shape[1]
+    mask = (jnp.arange(t) <= pos)[None, :]
+    out = _mla_attend(p, cfg, q_nope, q_rope, ckv.astype(x.dtype),
+                      krope.astype(x.dtype), mask, x.dtype)
+    return out, {"ckv": ckv, "krope": krope}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (seamless-m4t enc-dec)
+# ---------------------------------------------------------------------------
+
+def init_cross_attention(key, cfg: AttnConfig):
+    return init_attention(key, cfg)
+
+
+def _cross_kv(p, cfg: AttnConfig, enc_out):
+    hk, hd = cfg.n_kv_heads, cfg.head_dim
+    k = _split_heads(dense(p["wk"], enc_out), hk, hd)
+    v = _split_heads(dense(p["wv"], enc_out), hk, hd)
+    return k, v
+
+
+def cross_attention(p, cfg: AttnConfig, x, enc_out,
+                    q_chunk: Optional[int] = None) -> jax.Array:
+    """x: (B,S,D) decoder states; enc_out: (B,T,D).  No mask (full)."""
+    b, s, _ = x.shape
+    h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = _split_heads(dense(p["wq"], x), h, hd).reshape(b, s, hk, h // hk, hd)
+    k, v = _cross_kv(p, cfg, enc_out)
+
+    def attend(q_blk):
+        scores = _gqa_scores(q_blk, k) / np.sqrt(hd)
+        probs = jax.nn.softmax(scores.astype(jnp.float32),
+                               axis=-1).astype(x.dtype)
+        return _gqa_out(probs, v)
+
+    if q_chunk and s > q_chunk and s % q_chunk == 0:
+        nc = s // q_chunk
+        qb = q.reshape(b, nc, q_chunk, hk, h // hk, hd).transpose(
+            1, 0, 2, 3, 4, 5)
+        _, outs = jax.lax.scan(lambda _, qq: (None, attend(qq)), None, qb)
+        out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h * hd)
+    else:
+        out = attend(q).reshape(b, s, h * hd)
+    return dense(p["wo"], out)
+
+
+def make_cross_cache(p, cfg: AttnConfig, enc_out, dtype=jnp.bfloat16):
+    k, v = _cross_kv(p, cfg, enc_out)
+    return {"k": k.astype(dtype), "v": v.astype(dtype)}
+
+
+def cross_attention_decode(p, cfg: AttnConfig, x, cross_cache):
+    b = x.shape[0]
+    h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = _split_heads(dense(p["wq"], x), h, hd).reshape(b, 1, hk, h // hk, hd)
+    k, v = cross_cache["k"].astype(x.dtype), cross_cache["v"].astype(x.dtype)
+    scores = _gqa_scores(q, k) / np.sqrt(hd)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = _gqa_out(probs, v).reshape(b, 1, h * hd)
+    return dense(p["wo"], out)

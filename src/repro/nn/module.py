@@ -1,0 +1,184 @@
+"""Minimal pure-JAX module system (flax is not available offline).
+
+Convention: ``init_*`` functions return a pytree whose leaves are
+``Px(value, spec)`` pairs -- the array together with its
+``PartitionSpec`` over the ('data', 'model') mesh (agent axes are prepended
+later by the launcher, see repro/launch).  ``split_tree`` separates the two
+parallel pytrees.  ``apply`` functions are plain functions of
+(params, inputs).
+
+Initializers are jittable (jax.random based) so layer stacks can be built
+with ``jax.vmap`` over per-layer keys -- the model zoo scans over stacked
+layer parameters to keep HLO size and compile time independent of depth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "Px", "split_tree", "param", "init_dense", "dense", "init_embedding",
+    "embedding", "init_rmsnorm", "rmsnorm", "init_layernorm", "layernorm",
+    "rope_freqs", "apply_rope", "cross_entropy_loss", "prepend_axis_specs",
+    "stack_inits",
+]
+
+
+class Px(NamedTuple):
+    """A parameter leaf: the array plus its PartitionSpec."""
+    value: jax.Array
+    spec: P
+
+
+def _is_px(x) -> bool:
+    return isinstance(x, Px)
+
+
+def split_tree(tree) -> Tuple[Any, Any]:
+    """Split a Px-leaf pytree into (values, specs)."""
+    values = jax.tree_util.tree_map(lambda l: l.value, tree, is_leaf=_is_px)
+    specs = jax.tree_util.tree_map(lambda l: l.spec, tree, is_leaf=_is_px)
+    return values, specs
+
+
+def param(key, shape: Sequence[int], spec: Sequence[Optional[str]],
+          scale: float = 1.0, dtype=jnp.float32, mode: str = "normal") -> Px:
+    shape = tuple(shape)
+    if mode == "normal":
+        v = scale * jax.random.normal(key, shape, dtype)
+    elif mode == "zeros":
+        v = jnp.zeros(shape, dtype)
+    elif mode == "ones":
+        v = jnp.ones(shape, dtype)
+    elif mode == "uniform":
+        v = scale * jax.random.uniform(key, shape, dtype, -1.0, 1.0)
+    else:
+        raise ValueError(mode)
+    return Px(v, P(*spec))
+
+
+def init_dense(key, d_in: int, d_out: int, spec=(None, "model"),
+               bias: bool = False, scale: Optional[float] = None,
+               dtype=jnp.float32):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    k_w, k_b = jax.random.split(key)
+    p = {"w": param(k_w, (d_in, d_out), spec, scale, dtype)}
+    if bias:
+        p["b"] = param(k_b, (d_out,), (spec[-1],), 0.0, dtype, mode="zeros")
+    return p
+
+
+def dense(p, x: jax.Array) -> jax.Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def init_embedding(key, vocab: int, d: int, spec=("model", None),
+                   dtype=jnp.float32):
+    return {"table": param(key, (vocab, d), spec, 0.02, dtype)}
+
+
+def embedding(p, tokens: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return jnp.take(p["table"], tokens, axis=0).astype(dtype)
+
+
+def init_rmsnorm(key, d: int, dtype=jnp.float32):
+    del key
+    return {"scale": Px(jnp.ones((d,), dtype), P(None))}
+
+
+def rmsnorm(p, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def init_layernorm(key, d: int, dtype=jnp.float32):
+    del key
+    return {"scale": Px(jnp.ones((d,), dtype), P(None)),
+            "bias": Px(jnp.zeros((d,), dtype), P(None))}
+
+
+def layernorm(p, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings: full / partial ("2d", chatglm-style) rotary fraction.
+# ---------------------------------------------------------------------------
+
+def rope_freqs(rotary_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, rotary_dim, 2, dtype=jnp.float32)
+                            / rotary_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, rotary_dim: int,
+               theta: float = 10000.0) -> jax.Array:
+    """Rotate the first ``rotary_dim`` channels of the last axis.
+
+    x: (..., seq, heads, head_dim); positions: (..., seq) int32.
+    rotary_dim < head_dim gives partial rotary (chatglm3's "2d" RoPE applies
+    rotation to half the channels).
+    """
+    hd = x.shape[-1]
+    rot, rest = x[..., :rotary_dim], x[..., rotary_dim:]
+    freqs = rope_freqs(rotary_dim, theta)  # (rotary_dim/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, rd/2)
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = rot[..., : rotary_dim // 2], rot[..., rotary_dim // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    if rotary_dim < hd:
+        out = jnp.concatenate([out, rest], axis=-1)
+    return out
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       mask: Optional[jax.Array] = None) -> jax.Array:
+    """Token-level CE without materializing one-hots (vocab can be 257k)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def prepend_axis_specs(specs, axes) -> Any:
+    """Prepend mesh axes (e.g. agent axes, or a layer-stack None) to specs."""
+    def one(s: P) -> P:
+        return P(axes, *tuple(s))
+    return jax.tree_util.tree_map(one, specs,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def stack_inits(init_fn, key, n: int):
+    """Initialize n copies of a layer with stacked (n, ...) leaves.
+
+    Returns a Px pytree whose values carry a leading layer axis and whose
+    specs carry a leading None.
+    """
+    keys = jax.random.split(key, n)
+    vals0 = init_fn(keys[0])
+    values, specs = split_tree(vals0)
+    stacked = jax.vmap(lambda k: split_tree(init_fn(k))[0])(keys)
+    specs = prepend_axis_specs(specs, None)
+    return jax.tree_util.tree_map(
+        lambda v, s: Px(v, s), stacked, specs,
+        is_leaf=lambda x: isinstance(x, P))

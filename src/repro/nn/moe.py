@@ -1,0 +1,169 @@
+"""Feed-forward blocks: gated MLPs and Mixture-of-Experts.
+
+MoE uses a *sort-based dropless-ish dispatch* (TPU adaptation): tokens are
+routed top-k, assigned capacity slots via a cumulative-count within each
+expert, gathered into (E, C, d) buffers with one scatter, processed by a
+batched expert matmul (MXU-friendly), and combined with gather + weighted
+sum.  FLOPs are proportional to *active* experts (capacity drops overflow),
+unlike one-hot "soft" dispatch whose einsum touches every expert.
+
+Sharding: expert weights (E, d, f)
+  * expert-parallel  P('model', None, None)  when E >= model-axis size
+    (arctic-480b: 128 experts / 16-way axis)
+  * ffn-parallel     P(None, None, 'model')  otherwise (grok-1: 8 experts)
+
+A router load-balance auxiliary loss (Switch-style) is returned so training
+can regularize routing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .module import Px, dense, init_dense, param
+
+__all__ = ["MlpConfig", "init_mlp", "mlp", "MoeConfig", "init_moe", "moe"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpConfig:
+    d_model: int
+    d_ff: int
+    activation: str = "silu"   # 'silu' (gated), 'gelu' (gated), 'relu2', 'gelu_plain'
+
+
+def _act(name: str, x):
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu2":
+        return jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def init_mlp(key, cfg: MlpConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    gated = cfg.activation in ("silu", "gelu")
+    p = {
+        "w_in": init_dense(k1, cfg.d_model, cfg.d_ff, (None, "model")),
+        "w_out": init_dense(k2, cfg.d_ff, cfg.d_model, ("model", None)),
+    }
+    if gated:
+        p["w_gate"] = init_dense(k3, cfg.d_model, cfg.d_ff, (None, "model"))
+    return p
+
+
+def mlp(p, cfg: MlpConfig, x):
+    if "w_gate" in p:
+        h = _act(cfg.activation, dense(p["w_gate"], x)) * dense(p["w_in"], x)
+    else:
+        act = "gelu" if cfg.activation == "gelu_plain" else cfg.activation
+        h = _act(act, dense(p["w_in"], x))
+    return dense(p["w_out"], h)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MoeConfig:
+    d_model: int
+    d_ff: int
+    n_experts: int
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    activation: str = "silu"
+    dense_residual: bool = False      # arctic: parallel dense MLP
+    dense_d_ff: Optional[int] = None  # hidden of the residual MLP
+    expert_parallel_threshold: int = 16
+
+    @property
+    def expert_spec(self):
+        if self.n_experts >= self.expert_parallel_threshold:
+            return ("model", None, None)     # expert-parallel
+        return (None, None, "model")         # ffn-parallel
+
+
+def init_moe(key, cfg: MoeConfig):
+    ks = jax.random.split(key, 6)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    sp = cfg.expert_spec
+    sp_out = (sp[0], sp[2], sp[1]) if sp[0] is None else ("model", None, None)
+    scale = 1.0 / np.sqrt(d)
+    p = {
+        "router": init_dense(ks[0], d, e, (None, None), scale=scale),
+        "w_gate": param(ks[1], (e, d, f), sp, scale),
+        "w_in": param(ks[2], (e, d, f), sp, scale),
+        "w_out": param(ks[3], (e, f, d), sp_out, 1.0 / np.sqrt(f)),
+    }
+    if cfg.dense_residual:
+        p["dense_mlp"] = init_mlp(
+            ks[4], MlpConfig(d, cfg.dense_d_ff or f, cfg.activation))
+    return p
+
+
+def moe(p, cfg: MoeConfig, x) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss).
+
+    Sort-free capacity assignment: position of token t in expert e's buffer is
+    the count of earlier tokens routed to e (cumsum of one-hot); tokens past
+    capacity are dropped (their combine weight contribution is zero), which is
+    the standard Switch/GShard behaviour.
+    """
+    b, s, d = x.shape
+    n_tok = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    cap = int(np.ceil(cfg.capacity_factor * n_tok * k / e))
+    cap = max(cap, 1)
+
+    xt = x.reshape(n_tok, d)
+    logits = dense(p["router"], xt.astype(jnp.float32))       # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)             # (T, k)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+
+    # ---- capacity slot assignment ----------------------------------------
+    flat_expert = gate_idx.reshape(-1)                         # (T*k,)
+    onehot = jax.nn.one_hot(flat_expert, e, dtype=jnp.int32)   # (T*k, E)
+    pos_in_expert = jnp.cumsum(onehot, axis=0) - onehot        # exclusive
+    slot = jnp.sum(pos_in_expert * onehot, axis=-1)            # (T*k,)
+    keep = slot < cap
+    dest = jnp.where(keep, flat_expert * cap + slot, e * cap)  # overflow bin
+
+    # ---- dispatch: scatter tokens into (E*C+1, d) -------------------------
+    xk = jnp.repeat(xt, k, axis=0)                             # (T*k, d)
+    buf = jnp.zeros((e * cap + 1, d), xt.dtype).at[dest].set(xk)
+    buf = buf[: e * cap].reshape(e, cap, d)
+
+    # ---- expert compute (batched over E; MXU matmuls) ---------------------
+    gate_h = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(buf.dtype))
+    in_h = jnp.einsum("ecd,edf->ecf", buf, p["w_in"].astype(buf.dtype))
+    h = _act(cfg.activation, gate_h) * in_h
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_out"].astype(buf.dtype))
+
+    # ---- combine: gather back + weighted sum over k -----------------------
+    out_flat = out_buf.reshape(e * cap, d)
+    gathered = jnp.where(keep[:, None],
+                         out_flat[jnp.minimum(dest, e * cap - 1)], 0.0)
+    weighted = gathered.reshape(n_tok, k, d) * gate_vals[..., None].astype(x.dtype)
+    out = jnp.sum(weighted, axis=1).reshape(b, s, d)
+
+    # ---- Switch load-balance aux loss -------------------------------------
+    me = jnp.mean(probs, axis=0)                                # (E,)
+    ce = jnp.mean(
+        jax.nn.one_hot(gate_idx[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = e * jnp.sum(me * ce)
+
+    if "dense_mlp" in p:
+        dcfg = MlpConfig(cfg.d_model, cfg.dense_d_ff or cfg.d_ff,
+                         cfg.activation)
+        out = out + mlp(p["dense_mlp"], dcfg, x)
+    return out, aux

@@ -1,0 +1,392 @@
+"""Linear-recurrence token mixers: RWKV6 (Finch) and Mamba2 (SSD).
+
+Both are trained/prefilled with a *chunked* parallel form (intra-chunk
+matmuls on the MXU + an inter-chunk `lax.scan` over states) and decoded with
+the exact O(1)-state recurrence.  The chunked forms are exact (tested against
+the per-token scan references below).
+
+Numerics (TPU adaptation, documented in DESIGN.md):
+* RWKV6's decay is per-channel, so the chunk factorization
+  qk[t,s] = <r_t * exp(la_{t-1}), k_s * exp(-la_s)> needs the per-chunk
+  cumulative log-decay `la` to stay within float32 exp range.  We clamp
+  log w to [-5, -1e-6] and use chunk = 16, bounding |la| <= 80
+  (exp(+-80) is representable in f32 and the combined products are <= 1).
+* Mamba2's decay is scalar per head, so the (c, c) decay matrix
+  exp(la_t - la_s) (t >= s, exponent <= 0) is built directly -- no
+  factorization, no overflow; chunk = 64.
+
+RWKV6 recurrence (head dim N):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    o_t = r_t S_{t-1} + (r_t . (u * k_t)) v_t
+Mamba2 / SSD recurrence (head dim P, state N):
+    h_t = a_t h_{t-1} + (dt_t x_t) B_t^T
+    y_t = h_t C_t + D x_t
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .module import Px, dense, init_dense, init_layernorm, layernorm, param
+
+__all__ = [
+    "Rwkv6Config", "init_rwkv6_block", "rwkv6_block", "rwkv6_decode",
+    "init_rwkv6_state", "rwkv_scan_ref",
+    "Mamba2Config", "init_mamba2_block", "mamba2_block", "mamba2_decode",
+    "init_mamba2_state", "ssd_scan_ref",
+]
+
+LOGW_MIN, LOGW_MAX = -5.0, -1e-6
+RWKV_CHUNK = 16
+SSD_CHUNK = 64
+
+
+# ===========================================================================
+# RWKV6
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class Rwkv6Config:
+    d_model: int
+    head_dim: int = 64
+    decay_lora: int = 64
+    d_ff: int = 0           # channel-mix hidden (0 -> 3.5x d_model)
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+    @property
+    def ffn_dim(self) -> int:
+        return self.d_ff or int(3.5 * self.d_model)
+
+
+def init_rwkv6_block(key, cfg: Rwkv6Config):
+    ks = jax.random.split(key, 12)
+    d, h, n = cfg.d_model, cfg.n_heads, cfg.head_dim
+    return {
+        # --- time mix (attention analogue) ---
+        "mu": param(ks[0], (5, d), (None, None), 0.5, mode="uniform"),
+        "wr": init_dense(ks[1], d, d, (None, "model")),
+        "wk": init_dense(ks[2], d, d, (None, "model")),
+        "wv": init_dense(ks[3], d, d, (None, "model")),
+        "wg": init_dense(ks[4], d, d, (None, "model")),
+        "w0": param(ks[5], (d,), (None,), 0.5, mode="uniform"),
+        "w_lora_a": init_dense(ks[6], d, cfg.decay_lora, (None, None)),
+        "w_lora_b": init_dense(ks[7], cfg.decay_lora, d, (None, "model"),
+                               scale=0.01),
+        "u": param(ks[8], (h, n), ("model", None), 0.3, mode="uniform"),
+        "out_norm": init_layernorm(ks[8], d),
+        "wo": init_dense(ks[9], d, d, ("model", None)),
+        # --- channel mix ---
+        "mu_c": param(ks[10], (2, d), (None, None), 0.5, mode="uniform"),
+        "ck": init_dense(ks[11], d, cfg.ffn_dim, (None, "model")),
+        "cr": init_dense(ks[11], d, d, (None, None)),
+        "cv": init_dense(ks[11], cfg.ffn_dim, d, ("model", None)),
+    }
+
+
+def _token_shift(x, shift_state):
+    """x: (B,S,D); shift_state: (B,D) = last token of previous segment."""
+    prev = jnp.concatenate([shift_state[:, None, :], x[:, :-1, :]], axis=1)
+    return prev
+
+
+def _rwkv_rkvwg(p, cfg, x, prev):
+    """Projections with per-channel token-shift lerp (static mu; see DESIGN)."""
+    mu = p["mu"].astype(x.dtype)  # (5, d) for r,k,v,w,g
+    mix = [x + (prev - x) * mu[i] for i in range(5)]
+    b, s, d = x.shape
+    h, n = cfg.n_heads, cfg.head_dim
+    r = dense(p["wr"], mix[0]).reshape(b, s, h, n)
+    k = dense(p["wk"], mix[1]).reshape(b, s, h, n)
+    v = dense(p["wv"], mix[2]).reshape(b, s, h, n)
+    logw_raw = p["w0"].astype(jnp.float32) + dense(
+        p["w_lora_b"], jnp.tanh(dense(p["w_lora_a"], mix[3]))).astype(jnp.float32)
+    # data-dependent decay w = exp(-softplus(.)) in (0,1); clamp for chunk form
+    logw = jnp.clip(-jax.nn.softplus(-logw_raw), LOGW_MIN, LOGW_MAX)
+    logw = logw.reshape(b, s, h, n)
+    g = jax.nn.silu(dense(p["wg"], mix[4]))
+    return r, k, v, logw, g
+
+
+def _rwkv_chunk_scan(r, k, v, logw, u, s0):
+    """Exact chunked RWKV6 linear attention.
+
+    r,k,v,logw: (B, S, H, N) with S % CHUNK == 0; u: (H, N);
+    s0: (B, H, N, N) initial state.  Returns (o, s_final).
+    """
+    b, s, h, n = r.shape
+    c = RWKV_CHUNK
+    nc = s // c
+    rs = r.reshape(b, nc, c, h, n).astype(jnp.float32)
+    ks = k.reshape(b, nc, c, h, n).astype(jnp.float32)
+    vs = v.reshape(b, nc, c, h, n).astype(jnp.float32)
+    lw = logw.reshape(b, nc, c, h, n).astype(jnp.float32)
+    la = jnp.cumsum(lw, axis=2)                      # (B,NC,C,H,N) inclusive
+    la_prev = la - lw                                # exclusive cumsum
+    la_end = la[:, :, -1:, :, :]                     # (B,NC,1,H,N)
+
+    rq = rs * jnp.exp(la_prev)                       # r_t * exp(la_{t-1})
+    kk = ks * jnp.exp(-la)                           # k_s * exp(-la_s)
+    kend = ks * jnp.exp(la_end - la)                 # k_s * exp(la_C - la_s)
+
+    # intra-chunk quadratic part: strictly lower-triangular + u-bonus diag
+    qk = jnp.einsum("bnthd,bnshd->bnhts", rq, kk)    # (B,NC,H,C,C)
+    tri = jnp.tril(jnp.ones((c, c), jnp.float32), k=-1)
+    qk = qk * tri
+    bonus = jnp.einsum("bnthd,hd,bnthd->bnth", rs, u.astype(jnp.float32), ks)
+    o_intra = jnp.einsum("bnhts,bnshd->bnthd", qk, vs)
+    o_intra = o_intra + bonus[..., None] * vs
+
+    # reshape to scan over chunk axis
+    rq_t = rq.transpose(1, 0, 2, 3, 4)               # (NC,B,C,H,N)
+    kend_t = kend.transpose(1, 0, 2, 3, 4)
+    v_t = vs.transpose(1, 0, 2, 3, 4)
+    la_end_t = la_end.transpose(1, 0, 2, 3, 4)       # (NC,B,1,H,N)
+
+    def scan_step(s_prev, inp):
+        rq_c, kend_c, v_c, lae_c = inp               # (B,C,H,N) / (B,1,H,N)
+        o_inter = jnp.einsum("bthk,bhkv->bthv", rq_c, s_prev)
+        outer = jnp.einsum("bthk,bthv->bhkv", kend_c, v_c)
+        decay = jnp.exp(lae_c[:, 0])                 # (B,H,N) on the k-dim
+        s_new = s_prev * decay[..., None] + outer
+        return s_new, o_inter
+
+    s_final, o_inter = jax.lax.scan(
+        scan_step, s0.astype(jnp.float32), (rq_t, kend_t, v_t, la_end_t))
+    o_inter = o_inter.transpose(1, 0, 2, 3, 4)       # (B,NC,C,H,N)
+    o = (o_intra + o_inter).reshape(b, s, h, n)
+    return o, s_final
+
+
+def rwkv_scan_ref(r, k, v, logw, u, s0):
+    """Per-token recurrent reference (exact; used by tests and decode)."""
+    b, s, h, n = r.shape
+
+    def step(state, t):
+        rt, kt, vt, wt = (r[:, t].astype(jnp.float32),
+                          k[:, t].astype(jnp.float32),
+                          v[:, t].astype(jnp.float32),
+                          jnp.exp(logw[:, t].astype(jnp.float32)))
+        ot = jnp.einsum("bhk,bhkv->bhv", rt, state)
+        bonus = jnp.einsum("bhk,hk,bhk->bh", rt, u.astype(jnp.float32), kt)
+        ot = ot + bonus[..., None] * vt
+        state = state * wt[..., None] + kt[..., None] * vt[:, :, None, :]
+        return state, ot
+
+    s_fin, o = jax.lax.scan(step, s0.astype(jnp.float32), jnp.arange(s))
+    return o.transpose(1, 0, 2, 3), s_fin
+
+
+def init_rwkv6_state(batch: int, cfg: Rwkv6Config, dtype=jnp.float32):
+    h, n, d = cfg.n_heads, cfg.head_dim, cfg.d_model
+    return {"S": jnp.zeros((batch, h, n, n), dtype),
+            "shift_t": jnp.zeros((batch, d), dtype),
+            "shift_c": jnp.zeros((batch, d), dtype)}
+
+
+def rwkv6_block(p, cfg: Rwkv6Config, x, state: Optional[Dict] = None,
+                chunked: bool = True):
+    """Full time-mix + channel-mix over a sequence.  x: (B,S,D).
+
+    Returns (y, final_state).  S must be a multiple of RWKV_CHUNK when
+    ``chunked`` (pad upstream).
+    """
+    b, s, d = x.shape
+    if state is None:
+        state = init_rwkv6_state(b, cfg)
+    prev = _token_shift(x, state["shift_t"].astype(x.dtype))
+    r, k, v, logw, g = _rwkv_rkvwg(p, cfg, x, prev)
+    u = p["u"]
+    if chunked and s % RWKV_CHUNK == 0 and s > 1:
+        o, s_fin = _rwkv_chunk_scan(r, k, v, logw, u, state["S"])
+    else:
+        o, s_fin = rwkv_scan_ref(r, k, v, logw, u, state["S"])
+    o = o.reshape(b, s, d).astype(x.dtype)
+    o = layernorm(p["out_norm"], o) * g
+    y = x + dense(p["wo"], o)
+
+    # channel mix
+    prev_c = _token_shift(y, state["shift_c"].astype(x.dtype))
+    mu_c = p["mu_c"].astype(x.dtype)
+    xr = y + (prev_c - y) * mu_c[0]
+    xk = y + (prev_c - y) * mu_c[1]
+    hidden = jnp.square(jax.nn.relu(dense(p["ck"], xk)))
+    out = jax.nn.sigmoid(dense(p["cr"], xr)) * dense(p["cv"], hidden)
+    y2 = y + out
+    new_state = {"S": s_fin, "shift_t": x[:, -1, :].astype(jnp.float32),
+                 "shift_c": y[:, -1, :].astype(jnp.float32)}
+    return y2, new_state
+
+
+def rwkv6_decode(p, cfg: Rwkv6Config, x, state):
+    """One-token step.  x: (B,1,D)."""
+    return rwkv6_block(p, cfg, x, state, chunked=False)
+
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    d_conv: int = 4
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def init_mamba2_block(key, cfg: Mamba2Config):
+    ks = jax.random.split(key, 6)
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_heads
+    conv_ch = di + 2 * n
+    return {
+        # in_proj -> [z (di), x (di), B (n), C (n), dt (h)]
+        "w_in": init_dense(ks[0], d, 2 * di + 2 * n + h, (None, "model")),
+        "conv_w": param(ks[1], (cfg.d_conv, conv_ch), (None, "model"),
+                        1.0 / np.sqrt(cfg.d_conv)),
+        "conv_b": param(ks[1], (conv_ch,), ("model",), 0.0, mode="zeros"),
+        "a_log": param(ks[2], (h,), ("model",), 0.5, mode="uniform"),
+        "dt_bias": param(ks[3], (h,), ("model",), 0.5, mode="uniform"),
+        "d_skip": param(ks[4], (h,), ("model",), 1.0, mode="ones"),
+        "out_norm": init_layernorm(ks[4], di),
+        "w_out": init_dense(ks[5], di, d, ("model", None)),
+    }
+
+
+def _ssd_chunk_scan(xh, bmat, cmat, dla, h0):
+    """Exact chunked SSD.
+
+    xh: (B,S,H,P) dt-scaled inputs; bmat/cmat: (B,S,N); dla: (B,S,H)
+    *per-step* log-decay (log a_t); h0: (B,H,P,N).  Returns (y, h_final).
+    """
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    c = min(SSD_CHUNK, s)
+    nc = s // c
+    xs = xh.reshape(b, nc, c, h, p).astype(jnp.float32)
+    bs = bmat.reshape(b, nc, c, n).astype(jnp.float32)
+    cs = cmat.reshape(b, nc, c, n).astype(jnp.float32)
+    # cumulative decay, re-zeroed at every chunk boundary
+    dl = dla.reshape(b, nc, c, h).astype(jnp.float32)
+    lrel = jnp.cumsum(dl, axis=2)      # inclusive, relative to chunk start
+    lrel_prev = lrel - dl              # exclusive (unused; kept for clarity)
+    del lrel_prev
+    lend = lrel[:, :, -1:, :]
+
+    # intra-chunk: y[t] += sum_{s<=t} exp(lrel_t - lrel_s) (C_t.B_s) xh_s
+    dmat = lrel[:, :, :, None, :] - lrel[:, :, None, :, :]   # (B,NC,C,C,H)
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    dmat = jnp.where(tri[None, None, :, :, None], dmat, -jnp.inf)
+    dec = jnp.exp(dmat)
+    cb = jnp.einsum("bntk,bnsk->bnts", cs, bs)               # (B,NC,C,C)
+    m = cb[:, :, :, :, None] * dec                           # (B,NC,C,C,H)
+    y_intra = jnp.einsum("bntsh,bnshp->bnthp", m, xs)
+
+    # inter-chunk state scan.  y_t reads h_t (inclusive of step t's decay),
+    # so the state contribution carries exp(lrel_t), not exp(lrel_{t-1}).
+    kend = jnp.exp(lend - lrel)                              # (B,NC,C,H)
+    xdec = xs * kend[..., None]                              # decayed inputs
+    outer = jnp.einsum("bnchp,bnck->bnhpk", xdec, bs)        # (B,NC,H,P,N)
+    cin = jnp.exp(lrel)                                      # (B,NC,C,H)
+
+    def scan_step(h_prev, inp):
+        outer_c, lend_c, cs_c, cin_c = inp
+        y_inter = jnp.einsum("bck,bhpk,bch->bchp", cs_c, h_prev, cin_c)
+        h_new = h_prev * jnp.exp(lend_c)[:, 0, :, None, None] + outer_c
+        return h_new, y_inter
+
+    h_fin, y_inter = jax.lax.scan(
+        scan_step, h0.astype(jnp.float32),
+        (outer.transpose(1, 0, 2, 3, 4), lend.transpose(1, 0, 2, 3),
+         cs.transpose(1, 0, 2, 3), cin.transpose(1, 0, 2, 3)))
+    y_inter = y_inter.transpose(1, 0, 2, 3, 4)               # (B,NC,C,H,P)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, h_fin
+
+
+def ssd_scan_ref(xh, bmat, cmat, dla, h0):
+    """Per-token SSD reference.  dla: (B,S,H) per-step log-decay."""
+    b, s, h, p = xh.shape
+
+    def step(state, t):
+        a_t = jnp.exp(dla[:, t].astype(jnp.float32))             # (B,H)
+        outer = jnp.einsum("bhp,bk->bhpk", xh[:, t].astype(jnp.float32),
+                           bmat[:, t].astype(jnp.float32))
+        state = state * a_t[..., None, None] + outer
+        y = jnp.einsum("bk,bhpk->bhp", cmat[:, t].astype(jnp.float32), state)
+        return state, y
+
+    h_fin, y = jax.lax.scan(step, h0.astype(jnp.float32), jnp.arange(s))
+    return y.transpose(1, 0, 2, 3), h_fin
+
+
+def init_mamba2_state(batch: int, cfg: Mamba2Config, dtype=jnp.float32):
+    conv_ch = cfg.d_inner + 2 * cfg.d_state
+    return {"h": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+                           dtype),
+            "conv": jnp.zeros((batch, cfg.d_conv - 1, conv_ch), dtype)}
+
+
+def _causal_conv(seq, w, b, conv_state):
+    """Depthwise causal conv1d.  seq: (B,S,C); w: (K,C); returns (y, new_state)."""
+    k = w.shape[0]
+    padded = jnp.concatenate([conv_state.astype(seq.dtype), seq], axis=1)
+    out = sum(padded[:, i: i + seq.shape[1], :] * w[i].astype(seq.dtype)
+              for i in range(k))
+    new_state = padded[:, -(k - 1):, :] if k > 1 else conv_state
+    return out + b.astype(seq.dtype), new_state
+
+
+def mamba2_block(p, cfg: Mamba2Config, x, state: Optional[Dict] = None,
+                 chunked: bool = True):
+    """x: (B,S,D) -> (y, new_state)."""
+    b, s, d = x.shape
+    di, n, h, pd = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+    if state is None:
+        state = init_mamba2_state(b, cfg)
+    zxbcdt = dense(p["w_in"], x)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di: di + di + 2 * n]
+    dt_raw = zxbcdt[..., -h:]
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                   state["conv"])
+    xbc = jax.nn.silu(xbc)
+    xin = xbc[..., :di].reshape(b, s, h, pd)
+    bmat = xbc[..., di: di + n]
+    cmat = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,S,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))               # (H,) negative
+    dla = dt * a[None, None, :]                                # per-step log a
+    xh = xin.astype(jnp.float32) * dt[..., None]
+    if chunked and s % SSD_CHUNK == 0 and s > 1:
+        y, h_fin = _ssd_chunk_scan(xh, bmat, cmat, dla, state["h"])
+    else:
+        y, h_fin = ssd_scan_ref(xh, bmat, cmat, dla, state["h"])
+    y = y + xin.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = layernorm(p["out_norm"], y * jax.nn.silu(z))
+    out = dense(p["w_out"], y)
+    new_state = {"h": h_fin, "conv": conv_state.astype(jnp.float32)}
+    return out, new_state
+
+
+def mamba2_decode(p, cfg: Mamba2Config, x, state):
+    return mamba2_block(p, cfg, x, state, chunked=False)

@@ -1,0 +1,160 @@
+"""Unit + property tests for clipping (Def. 2 / Remark 1), mixing matrices
+(Def. 1) and the privacy accountant (Theorem 1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import clipping as CL
+from repro.core import mixing as MX
+from repro.core import privacy as PV
+
+
+# ---------------------------------------------------------------------------
+# clipping
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 500), st.integers(0, 10**6),
+       st.floats(0.1, 10.0))
+@settings(max_examples=30, deadline=None)
+def test_smooth_clip_strict_bound(d, seed, tau):
+    x = jax.random.normal(jax.random.PRNGKey(seed % 997), (d,)) * 10
+    y = CL.smooth_clip(x, tau)
+    assert float(jnp.linalg.norm(y)) < tau + 1e-5  # strictly inside the ball
+
+
+@given(st.integers(1, 500), st.integers(0, 10**6), st.floats(0.1, 10.0))
+@settings(max_examples=30, deadline=None)
+def test_piecewise_clip_bound_and_identity(d, seed, tau):
+    x = jax.random.normal(jax.random.PRNGKey(seed % 997), (d,))
+    y = CL.piecewise_clip(x, tau)
+    assert float(jnp.linalg.norm(y)) <= tau * (1 + 1e-5)
+    if float(jnp.linalg.norm(x)) <= tau:
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=1e-6)
+
+
+def test_clip_direction_preserved():
+    x = jnp.asarray([3.0, 4.0])
+    for mode in ("smooth", "piecewise"):
+        y = CL.tree_clip({"a": x}, 1.0, mode)["a"]
+        cos = float(jnp.dot(x, y) / (jnp.linalg.norm(x) * jnp.linalg.norm(y)))
+        assert cos > 1 - 1e-6
+
+
+def test_clipped_grad_accumulate_matches_manual():
+    def loss(p, batch):
+        x, y = batch
+        pred = x @ p["w"]
+        return jnp.mean((pred - y) ** 2)
+
+    k = jax.random.PRNGKey(0)
+    p = {"w": jax.random.normal(k, (5,))}
+    xb = jax.random.normal(jax.random.PRNGKey(1), (7, 5))
+    yb = jax.random.normal(jax.random.PRNGKey(2), (7,))
+    g, _ = CL.clipped_grad_accumulate(loss, p, (xb, yb), tau=0.5)
+    manual = jnp.zeros(5)
+    for i in range(7):
+        gi = jax.grad(loss)(p, (xb[i:i + 1], yb[i:i + 1]))["w"]
+        manual = manual + CL.smooth_clip(gi, 0.5)
+    np.testing.assert_allclose(np.asarray(g["w"]), np.asarray(manual / 7),
+                               rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# mixing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["ring", "torus", "erdos_renyi", "complete",
+                                  "star"])
+@pytest.mark.parametrize("weights", ["metropolis", "best_constant", "lazy"])
+def test_mixing_matrix_definition1(kind, weights):
+    top = MX.make_topology(kind, 12, weights=weights, seed=3)
+    w = top.w
+    np.testing.assert_allclose(w.sum(0), 1.0, atol=1e-9)
+    np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-9)
+    # graph constraint: w_ij = 0 when not connected (off-diagonal)
+    off = ~np.eye(12, dtype=bool)
+    disconnected = (top.adjacency == 0) & off
+    assert np.all(np.abs(w[disconnected]) < 1e-12)
+    assert 0.0 <= top.alpha < 1.0  # connected graph mixes
+
+
+def test_better_connectivity_smaller_alpha():
+    ring = MX.make_topology("ring", 16)
+    er = MX.make_topology("erdos_renyi", 16, p=0.8, seed=0)
+    comp = MX.make_topology("complete", 16)
+    assert comp.alpha < er.alpha < ring.alpha
+    assert comp.alpha < 1e-9  # complete + metropolis = exact averaging
+
+
+def test_best_constant_beats_metropolis_on_ring():
+    m = MX.make_topology("ring", 16, weights="metropolis")
+    b = MX.make_topology("ring", 16, weights="best_constant")
+    assert b.alpha <= m.alpha + 1e-12
+
+
+def test_ring_detection():
+    assert MX.make_topology("ring", 8).is_banded_ring()
+    assert not MX.make_topology("erdos_renyi", 8, seed=1).is_banded_ring()
+
+
+def test_mixing_contracts_disagreement():
+    """One gossip step contracts ||X - xbar|| by at least alpha."""
+    top = MX.make_topology("erdos_renyi", 10, p=0.8, seed=1)
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(10, 7))
+    xbar = x.mean(0, keepdims=True)
+    mixed = top.w @ x
+    num = np.linalg.norm(mixed - mixed.mean(0, keepdims=True))
+    den = np.linalg.norm(x - xbar)
+    assert num <= top.alpha * den + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# privacy
+# ---------------------------------------------------------------------------
+
+def test_sigma_calibration_eq5():
+    tau, T, m, eps, delta = 1.0, 10000, 3000, 0.1, 1e-3
+    sigma = PV.calibrate_sigma(tau, T, m, eps, delta)
+    # Eq. (5): sigma^2 = T tau^2 log(1/delta) / (m eps)^2
+    np.testing.assert_allclose(
+        sigma ** 2, T * tau ** 2 * np.log(1 / delta) / (m * eps) ** 2,
+        rtol=1e-12)
+    # equivalently T tau^2 phi_m^2 / d
+    d = 123
+    phi = PV.phi_m(d, m, eps, delta)
+    np.testing.assert_allclose(sigma ** 2, T * tau ** 2 * phi ** 2 / d,
+                               rtol=1e-12)
+
+
+def test_accountant_monotonicity():
+    base = dict(tau=1.0, T=2000, m=3000, delta=1e-3)
+    e1 = PV.ldp_epsilon(sigma_p=PV.calibrate_sigma(1.0, 2000, 3000, 0.1, 1e-3),
+                        **base)
+    e2 = PV.ldp_epsilon(sigma_p=2 * PV.calibrate_sigma(1.0, 2000, 3000, 0.1,
+                                                       1e-3), **base)
+    assert e2 < e1  # more noise, more privacy
+    e3 = PV.ldp_epsilon(
+        sigma_p=PV.calibrate_sigma(1.0, 2000, 3000, 0.1, 1e-3),
+        tau=1.0, T=4000, m=3000, delta=1e-3)
+    assert e3 > e1  # more steps leak more
+
+
+def test_theorem1_sigma_achieves_target_order():
+    """Theorem-1 noise gives eps' = O(eps) under the moments accountant."""
+    tau, m, delta = 1.0, 5000, 1e-3
+    for eps in (0.05, 0.1, 0.5):
+        T = 20000
+        sigma = PV.calibrate_sigma(tau, T, m, eps, delta)
+        eps_acct = PV.ldp_epsilon(tau, sigma, T, m, delta)
+        assert eps_acct <= 4.0 * eps  # within the theorem's constant factor
+
+
+def test_accountant_delta_inverse():
+    acct = PV.MomentsAccountant(q=1e-3, noise_multiplier=4.0)
+    acct.step(1000)
+    eps = acct.epsilon(1e-5)
+    assert acct.delta(eps) <= 1e-5 * 1.01

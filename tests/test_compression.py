@@ -1,0 +1,96 @@
+"""Property tests: every compressor satisfies Definition 3,
+E||C(x) - x||^2 <= (1 - rho) ||x||^2, plus scheme-specific facts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression as C
+
+
+def _rand(seed, d):
+    return jax.random.normal(jax.random.PRNGKey(seed), (d,))
+
+
+@pytest.mark.parametrize("name,kwargs,rho", [
+    ("identity", {}, 1.0),
+    ("top_k", {"frac": 0.1}, 0.1),
+    ("top_k", {"frac": 0.05}, 0.05),
+    ("block_top_k", {"frac": 0.1, "block": 64}, 0.1),
+])
+def test_deterministic_contract(name, kwargs, rho):
+    comp = C.make_compressor(name, **kwargs)
+    for seed in range(5):
+        x = _rand(seed, 997)
+        y = comp(None, x)
+        err = float(jnp.sum((y - x) ** 2))
+        nrm = float(jnp.sum(x ** 2))
+        assert err <= (1 - rho) * nrm + 1e-5 * nrm
+
+
+@pytest.mark.parametrize("name,kwargs,rho", [
+    ("random_k", {"frac": 0.2}, 0.2),
+    ("qsgd", {"levels": 8}, None),
+])
+def test_randomized_contract_in_expectation(name, kwargs, rho):
+    comp = C.make_compressor(name, **kwargs)
+    d = 512
+    x = _rand(0, d)
+    keys = jax.random.split(jax.random.PRNGKey(1), 200)
+    errs = jnp.stack([jnp.sum((comp(k, x) - x) ** 2) for k in keys])
+    mean_err = float(jnp.mean(errs))
+    nrm = float(jnp.sum(x ** 2))
+    if rho is None:  # qsgd: rho depends on d
+        omega = min(np.sqrt(d) / 8, d / 64)
+        rho = 1.0 / (1.0 + omega)
+    # 200 trials: allow 10% statistical slack
+    assert mean_err <= (1 - rho) * nrm * 1.10 + 1e-6
+
+
+@given(st.integers(1, 4000), st.integers(0, 2**31 - 1),
+       st.sampled_from([0.01, 0.05, 0.25, 1.0]))
+@settings(max_examples=25, deadline=None)
+def test_topk_contract_hypothesis(d, seed, frac):
+    comp = C.make_compressor("top_k", frac=frac)
+    x = _rand(seed % 1000, d)
+    y = comp(None, x)
+    k = max(int(round(frac * d)), 1)
+    assert int(jnp.sum(y != 0)) <= k
+    err = float(jnp.sum((y - x) ** 2))
+    assert err <= (1 - min(frac, k / d)) * float(jnp.sum(x ** 2)) + 1e-4
+
+
+def test_topk_keeps_largest():
+    x = jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05])
+    y = C.make_compressor("top_k", frac=0.4)(None, x)
+    np.testing.assert_allclose(y, [0.0, -5.0, 0.0, 3.0, 0.0])
+
+
+def test_pack_unpack_roundtrip():
+    x = _rand(3, 300)
+    comp = C.make_compressor("top_k", frac=0.1)
+    dense = comp(None, x)
+    vals, idx = C.topk_pack(x, k=30)
+    recon = C.topk_unpack(vals, idx, 300)
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(dense),
+                               rtol=1e-6)
+
+
+def test_compress_tree_per_agent_streams():
+    """Agent rows get independent randomness and per-row compression."""
+    comp = C.make_compressor("random_k", frac=0.5)
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(0), (4, 64))}
+    out = C.compress_tree(comp, jax.random.PRNGKey(1), tree)["w"]
+    masks = np.asarray(out != 0)
+    assert masks.shape == (4, 64)
+    assert not all(np.array_equal(masks[0], masks[i]) for i in range(1, 4))
+
+
+def test_wire_bits_accounting():
+    comp = C.make_compressor("top_k", frac=0.05)
+    d = 10000
+    bits = comp.wire_bits(d)
+    assert bits < 32 * d * 0.1  # ~20x reduction
+    assert C.make_compressor("identity").wire_bits(d) == 32 * d

@@ -1,0 +1,141 @@
+"""Pin the assigned architecture configs to the assignment sheet, and unit-
+test the launcher plumbing (shape registry, cache spec rules, HLO collective
+parser, wire-byte accounting) without touching jax device state."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke
+from repro.core.gossip import gossip_wire_bytes
+from repro.launch import shapes as SH
+from repro.launch.dryrun import _shape_bytes, parse_collectives
+
+EXPECTED = {
+    # arch: (layers, d_model, heads, kv, d_ff, vocab)
+    "rwkv6-7b": (32, 4096, None, None, 14336, 65536),
+    "minicpm3-4b": (62, 2560, 40, 40, 6400, 73448),
+    "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+    "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+    "h2o-danube-3-4b": (24, 3840, 32, 8, 10240, 32000),
+    "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024),
+    "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+    "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+    "paligemma-3b": (18, 2048, 8, 1, 16384, 257216),
+    "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    L, d, h, kv, ff, v = EXPECTED[arch]
+    assert cfg.n_layers == L and cfg.d_model == d
+    assert cfg.d_ff == ff and cfg.vocab == v
+    if h is not None:
+        assert cfg.n_heads == h and cfg.n_kv_heads == kv
+
+
+def test_assignment_extras():
+    assert get_config("grok-1-314b").n_experts == 8
+    assert get_config("grok-1-314b").top_k == 2
+    assert get_config("arctic-480b").n_experts == 128
+    assert get_config("arctic-480b").dense_residual
+    assert get_config("minicpm3-4b").mla
+    assert get_config("h2o-danube-3-4b").window == 4096
+    assert get_config("chatglm3-6b").rotary_frac == 0.5
+    assert get_config("zamba2-7b").ssm_state == 64
+    assert get_config("paligemma-3b").n_prefix == 256
+    assert get_config("seamless-m4t-medium").n_enc_layers == 12
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_is_reduced(arch):
+    cfg = get_smoke(arch)
+    assert cfg.n_layers <= 8
+    assert cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+
+
+def test_shape_registry():
+    assert SH.SHAPES["train_4k"].seq_len == 4096
+    assert SH.SHAPES["train_4k"].global_batch == 256
+    assert SH.SHAPES["prefill_32k"].global_batch == 32
+    assert SH.SHAPES["decode_32k"].global_batch == 128
+    assert SH.SHAPES["long_500k"].seq_len == 524288
+    # long_500k applicability per DESIGN.md
+    runs = [a for a in ARCHS if SH.shape_applicable(a, "long_500k")]
+    assert sorted(runs) == sorted(["rwkv6-7b", "h2o-danube-3-4b",
+                                   "zamba2-7b"])
+    for a in ARCHS:
+        assert SH.shape_applicable(a, "train_4k")
+
+
+def test_train_batch_specs_shapes():
+    cfg = get_config("tinyllama-1.1b")
+    batch, specs = SH.train_batch_specs(cfg, SH.SHAPES["train_4k"], 16,
+                                        ("data",))
+    assert batch["tokens"].shape == (16, 16, 4096)
+    cfg = get_config("paligemma-3b")
+    batch, specs = SH.train_batch_specs(cfg, SH.SHAPES["train_4k"], 16,
+                                        ("data",))
+    assert batch["tokens"].shape == (16, 16, 4096 - 256)
+    assert batch["patches"].shape == (16, 16, 256, 1152)
+    cfg = get_config("seamless-m4t-medium")
+    batch, specs = SH.train_batch_specs(cfg, SH.SHAPES["train_4k"], 32,
+                                        ("pod", "data"))
+    assert batch["frames"].shape == (32, 8, 2048, 1024)
+
+
+def test_cache_pspec_rules():
+    from jax.sharding import PartitionSpec as P
+    cache = {
+        "k": jax.ShapeDtypeStruct((22, 128, 32768, 4, 64), jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct((22, 128, 32768, 4, 64), jnp.bfloat16),
+        "positions": jax.ShapeDtypeStruct((22, 128, 4096), jnp.int32),
+        "S": jax.ShapeDtypeStruct((32, 1, 64, 64, 64), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((81, 128, 3, 7296), jnp.float32),
+    }
+    specs = SH.cache_pspecs(cache, ("data",), 16)
+    assert specs["k"] == P(None, "data", "model", None, None)
+    assert specs["positions"] == P(None, "data", None)
+    assert specs["S"] == P(None, None, "model", None, None)  # B=1
+    assert specs["conv"] == P(None, "data", None, "model")
+
+
+def test_hlo_shape_bytes_and_collective_parser():
+    assert _shape_bytes("bf16[16,2048]{1,0}") == 16 * 2048 * 2
+    assert _shape_bytes("(f32[8,4]{1,0}, s32[8]{0})") == 8 * 4 * 4 + 8 * 4
+    hlo = """
+      %ag = f32[16,1024]{1,0} all-gather(f32[1,1024] %p), dims={0}
+      %ar.1 = bf16[512]{0} all-reduce(bf16[512] %x), to_apply=%add
+      %cp = f32[4,4]{1,0} collective-permute(f32[4,4] %y), pairs={{0,1}}
+      %ag2 = f32[8]{0} all-gather-start(f32[1] %q)
+      %agd = f32[8]{0} all-gather-done(f32[8] %ag2)
+      %normal = f32[2]{0} add(f32[2] %a, f32[2] %b)
+    """
+    out = parse_collectives(hlo)
+    assert out["all-gather"]["count"] == 2          # ag + ag-start, not -done
+    assert out["all-gather"]["bytes"] == 16 * 1024 * 4 + 8 * 4
+    assert out["all-reduce"]["bytes"] == 512 * 2
+    assert out["collective-permute"]["count"] == 1
+
+
+def test_gossip_wire_accounting():
+    d, n = 1_000_000, 16
+    dense = gossip_wire_bytes("dense", n, d)
+    ring = gossip_wire_bytes("ring", n, d)
+    packed = gossip_wire_bytes("packed", n, d, frac=0.05)
+    assert dense == n * d * 4
+    assert ring == 2 * d * 4                         # n-independent
+    assert packed == pytest.approx(n * 0.05 * d * 8)
+    # at rho=0.05, n=16: packed (n*rho*2x) beats ring (2x dense payload)
+    assert packed < ring < dense
+
+
+def test_decode_window_rules():
+    assert SH.decode_window(get_config("zamba2-7b"),
+                            SH.SHAPES["long_500k"]) == 4096
+    assert SH.decode_window(get_config("zamba2-7b"),
+                            SH.SHAPES["decode_32k"]) == "cfg"

@@ -1,0 +1,86 @@
+"""Decode-vs-forward teacher-forcing consistency for ALL 10 architectures:
+the decode_step logits at position t (from a prefilled cache) must match the
+full forward pass logits at t.  This pins every cache format: GQA full,
+MLA latent, windowed SWA (disabled here for exactness), RWKV/Mamba recurrent
+states, hybrid shared-attn groups, enc-dec self+cross."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_smoke
+from repro.models import build_model
+
+B = 2
+KEY = jax.random.PRNGKey(11)
+
+
+def _grow_time_axis(cache, old_len):
+    """Pad every (…, old_len, …) time axis by one slot for the decode write."""
+    def grow(leaf):
+        if leaf.ndim >= 3 and leaf.shape[2] == old_len:
+            pad = [(0, 0)] * leaf.ndim
+            pad[2] = (0, 1)
+            return jnp.pad(leaf, pad)
+        return leaf
+    return jax.tree_util.tree_map(grow, cache)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward_all_archs(arch):
+    cfg = get_smoke(arch)
+    # dropless MoE for this test: capacity drops are batch-composition
+    # dependent (a 30-token prefill drops tokens a 1-token decode keeps),
+    # which is routing behaviour, not cache state -- remove it so the test
+    # isolates cache correctness.
+    cfg = dataclasses.replace(cfg, dtype=jnp.float32, window=None,
+                              capacity_factor=4.0)
+    bundle = build_model(cfg)
+    params, _ = bundle.init(KEY)
+    s = 32 if cfg.family in ("rwkv6", "hybrid") else 16  # ssd chunk limits
+
+    if cfg.family == "vlm":
+        text = jax.random.randint(KEY, (B, s), 0, cfg.vocab)
+        patches = jax.random.normal(KEY, (B, cfg.n_prefix, cfg.frontend_dim))
+        batch = {"tokens": text, "patches": patches}
+        full = bundle.forward(params, batch)             # (B, prefix+s, V)
+        pre = {"tokens": text[:, : s - 1], "patches": patches}
+        _, cache = bundle.prefill(params, pre)
+        cache = _grow_time_axis(cache, cfg.n_prefix + s - 1)
+        pos = jnp.asarray(cfg.n_prefix + s - 1, jnp.int32)
+        logits_d, _ = bundle.decode_step(params, cache, text[:, s - 1:s],
+                                         pos)
+    elif cfg.family == "encdec":
+        frames = jax.random.normal(KEY, (B, 8, cfg.frontend_dim))
+        tokens = jax.random.randint(KEY, (B, s), 0, cfg.vocab)
+        batch = {"frames": frames, "tokens": tokens}
+        full = bundle.forward(params, batch)
+        pre = {"frames": frames, "tokens": tokens[:, : s - 1]}
+        _, cache = bundle.prefill(params, pre)
+        # grow only the self cache (cross cache length = enc length)
+        def grow(path, leaf):
+            keys = [str(getattr(p, "key", "")) for p in path]
+            if "self" in keys and leaf.ndim >= 3 and leaf.shape[2] == s - 1:
+                pad = [(0, 0)] * leaf.ndim
+                pad[2] = (0, 1)
+                return jnp.pad(leaf, pad)
+            return leaf
+        cache = jax.tree_util.tree_map_with_path(grow, cache)
+        logits_d, _ = bundle.decode_step(params, cache, tokens[:, s - 1:s],
+                                         jnp.asarray(s - 1, jnp.int32))
+    else:
+        tokens = jax.random.randint(KEY, (B, s), 0, cfg.vocab)
+        batch = {"tokens": tokens}
+        full = bundle.forward(params, batch)
+        _, cache = bundle.prefill(params, {"tokens": tokens[:, : s - 1]})
+        if cfg.family in ("dense", "moe", "hybrid"):
+            cache = _grow_time_axis(cache, s - 1)
+        logits_d, _ = bundle.decode_step(params, cache, tokens[:, s - 1:s],
+                                         jnp.asarray(s - 1, jnp.int32))
+
+    tol = 2e-3
+    np.testing.assert_allclose(np.asarray(logits_d),
+                               np.asarray(full[:, -1]), rtol=tol, atol=tol)

@@ -1,0 +1,71 @@
+"""PORTER under data heterogeneity (Assumption 4's regime): agents hold
+disjoint label-skewed shards; gradient tracking must still find the global
+stationary point while plain DSGD drifts more."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (PorterConfig, average_params, make_compressor,
+                        make_mixer, make_porter_step, make_topology,
+                        porter_init)
+from repro.core import baselines as BL
+from repro.core.gossip import make_dense_mixer
+from repro.data import a9a_like
+
+N = 8
+
+
+def _skewed_shards(seed=0):
+    """Sort by label so each agent sees a heavily label-skewed shard."""
+    x, y = a9a_like(8000, 40, seed=seed)
+    order = np.argsort(y + 0.01 * np.random.default_rng(seed).random(len(y)))
+    x, y = x[order], y[order]
+    m = len(x) // N
+    xs = x[: m * N].reshape(N, m, 40)
+    ys = y[: m * N].reshape(N, m)
+    return xs, ys
+
+
+def loss_fn(params, batch):
+    f, l = batch
+    f, l = jnp.atleast_2d(f), jnp.atleast_1d(l)
+    logits = f @ params["w"] + params["b"]
+    return jnp.mean(jnp.log1p(jnp.exp(-(2 * l - 1) * logits))) \
+        + 0.1 * jnp.sum(params["w"] ** 2 / (1 + params["w"] ** 2))
+
+
+def _iter(xs, ys, batch, seed=0):
+    rng = np.random.default_rng(seed)
+    m = xs.shape[1]
+    while True:
+        idx = rng.integers(0, m, size=(N, batch))
+        xb = np.take_along_axis(xs, idx[..., None], axis=1)
+        yb = np.take_along_axis(ys, idx, axis=1)
+        yield jnp.asarray(xb), jnp.asarray(yb)
+
+
+def test_porter_converges_on_heterogeneous_shards():
+    xs, ys = _skewed_shards()
+    top = make_topology("erdos_renyi", N, weights="best_constant", p=0.8,
+                        seed=2)
+    comp = make_compressor("top_k", frac=0.1)
+    gamma = 0.4 * (1 - top.alpha) * 0.1
+    cfg = PorterConfig(eta=0.05, gamma=gamma, tau=2.0, variant="gc")
+    state = porter_init({"w": jnp.zeros(40), "b": jnp.zeros(())}, N, w=top.w)
+    step = jax.jit(make_porter_step(cfg, loss_fn, make_mixer(top, "dense"),
+                                    comp))
+    it = _iter(xs, ys, batch=8)
+    key = jax.random.PRNGKey(0)
+    for _ in range(400):
+        key, k = jax.random.split(key)
+        state, metrics = step(state, next(it), k)
+    flat = (jnp.asarray(xs.reshape(-1, 40)), jnp.asarray(ys.reshape(-1)))
+    g = jax.grad(loss_fn)(average_params(state.x), flat)
+    gn = float(jnp.sqrt(sum(jnp.sum(v ** 2)
+                            for v in jax.tree_util.tree_leaves(g))))
+    # gradient tracking handles heterogeneity: global stationary point found
+    assert gn < 0.12, f"PORTER drifted under heterogeneity: |g|={gn}"
+    assert np.isfinite(float(metrics["loss"]))

@@ -1,0 +1,116 @@
+"""Per-kernel allclose tests: interpret-mode Pallas vs pure-jnp oracles,
+swept over shapes and dtypes with hypothesis (deliverable (c))."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.block_topk import BLOCK
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(1, 40000), st.integers(0, 10**6),
+       st.sampled_from([0.5, 1.0, 4.0]), st.sampled_from([0, 1]))
+@settings(max_examples=20, deadline=None)
+def test_smooth_clip_sweep(d, seed, tau, dt):
+    dtype = DTYPES[dt]
+    x = (jax.random.normal(jax.random.PRNGKey(seed % 997), (d,)) * 3
+         ).astype(dtype)
+    y_k = ops.smooth_clip(x, tau, interpret=True)
+    y_r = ref.smooth_clip_ref(x, tau)
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_r, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("shape", [(7,), (1023,), (8192,), (3, 2048),
+                                   (5, 1000, 3)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_smooth_clip_shapes_with_noise(shape, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(k1, shape).astype(dtype)
+    noise = jax.random.normal(k2, shape).astype(dtype)
+    y_k = ops.smooth_clip(x, 1.0, noise, 0.25, interpret=True)
+    y_r = ref.smooth_clip_ref(x, 1.0, noise, 0.25)
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_r, np.float32), **_tol(dtype))
+
+
+def test_smooth_clip_norm_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (5000,)) * 100
+    y = ops.smooth_clip(x, 2.0, interpret=True)
+    assert float(jnp.linalg.norm(y)) < 2.0
+
+
+@given(st.integers(1, 3 * BLOCK + 17), st.integers(0, 10**6),
+       st.sampled_from([0.01, 0.05, 0.25]))
+@settings(max_examples=15, deadline=None)
+def test_block_topk_sweep(d, seed, frac):
+    x = jax.random.normal(jax.random.PRNGKey(seed % 997), (d,))
+    y_k = ops.block_topk(x, frac, interpret=True)
+    # compare against exact per-block top-k oracle on the padded layout
+    pad = (-d) % BLOCK
+    x2d = jnp.pad(x, (0, pad)).reshape(-1, BLOCK)
+    k = max(int(round(frac * BLOCK)), 1)
+    y_r = ref.block_topk_ref(x2d, k).reshape(-1)[:d]
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), rtol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_block_topk_contract(dtype):
+    """Kernel output satisfies Definition 3 with rho = frac."""
+    frac = 0.05
+    x = jax.random.normal(jax.random.PRNGKey(3), (4 * BLOCK,)).astype(dtype)
+    y = ops.block_topk(x, frac, interpret=True)
+    err = float(jnp.sum((y.astype(jnp.float32) - x.astype(jnp.float32))**2))
+    nrm = float(jnp.sum(x.astype(jnp.float32)**2))
+    assert err <= (1 - frac) * nrm * (1 + 1e-3)
+
+
+@given(st.integers(1, 30000), st.integers(0, 10**6), st.sampled_from([0, 1]))
+@settings(max_examples=15, deadline=None)
+def test_ef_track_sweep(d, seed, dt):
+    dtype = DTYPES[dt]
+    keys = jax.random.split(jax.random.PRNGKey(seed % 997), 7)
+    args = [jax.random.normal(k, (d,)).astype(dtype) for k in keys]
+    out_k = ops.ef_track(*args, 0.37, interpret=True)
+    out_r = ref.ef_track_ref(*args, 0.37)
+    for a, b in zip(out_k, out_r):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), **_tol(dtype))
+
+
+@given(st.integers(1, 30000), st.integers(0, 10**6), st.sampled_from([0, 1]))
+@settings(max_examples=15, deadline=None)
+def test_ef_step_sweep(d, seed, dt):
+    dtype = DTYPES[dt]
+    keys = jax.random.split(jax.random.PRNGKey(seed % 997), 6)
+    args = [jax.random.normal(k, (d,)).astype(dtype) for k in keys]
+    out_k = ops.ef_step(*args, 0.37, 0.01, interpret=True)
+    out_r = ref.ef_step_ref(*args, 0.37, 0.01)
+    for a, b in zip(out_k, out_r):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), **_tol(dtype))
+
+
+def test_ef_track_matches_porter_algebra():
+    """The fused kernel implements exactly lines 11-12 of Algorithm 1."""
+    d = 4096
+    keys = jax.random.split(jax.random.PRNGKey(0), 7)
+    q, m, v, c, wc, g, gp = [jax.random.normal(k, (d,)) for k in keys]
+    gamma = 0.11
+    q2, m2, v2 = ops.ef_track(q, m, v, c, wc, g, gp, gamma, interpret=True)
+    np.testing.assert_allclose(np.asarray(q2), np.asarray(q + c), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(m2), np.asarray(m + wc), rtol=1e-6)
+    gossip = (m + wc) - (q + c)
+    np.testing.assert_allclose(np.asarray(v2),
+                               np.asarray(v + gamma * gossip + g - gp),
+                               rtol=1e-5, atol=1e-6)

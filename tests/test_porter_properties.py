@@ -1,0 +1,101 @@
+"""Hypothesis property tests on PORTER's system invariants, independent of
+any particular objective:
+
+* mean-preservation: the gossip term is mean-zero, so x-bar evolves exactly
+  as x-bar_{t+1} = x-bar_t - eta * v-bar_{t+1} for ANY compressor/graph;
+* v-bar == g-bar (gradient-tracking identity) for any variant;
+* smooth clipping keeps every shared gradient strictly inside the tau-ball
+  (the property Theorem 1's sensitivity argument needs);
+* surrogate consistency: q = x0 + sum of increments (error feedback never
+  loses mass).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (PorterConfig, make_compressor, make_mixer,
+                        make_porter_step, make_topology, porter_init)
+from repro.core.clipping import tree_global_norm
+
+
+def quad_loss(params, batch):
+    (a,) = batch if isinstance(batch, tuple) else (batch,)
+    return jnp.mean((params["w"] * a[..., None] - 1.0) ** 2)
+
+
+def _setup(n, graph, comp_name, frac, variant, seed, tau=1.0, sigma=0.0):
+    top = make_topology(graph, n, weights="metropolis", seed=seed)
+    comp = (make_compressor("identity") if comp_name == "identity"
+            else make_compressor(comp_name, frac=frac))
+    cfg = PorterConfig(eta=0.05, gamma=0.3 * (1 - top.alpha) * frac,
+                       tau=tau, variant=variant, sigma_p=sigma)
+    params0 = {"w": jnp.linspace(-1, 1, 7)}
+    state = porter_init(params0, n, w=top.w)
+    step = jax.jit(make_porter_step(cfg, quad_loss, make_mixer(top, "dense"),
+                                    comp))
+    return state, step
+
+
+@given(st.integers(3, 8), st.sampled_from(["ring", "erdos_renyi", "complete"]),
+       st.sampled_from([("top_k", 0.3), ("random_k", 0.3),
+                        ("identity", 1.0)]),
+       st.sampled_from(["gc", "dp", "beer"]), st.integers(0, 100))
+@settings(max_examples=12, deadline=None)
+def test_tracking_and_mean_preservation(n, graph, comp_spec, variant, seed):
+    comp_name, frac = comp_spec
+    state, step = _setup(n, graph, comp_name, frac, variant, seed,
+                         sigma=0.01 if variant == "dp" else 0.0)
+    key = jax.random.PRNGKey(seed)
+    for t in range(4):
+        key, kb, ks = jax.random.split(key, 3)
+        batch = (jax.random.normal(kb, (n, 3)),)
+        xbar_before = jnp.mean(state.x["w"], axis=0)
+        state, _ = step(state, batch, ks)
+        vbar = jnp.mean(state.v["w"], axis=0)
+        gbar = jnp.mean(state.g_prev["w"], axis=0)
+        # gradient tracking identity (exact up to float assoc.)
+        np.testing.assert_allclose(np.asarray(vbar), np.asarray(gbar),
+                                   rtol=1e-4, atol=1e-5)
+        # mean dynamics are gossip-invariant
+        xbar_after = jnp.mean(state.x["w"], axis=0)
+        np.testing.assert_allclose(np.asarray(xbar_after),
+                                   np.asarray(xbar_before - 0.05 * vbar),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@given(st.integers(3, 8), st.floats(0.2, 3.0), st.integers(0, 50))
+@settings(max_examples=10, deadline=None)
+def test_shared_gradients_inside_tau_ball(n, tau, seed):
+    """Every g an agent ever puts on the wire obeys ||g|| < tau + noise
+    (per-sample clipping then averaging keeps the mean inside the ball)."""
+    state, step = _setup(n, "ring", "top_k", 0.5, "dp", seed, tau=tau,
+                         sigma=0.0)
+    key = jax.random.PRNGKey(seed)
+    for _ in range(3):
+        key, kb, ks = jax.random.split(key, 3)
+        batch = (10.0 * jax.random.normal(kb, (n, 3)),)  # huge gradients
+        state, _ = step(state, batch, ks)
+        for i in range(n):
+            g_i = {"w": state.g_prev["w"][i]}
+            assert float(tree_global_norm(g_i)) < tau + 1e-4
+
+
+@given(st.integers(3, 6), st.integers(0, 50))
+@settings(max_examples=8, deadline=None)
+def test_error_feedback_conserves_increments(n, seed):
+    """q_x(t) = x0 + sum of compressed increments; with identity compression
+    q converges to x after each step (EF catches up immediately)."""
+    state, step = _setup(n, "complete", "identity", 1.0, "gc", seed)
+    key = jax.random.PRNGKey(seed)
+    for _ in range(3):
+        key, kb, ks = jax.random.split(key, 3)
+        batch = (jax.random.normal(kb, (n, 3)),)
+        prev_x = state.x["w"]
+        state, _ = step(state, batch, ks)
+        # identity compressor: q_x^t = x^{t-1} exactly
+        np.testing.assert_allclose(np.asarray(state.q_x["w"]),
+                                   np.asarray(prev_x), rtol=1e-5, atol=1e-6)
