@@ -3,10 +3,14 @@ vs CHOCO-SGD vs DSGD, measured in (a) rounds and (b) communicated megabytes
 to reach a target gradient norm.  This is the systems-level comparison the
 paper motivates (communication efficiency) but only reports indirectly.
 
-Wire accounting per round per agent (model-level, core.gossip):
-    DSGD      : d floats, uncompressed                (1 buffer)
-    CHOCO-SGD : rho*d values (+indices) x 1 buffer
-    PORTER    : rho*d values (+indices) x 2 buffers   (Q_x and Q_v streams)
+Wire accounting comes from each algorithm's own ``wire_bytes`` metric (the
+uniform schema emitted by every step function via the comm-round engine --
+see repro.core.comm_round.CommRound.wire_bytes), so all algorithms are
+measured by exactly the bytes their wire format moves per round:
+
+    DSGD      : n * d floats, uncompressed                (1 buffer)
+    CHOCO-SGD : n * (rho*d values + indices)              (1 buffer)
+    PORTER    : n * (rho*d values + indices) x 2 buffers  (Q_x and Q_v)
 """
 
 from __future__ import annotations
@@ -38,7 +42,6 @@ def run_ablation(steps=400, seed=0):
     loss_fn = C.logreg_loss()
     params0 = {"w": jnp.zeros(123), "b": jnp.zeros(())}
     flat = (xs.reshape(-1, 123), ys.reshape(-1))
-    d = 124  # parameter count
 
     def gnorm(p):
         g = jax.grad(loss_fn)(p, flat)
@@ -46,23 +49,27 @@ def run_ablation(steps=400, seed=0):
                                   for v in jax.tree_util.tree_leaves(g))))
 
     comp = make_compressor("top_k", frac=RHO)
-    bits_sparse = comp.wire_bits(d)          # per buffer per agent per round
-    bits_dense = 32.0 * d
 
     results = {}
 
-    def track(name, states_iter, bits_per_round):
+    def track(name, states_iter):
+        """states_iter yields (t, x-bar, metrics); metrics carries the
+        uniform wire_bytes/round so MB-to-target needs no per-algorithm
+        accounting here."""
         rounds_to_target = None
         final = None
-        for t, p_avg in states_iter:
+        bytes_per_round = None
+        for t, p_avg, m in states_iter:
             g = gnorm(p_avg)
             final = g
+            bytes_per_round = float(m["wire_bytes"])
             if rounds_to_target is None and g <= TARGET:
                 rounds_to_target = t
         mb = (None if rounds_to_target is None else
-              rounds_to_target * bits_per_round * C.N_AGENTS / 8e6)
+              rounds_to_target * bytes_per_round / 1e6)
         results[name] = {"rounds_to_target": rounds_to_target,
-                         "MB_to_target": mb, "final_grad": final}
+                         "MB_to_target": mb, "final_grad": final,
+                         "bytes_per_round": bytes_per_round}
 
     def porter_iter(variant):
         gamma = 0.5 * (1 - top.alpha) * RHO
@@ -74,9 +81,9 @@ def run_ablation(steps=400, seed=0):
         key = jax.random.PRNGKey(seed)
         for t in range(steps):
             key, k = jax.random.split(key)
-            state, _ = step(state, next(it), k)
+            state, m = step(state, next(it), k)
             if t % 10 == 0 or t == steps - 1:
-                yield t, average_params(state.x)
+                yield t, average_params(state.x), m
 
     def choco_iter():
         gamma = 0.3 * (1 - top.alpha) * RHO
@@ -87,9 +94,9 @@ def run_ablation(steps=400, seed=0):
         key = jax.random.PRNGKey(seed)
         for t in range(steps):
             key, k = jax.random.split(key)
-            state, _ = step(state, next(it), k)
+            state, m = step(state, next(it), k)
             if t % 10 == 0 or t == steps - 1:
-                yield t, average_params(state.x)
+                yield t, average_params(state.x), m
 
     def dsgd_iter():
         state = BL.dsgd_init(params0, C.N_AGENTS)
@@ -99,14 +106,14 @@ def run_ablation(steps=400, seed=0):
         key = jax.random.PRNGKey(seed)
         for t in range(steps):
             key, k = jax.random.split(key)
-            state, _ = step(state, next(it), k)
+            state, m = step(state, next(it), k)
             if t % 10 == 0 or t == steps - 1:
-                yield t, average_params(state.x)
+                yield t, average_params(state.x), m
 
-    track("porter_gc", porter_iter("gc"), 2 * bits_sparse)
-    track("beer", porter_iter("beer"), 2 * bits_sparse)
-    track("choco_sgd", choco_iter(), bits_sparse)
-    track("dsgd", dsgd_iter(), bits_dense)
+    track("porter_gc", porter_iter("gc"))
+    track("beer", porter_iter("beer"))
+    track("choco_sgd", choco_iter())
+    track("dsgd", dsgd_iter())
     return results
 
 

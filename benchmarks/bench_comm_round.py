@@ -1,0 +1,129 @@
+"""Comm-round engine microbenchmark: fused (Pallas) vs reference (jnp)
+round time and wire bytes/round across compressors.
+
+One PORTER iteration outside the model is two comm rounds (track + step)
+over every parameter: ~13 HBM-bound passes unfused, 7 reads + 4 writes per
+round fused (see EXPERIMENTS.md #Perf).  This harness times exactly that
+slice -- gradients excluded -- for the engine's two backends:
+
+    ref     pure-jnp tree_map chain (XLA-fused on CPU; the oracle)
+    pallas  flat tile planes + ef_track/ef_step kernels
+            (Mosaic on TPU; interpret mode on CPU, where it is *slower* --
+            interpret exists for correctness CI, the speedup is a TPU
+            number)
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_comm_round.py            # full
+    PYTHONPATH=src python benchmarks/bench_comm_round.py --smoke    # CI
+
+Rows: compressor,backend,us_per_round,bytes_per_round
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+if __package__ in (None, ""):  # allow `python benchmarks/bench_comm_round.py`
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import CommRound, make_compressor, make_mixer, make_topology
+
+# the paper's sparse family; 'rand_k' is the registry's random_k
+COMPRESSORS = (("top_k", "top_k"), ("block_top_k", "block_top_k"),
+               ("rand_k", "random_k"))
+
+
+def make_buffers(key, n_agents: int, d: int):
+    """Agent-stacked PORTER-shaped buffers with odd, non-tile-aligned leaves."""
+    d1 = max(d - d // 3 - 1, 1)
+    d2 = d - d1
+    shapes = {"w": (d1,), "b": (d2,)} if d2 else {"w": (d1,)}
+    ks = jax.random.split(key, 7)
+
+    def tree(k):
+        sub = jax.random.split(k, len(shapes))
+        return {name: jax.random.normal(kk, (n_agents,) + s)
+                for kk, (name, s) in zip(sub, shapes.items())}
+
+    # (y, q, m) for the buffer plus (g, g_prev) for the track side
+    return tuple(tree(k) for k in ks[:5])
+
+
+def timed_us(fn, *args, reps: int):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def bench(n_agents: int, d: int, frac: float, reps: int):
+    top = make_topology("ring", n_agents, weights="metropolis")
+    mixer = make_mixer(top, "dense")
+    key = jax.random.PRNGKey(0)
+    y, q, m, g, gp = make_buffers(key, n_agents, d)
+    gamma, eta = 0.1, 0.05
+
+    print(f"# comm-round bench: n_agents={n_agents} d={d} frac={frac} "
+          f"reps={reps} backend_device={jax.default_backend()}")
+    print("compressor,backend,us_per_round,bytes_per_round")
+    rows = []
+    for label, reg_name in COMPRESSORS:
+        comp = make_compressor(reg_name, frac=frac)
+        for backend in ("ref", "pallas"):
+            eng = CommRound(compressor=comp, mixer=mixer, backend=backend,
+                            interpret=None if jax.default_backend() == "tpu"
+                            else True)
+
+            @jax.jit
+            def one_round(key, y, q, m, g, gp, eng=eng):
+                k1, k2 = jax.random.split(key)
+                v, q2, m2 = eng.track(k1, y, q, m, g, gp, gamma)
+                x, q3, m3 = eng.step(k2, y, q2, m2, v, gamma, eta)
+                return x, v, q3, m3
+
+            us = timed_us(one_round, key, y, q, m, g, gp, reps=reps)
+            wire = 2.0 * eng.wire_bytes(y)  # track + step streams
+            rows.append((label, backend, us, wire))
+            print(f"{label},{backend},{us:.1f},{wire:.0f}", flush=True)
+    # headline: fused-vs-reference ratio per compressor
+    for label, _ in COMPRESSORS:
+        r = {b: us for (l, b, us, _) in rows if l == label}
+        print(f"# {label}: pallas/ref time ratio = "
+              f"{r['pallas'] / r['ref']:.2f} "
+              f"(interpret mode is correctness-only off-TPU)")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CPU CI")
+    ap.add_argument("--agents", type=int, default=None)
+    ap.add_argument("--d", type=int, default=None,
+                    help="per-agent parameter count")
+    ap.add_argument("--frac", type=float, default=0.05)
+    ap.add_argument("--reps", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        n, d, reps = 4, 20_001, 3
+    else:
+        n, d, reps = 8, 1_000_003, 10
+    n = args.agents or n
+    d = args.d or d
+    reps = args.reps or reps
+    bench(n, d, args.frac, reps)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -316,6 +316,16 @@ def bench_ablation():
     _ab()
 
 
+def bench_comm_round():
+    from benchmarks.bench_comm_round import bench
+    rows = bench(n_agents=4, d=20_001, frac=0.05, reps=3)
+    _save("comm_round", [
+        {"compressor": l, "backend": b, "us_per_round": us,
+         "bytes_per_round": wire} for l, b, us, wire in rows])
+    for label, backend, us, wire in rows:
+        emit(f"comm_round/{label}/{backend}", us, f"bytes_per_round={wire:.0f}")
+
+
 BENCHES = {
     "fig1": bench_fig1_clipping,
     "fig2": bench_fig2_logreg,
@@ -323,6 +333,7 @@ BENCHES = {
     "table1": bench_table1,
     "scaling": bench_scaling,
     "ablation": bench_ablation,
+    "comm_round": bench_comm_round,
     "kernels": bench_kernels,
     "roofline": bench_roofline,
 }

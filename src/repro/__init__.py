@@ -2,6 +2,30 @@
 decentralized nonconvex optimization with gradient clipping and
 communication compression -- and extending it to a production-style
 decentralized training stack (model zoo, mesh launcher, Pallas kernels,
-roofline tooling).  See DESIGN.md for the system inventory."""
+roofline tooling).  See DESIGN.md for the system inventory.
+
+Module map:
+
+    core        the paper's algorithms and their substrate
+      .comm_round   the one fused EF/gossip round primitive: CommRound
+                    compresses an increment, accumulates surrogate q and
+                    mixing mirror m, and applies a caller-supplied fused
+                    update (ef_track/ef_step/ef_gossip kernels over the
+                    flat tile layout); PORTER, PORTER-Adam, CHOCO-SGD and
+                    SoteriaFL are thin clients of it
+      .porter       Algorithm 1 (PORTER-DP / PORTER-GC / BEER)
+      .baselines    DSGD, CHOCO-SGD, DP-SGD, SoteriaFL-SGD
+      .gossip       dense / ring / packed wire executors + byte accounting
+      .compression  rho-compressors (Definition 3)
+      .clipping     smooth / piecewise clipping (Definition 2)
+      .mixing       topologies and mixing matrices (Definition 1)
+      .privacy      LDP calibration and accounting (Theorem 1)
+    kernels     Pallas TPU kernels (+ flatten: pytree <-> tile planes)
+    launch      mesh builder, sharded step builders, train/serve drivers
+    models, nn  the model zoo and its building blocks
+    data        synthetic datasets matching the paper's experiments
+    configs     per-architecture ModelConfigs (paper + production scale)
+    compat      jax version shims (shard_map)
+"""
 
 __version__ = "0.1.0"

@@ -1,0 +1,44 @@
+"""Version compatibility shims for the supported jax range.
+
+``shard_map`` moved twice: it lives in ``jax.experimental.shard_map`` up to
+~0.4.x, is re-exported as ``jax.shard_map`` from 0.6, and its replication
+check kwarg was renamed ``check_rep`` -> ``check_vma`` along the way.  The
+shim below resolves whichever implementation exists and translates the
+kwarg, so callers can uniformly write
+
+    from repro.compat import shard_map
+    shard_map(fn, mesh=mesh, in_specs=..., out_specs=..., check_vma=False)
+
+on any supported jax.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+__all__ = ["shard_map"]
+
+try:
+    _shard_map_impl = jax.shard_map  # jax >= 0.6
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_PARAMS = inspect.signature(_shard_map_impl).parameters
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kwargs):
+    """``jax.shard_map`` with the ``check_rep``/``check_vma`` rename handled.
+
+    ``check_vma`` (new name) is accepted regardless of the underlying jax;
+    on older versions it is forwarded as ``check_rep``.  ``None`` leaves the
+    implementation default in place.
+    """
+    if check_vma is not None:
+        if "check_vma" in _PARAMS:
+            kwargs["check_vma"] = check_vma
+        elif "check_rep" in _PARAMS:
+            kwargs["check_rep"] = check_vma
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kwargs)

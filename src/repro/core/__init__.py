@@ -7,13 +7,17 @@ Public surface:
     mixing      : graphs, mixing matrices, mixing rate (Definition 1)
     privacy     : phi_m, Theorem-1 sigma calibration, moments accountant
     gossip      : dense / ring / packed mixers over agent-stacked pytrees
+    comm_round  : the one fused EF/gossip round primitive (CommRound) every
+                  compressed algorithm is a thin client of
     porter      : Algorithm 1 (PORTER-DP / PORTER-GC / BEER)
     baselines   : DSGD, CHOCO-SGD, DP-SGD, SoteriaFL-SGD
 """
 
-from . import baselines, beer, clipping, compression, gossip, mixing, porter, privacy
+from . import (baselines, beer, clipping, comm_round, compression, gossip,
+               mixing, porter, privacy)
 
 from .clipping import piecewise_clip, smooth_clip, tree_clip, tree_global_norm
+from .comm_round import CommRound
 from .compression import Compressor, make_compressor
 from .gossip import make_mixer
 from .mixing import Topology, make_topology, mixing_rate
@@ -23,9 +27,9 @@ from .porter import (PorterConfig, PorterState, average_params,
 from .privacy import MomentsAccountant, calibrate_sigma, ldp_epsilon, phi_m
 
 __all__ = [
-    "baselines", "beer", "clipping", "compression", "gossip", "mixing",
-    "porter", "privacy",
-    "Compressor", "make_compressor", "Topology", "make_topology",
+    "baselines", "beer", "clipping", "comm_round", "compression", "gossip",
+    "mixing", "porter", "privacy",
+    "CommRound", "Compressor", "make_compressor", "Topology", "make_topology",
     "mixing_rate", "PorterConfig", "PorterState", "porter_init", "porter_step",
     "make_porter_step", "average_params", "consensus_error",
     "MomentsAccountant", "calibrate_sigma", "ldp_epsilon", "phi_m",

@@ -10,7 +10,19 @@
                     compression -- the paper's Section-5 head-to-head.
 
 All share the agent-stacked pytree layout of :mod:`repro.core.porter` so the
-same data pipeline, loss functions and metrics apply.
+same data pipeline, loss functions and metrics apply.  The compressed
+algorithms route their communication through the comm-round engine
+(:class:`repro.core.comm_round.CommRound`): CHOCO's surrogate/mirror round
+is ``engine.gossip_apply``, SoteriaFL's shifted compression is
+``engine.shift`` -- there is no hand-rolled ``q += c; m += Wc`` body left in
+this module.
+
+Metrics schema (uniform across algorithms, so benchmarks/ablation.py can
+compare them on equal footing):
+
+    loss         mean agent loss
+    consensus_x  ||X - x-bar 1^T||_F^2   (decentralized algorithms)
+    wire_bytes   model-level bytes crossing links per round (all agents)
 """
 
 from __future__ import annotations
@@ -24,8 +36,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import clipping
+from .comm_round import CommRound
 from .compression import Compressor
-from .gossip import MixFn
+from .gossip import MixFn, gossip_wire_bytes
 from .porter import LossFn, average_params, consensus_error
 
 __all__ = [
@@ -42,6 +55,11 @@ def _tree(op, *trees):
 
 def _stack(params, n):
     return _tree(lambda p: jnp.broadcast_to(p, (n,) + p.shape), params)
+
+
+def _param_count(tree, n_agents: int) -> int:
+    return sum(int(l.size) // n_agents
+               for l in jax.tree_util.tree_leaves(tree))
 
 
 def _dp_gradient(loss_fn, params, batch, key, tau, clip_mode, sigma_p):
@@ -91,8 +109,14 @@ def dsgd_step(eta: float, gamma: float, loss_fn: LossFn, mixer: MixFn,
     mixed = mixer(state.x)  # W X
     x = _tree(lambda x0, wx, gg: x0 + gamma * (wx - x0) - eta * gg,
               state.x, mixed, g)
+    # uncompressed gossip of the full parameter buffer every round
+    frac = getattr(mixer, "wire_frac", None)
+    wire = gossip_wire_bytes(getattr(mixer, "wire_mode", "dense"), n,
+                             _param_count(state.x, n),
+                             frac=1.0 if frac is None else frac)
     return DsgdState(x=x, step=state.step + 1), {
-        "loss": jnp.mean(losses), "consensus_x": consensus_error(x)}
+        "loss": jnp.mean(losses), "consensus_x": consensus_error(x),
+        "wire_bytes": jnp.asarray(wire, jnp.float32)}
 
 
 # ---------------------------------------------------------------------------
@@ -115,10 +139,11 @@ def choco_init(params, n_agents: int) -> ChocoState:
 def choco_step(eta: float, gamma: float, loss_fn: LossFn, mixer: MixFn,
                compressor: Compressor, state: ChocoState, batch, key,
                tau: Optional[float] = None, clip_mode: str = "smooth",
+               engine: Optional[CommRound] = None,
                ) -> Tuple[ChocoState, Dict[str, jax.Array]]:
     """CHOCO-SGD: x+ = x - eta g;  q += C(x+ - q);  x = x+ + gamma (m - q)."""
-    from .porter import _compress_stacked  # shared helper
-
+    eng = engine if engine is not None else CommRound(compressor=compressor,
+                                                      mixer=mixer)
     n = jax.tree_util.tree_leaves(state.x)[0].shape[0]
     k_g, k_c = jax.random.split(key)
     keys = jax.random.split(k_g, n)
@@ -132,13 +157,10 @@ def choco_step(eta: float, gamma: float, loss_fn: LossFn, mixer: MixFn,
 
     losses, g = jax.vmap(agent_grad)(state.x, batch, keys)
     x_half = _tree(lambda x0, gg: x0 - eta * gg, state.x, g)
-    incr = _compress_stacked(compressor, k_c,
-                             _tree(jnp.subtract, x_half, state.q))
-    q = _tree(jnp.add, state.q, incr)
-    m = _tree(jnp.add, state.m, mixer(incr))
-    x = _tree(lambda xh, mm, qq: xh + gamma * (mm - qq), x_half, m, q)
+    x, q, m = eng.gossip_apply(k_c, x_half, state.q, state.m, gamma)
     return ChocoState(x=x, q=q, m=m, step=state.step + 1), {
-        "loss": jnp.mean(losses), "consensus_x": consensus_error(x)}
+        "loss": jnp.mean(losses), "consensus_x": consensus_error(x),
+        "wire_bytes": jnp.asarray(eng.wire_bytes(state.x), jnp.float32)}
 
 
 # ---------------------------------------------------------------------------
@@ -160,7 +182,10 @@ def dpsgd_step(eta: float, loss_fn: LossFn, state: DpSgdState, batch, key,
     loss, g = _dp_gradient(loss_fn, state.x, batch, key, tau, clip_mode,
                            sigma_p)
     x = _tree(lambda x0, gg: x0 - eta * gg, state.x, g)
-    return DpSgdState(x=x, step=state.step + 1), {"loss": loss}
+    # one dense gradient upload to the server per round
+    d = sum(int(l.size) for l in jax.tree_util.tree_leaves(state.x))
+    return DpSgdState(x=x, step=state.step + 1), {
+        "loss": loss, "wire_bytes": jnp.asarray(4.0 * d, jnp.float32)}
 
 
 # ---------------------------------------------------------------------------
@@ -185,14 +210,17 @@ def soteria_init(params, n_agents: int) -> SoteriaState:
 def soteria_step(eta: float, alpha_shift: float, loss_fn: LossFn,
                  compressor: Compressor, state: SoteriaState, batch, key,
                  tau: float = 1.0, clip_mode: str = "smooth",
-                 sigma_p: float = 0.0
+                 sigma_p: float = 0.0,
+                 engine: Optional[CommRound] = None
                  ) -> Tuple[SoteriaState, Dict[str, jax.Array]]:
     """SoteriaFL-SGD: clients send C(g_i - h_i); server uses h_bar + mean(c).
 
-    g_i is the per-sample-clipped + perturbed local gradient (LDP).
+    g_i is the per-sample-clipped + perturbed local gradient (LDP).  The
+    client side is the engine's shifted-compression primitive; the server
+    mean replaces the gossip mirror.
     """
-    from .porter import _compress_stacked
-
+    eng = engine if engine is not None else CommRound(compressor=compressor,
+                                                      mixer=None)
     n = jax.tree_util.tree_leaves(state.h)[0].shape[0]
     k_g, k_c = jax.random.split(key)
     keys = jax.random.split(k_g, n)
@@ -202,12 +230,15 @@ def soteria_step(eta: float, alpha_shift: float, loss_fn: LossFn,
         return loss, g
 
     losses, g = jax.vmap(client)(state.h, batch, keys)
-    delta = _tree(jnp.subtract, g, state.h)
-    c = _compress_stacked(compressor, k_c, delta)
-    h = _tree(lambda h0, cc: h0 + alpha_shift * cc, state.h, c)
+    c, h = eng.shift(k_c, g, state.h, scale=alpha_shift)
     c_bar = _tree(lambda cc: jnp.mean(cc, axis=0), c)
     g_tilde = _tree(jnp.add, state.h_bar, c_bar)
     h_bar = _tree(lambda hb, cb: hb + alpha_shift * cb, state.h_bar, c_bar)
     x = _tree(lambda x0, gt: (x0 - eta * gt).astype(x0.dtype), state.x, g_tilde)
+    # n compressed client uploads per round (server broadcast not counted,
+    # matching the LDP literature's upload accounting); accounted from the
+    # engine so the metric always reflects the compressor that actually ran
+    wire = eng.wire_bytes(state.h)
     return SoteriaState(x=x, h=h, h_bar=h_bar, step=state.step + 1), {
-        "loss": jnp.mean(losses)}
+        "loss": jnp.mean(losses),
+        "wire_bytes": jnp.asarray(wire, jnp.float32)}

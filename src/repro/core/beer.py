@@ -15,7 +15,18 @@ __all__ = ["beer_config"]
 
 
 def beer_config(eta: float, gamma: float, **kwargs) -> PorterConfig:
-    kwargs.pop("variant", None)
-    kwargs.pop("tau", None)
+    """PorterConfig pinned to the BEER point of the algorithm family.
+
+    ``variant`` and ``tau`` are what *make* BEER (no clipping); accepting a
+    caller's values and ignoring them would silently run a different
+    algorithm, so they are rejected instead
+    (tests/test_porter.py::test_beer_config_rejects_clipping_overrides).
+    """
+    for fixed in ("variant", "tau"):
+        if fixed in kwargs:
+            raise ValueError(
+                f"beer_config fixes {fixed!r} (BEER is unclipped PORTER); "
+                f"got {fixed}={kwargs[fixed]!r} -- use PorterConfig directly "
+                "for a clipped variant")
     return PorterConfig(eta=eta, gamma=gamma, variant="beer", tau=float("inf"),
                         **kwargs)

@@ -1,0 +1,238 @@
+"""The comm-round engine: one fused EF/gossip primitive for every
+compressed-communication algorithm in the repo.
+
+Every compressed decentralized method here (PORTER, PORTER-Adam, BEER,
+CHOCO-SGD, SoteriaFL) repeats the same per-round pattern around a buffer
+``y`` with surrogate ``q`` and mixing mirror ``m``:
+
+    c   =  C(y - q)          compress the increment        (hits the wire)
+    q  +=  c                 surrogate accumulate          (local)
+    m  +=  W c               mixing-mirror accumulate      (receive side)
+    y'  =  f(y, m - q, ...)  algorithm-specific fused update
+
+:class:`CommRound` owns that pattern once.  Compression and mixing run in
+the *pytree domain* (so shard-local compressors and the ring/packed wire
+executors keep their PartitionSpecs), while the AXPY chain of the update
+runs over the flat tile layout of :mod:`repro.kernels.flatten` so the fused
+Pallas kernels (:mod:`repro.kernels.ef_update`) touch each parameter once
+per round instead of ~13 separate HBM-bound tree_map passes.
+
+Backends:
+
+* ``'pallas'`` -- flatten to (tiles, 8*1024) f32 planes, run ef_track /
+  ef_step / ef_gossip (Mosaic on TPU; pass ``interpret=True`` for CPU CI).
+* ``'ref'``    -- pure-jnp tree_map chain, bit-identical to the pre-engine
+  per-algorithm bodies; the numerical oracle.
+* ``'auto'``   -- 'pallas' on TPU, 'ref' elsewhere (the default: CPU tests
+  keep XLA-fused jnp speed, TPU gets the kernels).
+
+Sharding caveat: the flat plane concatenates *all* leaves, so under a mesh
+whose leaves carry different model-parallel PartitionSpecs the pack/unpack
+reshards (the plane can only be sharded along the agent axis).  That is
+fine for pure data/agent-sharded states (every buffer P(agents, None, ...))
+and on single hosts; for mixed model-sharded layouts keep
+``backend='ref'`` until per-shard planes land (see ROADMAP).
+
+Wire accounting: :meth:`CommRound.wire_bytes` converts (gossip mode,
+compressor, n_agents, d) into per-round bytes via
+:func:`repro.core.gossip.gossip_wire_bytes` / ``Compressor.wire_bits`` so
+every algorithm reports the same ``wire_bytes`` metric and cross-algorithm
+comparisons are apples-to-apples (benchmarks/ablation.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import flatten as FL
+from ..kernels import ops
+from .compression import Compressor
+from .gossip import MixFn, gossip_wire_bytes
+
+__all__ = ["CommRound", "compress_stacked"]
+
+CompressFn = Callable[[jax.Array, Any], Any]  # (key, tree) -> tree
+
+
+def compress_stacked(comp: Compressor, key: jax.Array, tree):
+    """Compress each agent's row of every leaf independently (paper setup:
+    every agent compresses its own increment; per-leaf to match the
+    convergence tests' rho accounting)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+
+    def one(k, leaf):
+        n = leaf.shape[0]
+        ks = jax.random.split(k, n)
+        return jax.vmap(lambda kk, row: comp(kk, row))(ks, leaf)
+
+    return treedef.unflatten([one(k, l) for k, l in zip(keys, leaves)])
+
+
+def _tree(op, *trees):
+    return jax.tree_util.tree_map(op, *trees)
+
+
+@dataclasses.dataclass(frozen=True)
+class CommRound:
+    """One compressed communication round: compress -> accumulate -> update.
+
+    Attributes:
+      compressor: the rho-compressor (Definition 3); also drives wire
+        accounting.
+      mixer: gossip executor ``tree -> W @ tree`` over the agent axis
+        (core.gossip); its ``wire_mode`` tag selects the wire format for
+        byte accounting.
+      compress_fn: optional (key, tree) -> tree override, e.g. the
+        shard-local compressor from launch.steps.  Defaults to per-agent
+        per-leaf compression of ``compressor``.
+      backend: 'pallas' | 'ref' | 'auto'.
+      interpret: Pallas interpret mode; None = auto (True off-TPU).
+    """
+
+    compressor: Compressor
+    mixer: MixFn
+    compress_fn: Optional[CompressFn] = None
+    backend: str = "auto"
+    interpret: Optional[bool] = None
+
+    def __post_init__(self):
+        if self.backend not in ("pallas", "ref", "auto"):
+            raise ValueError(f"unknown comm-round backend {self.backend!r}")
+
+    # -- backend plumbing ---------------------------------------------------
+
+    def _use_pallas(self) -> bool:
+        if self.backend == "auto":
+            return jax.default_backend() == "tpu"
+        return self.backend == "pallas"
+
+    def _kernel_kw(self):
+        return {} if self.interpret is None else {"interpret": self.interpret}
+
+    # -- the shared front half: compress + mix ------------------------------
+
+    def compress(self, key: jax.Array, delta):
+        """c = C(delta), in the pytree domain (shard-local aware)."""
+        if self.compress_fn is not None:
+            return self.compress_fn(key, delta)
+        return compress_stacked(self.compressor, key, delta)
+
+    def exchange(self, key: jax.Array, y, q) -> Tuple[Any, Any]:
+        """Compress the increment of ``y`` against surrogate ``q`` and mix.
+
+        Returns ``(c, wc)`` with ``c = C(y - q)`` (what the agent puts on
+        the wire) and ``wc = W @ c`` (what it accumulates off the wire).
+        """
+        c = self.compress(key, _tree(jnp.subtract, y, q))
+        return c, self.mixer(c)
+
+    # -- fused state updates ------------------------------------------------
+
+    def track(self, key, v, q, m, g, g_prev, gamma: float):
+        """PORTER Algorithm 1 lines 11-12 (gradient-estimate track).
+
+        q += c; m += Wc; v' = v + gamma*(m - q) + g - g_prev.
+        Returns (v', q', m').
+        """
+        c, wc = self.exchange(key, v, q)
+        if self._use_pallas():
+            spec = FL.flat_spec(v)
+            pl = functools.partial(FL.to_planes, spec=spec)
+            qo, mo, vo = ops.ef_track(pl(q), pl(m), pl(v), pl(c), pl(wc),
+                                      pl(g), pl(g_prev), gamma,
+                                      **self._kernel_kw())
+            return (FL.from_planes(vo, spec), FL.from_planes(qo, spec),
+                    FL.from_planes(mo, spec))
+        q2 = _tree(jnp.add, q, c)
+        m2 = _tree(jnp.add, m, wc)
+        v2 = _tree(lambda v0, mm, qq, gn, gp: v0 + gamma * (mm - qq)
+                   + gn - gp, v, m2, q2, g, g_prev)
+        return v2, q2, m2
+
+    def step(self, key, x, q, m, v, gamma: float, eta: float):
+        """PORTER Algorithm 1 lines 13-14 (parameter step).
+
+        q += c; m += Wc; x' = x + gamma*(m - q) - eta*v, cast to x.dtype.
+        Returns (x', q', m').  ``v`` may be any descent direction (PORTER
+        passes the tracked gradient, PORTER-Adam its preconditioned form).
+        """
+        c, wc = self.exchange(key, x, q)
+        if self._use_pallas():
+            spec = FL.flat_spec(x)
+            pl = functools.partial(FL.to_planes, spec=spec)
+            qo, mo, xo = ops.ef_step(pl(q), pl(m), pl(x), pl(c), pl(wc),
+                                     pl(v), gamma, eta, **self._kernel_kw())
+            return (FL.from_planes(xo, spec), FL.from_planes(qo, spec),
+                    FL.from_planes(mo, spec))
+        q2 = _tree(jnp.add, q, c)
+        m2 = _tree(jnp.add, m, wc)
+        x2 = _tree(lambda x0, mm, qq, vv:
+                   (x0 + gamma * (mm - qq) - eta * vv).astype(x0.dtype),
+                   x, m2, q2, v)
+        return x2, q2, m2
+
+    def gossip_apply(self, key, y, q, m, gamma: float, scale: float = 1.0):
+        """CHOCO-SGD / SoteriaFL-style round (no tracking term).
+
+        q += scale*c; m += scale*Wc; y' = y + gamma*(m - q).
+        Returns (y', q', m').  ``scale`` is the shift stepsize (1 for
+        CHOCO, alpha for shifted compression).
+        """
+        c, wc = self.exchange(key, y, q)
+        if self._use_pallas():
+            spec = FL.flat_spec(y)
+            pl = functools.partial(FL.to_planes, spec=spec)
+            qo, mo, yo = ops.ef_gossip(pl(q), pl(m), pl(y), pl(c), pl(wc),
+                                       gamma, scale, **self._kernel_kw())
+            return (FL.from_planes(yo, spec), FL.from_planes(qo, spec),
+                    FL.from_planes(mo, spec))
+        q2 = _tree(lambda a, b: a + scale * b, q, c)
+        m2 = _tree(lambda a, b: a + scale * b, m, wc)
+        y2 = _tree(lambda y0, mm, qq: y0 + gamma * (mm - qq), y, m2, q2)
+        return y2, q2, m2
+
+    def shift(self, key, y, q, scale: float = 1.0):
+        """SoteriaFL shifted compression (mirrorless surrogate accumulate).
+
+        c = C(y - q); q' = q + scale*c.  Returns (c, q') -- the caller owns
+        the server-side aggregation of ``c`` (a mean, not a gossip mix).
+        """
+        c = self.compress(key, _tree(jnp.subtract, y, q))
+        return c, _tree(lambda a, b: a + scale * b, q, c)
+
+    # -- wire accounting ----------------------------------------------------
+
+    def wire_bytes(self, tree_or_d, n_agents: Optional[int] = None) -> float:
+        """Model-level bytes crossing agent links per round for one buffer.
+
+        Accepts either an agent-stacked pytree (n and d inferred) or a
+        per-agent parameter count ``d`` plus ``n_agents``.  Accounting
+        follows the mixer's wire format, with each mode's convention taken
+        from :func:`repro.core.gossip.gossip_wire_bytes`: 'ring' exchanges
+        dense neighbor increments (2*d floats per agent, n-independent);
+        'packed' all-gathers (value, int32 index) pairs; 'dense' emulation
+        charges the compressor's own payload (``Compressor.wire_bits``),
+        which is n*d floats for identity and k*(value+index) for the
+        sparse family -- i.e. the bytes a real deployment of that
+        compressor would move.  Compare algorithms under the *same* gossip
+        mode (as benchmarks/ablation.py does); cross-mode numbers follow
+        each wire format's own link accounting.
+        """
+        if n_agents is None:
+            leaves = jax.tree_util.tree_leaves(tree_or_d)
+            n_agents = leaves[0].shape[0]
+            d = sum(int(l.size) // n_agents for l in leaves)
+        else:
+            d = int(tree_or_d)
+        mode = getattr(self.mixer, "wire_mode", "dense")
+        if mode in ("ring", "packed"):
+            frac = getattr(self.mixer, "wire_frac", None)
+            frac = self.compressor.rho if frac is None else frac
+            return gossip_wire_bytes(mode, n_agents, d, frac=frac)
+        return n_agents * self.compressor.wire_bits(d) / 8.0

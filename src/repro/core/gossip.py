@@ -33,8 +33,9 @@ from typing import Callable, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map
 
 from .mixing import Topology
 
@@ -226,19 +227,27 @@ def make_mixer(topology: Topology, mode: str = "dense",
                leaf_specs=None) -> MixFn:
     """leaf_specs: optional pytree of PartitionSpecs matching the gossiped
     buffers (agent axis first, model-parallel dims preserved) -- required for
-    ring/packed under a mesh whose leaves are also model-sharded."""
+    ring/packed under a mesh whose leaves are also model-sharded.
+
+    The returned MixFn is tagged with ``wire_mode`` (and ``wire_frac`` for
+    packed) so the comm-round engine can account per-round wire bytes
+    without being told the gossip mode twice."""
     if mode == "dense":
-        return make_dense_mixer(topology.w)
-    if mode == "ring":
+        mix = make_dense_mixer(topology.w)
+    elif mode == "ring":
         if mesh is None:
             raise ValueError("ring gossip needs a mesh")
-        return make_ring_mixer(topology.w, mesh, agent_axes, leaf_specs)
-    if mode == "packed":
+        mix = make_ring_mixer(topology.w, mesh, agent_axes, leaf_specs)
+    elif mode == "packed":
         if mesh is None or frac is None:
             raise ValueError("packed gossip needs a mesh and a top-k fraction")
-        return make_packed_mixer(topology.w, mesh, frac, agent_axes,
-                                 leaf_specs)
-    raise ValueError(f"unknown gossip mode {mode!r}")
+        mix = make_packed_mixer(topology.w, mesh, frac, agent_axes,
+                                leaf_specs)
+    else:
+        raise ValueError(f"unknown gossip mode {mode!r}")
+    mix.wire_mode = mode
+    mix.wire_frac = frac
+    return mix
 
 
 def gossip_wire_bytes(mode: str, n_agents: int, d_params: int,

@@ -24,6 +24,11 @@ One iteration (Algorithm 1, lines 4-14):
     V^t   = V^{t-1} + gamma (M_v - Q_v) + G^t - G^{t-1}
     c_x   = C(X^{t-1} - Q_x^{t-1});  Q_x += c_x;  M_x += W c_x   (comm)
     X^t   = X^{t-1} + gamma (M_x - Q_x) - eta V^t
+
+The communication + fused-update halves (lines 11-14) are delegated to the
+comm-round engine (:class:`repro.core.comm_round.CommRound`): ``track`` is
+lines 11-12, ``step`` is lines 13-14.  This module only owns the gradient
+oracle (lines 4-10) and the metrics.
 """
 
 from __future__ import annotations
@@ -37,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import clipping
+from .comm_round import CommRound, compress_stacked
 from .compression import Compressor
 from .gossip import MixFn, make_dense_mixer
 from .mixing import Topology
@@ -52,6 +58,10 @@ __all__ = [
 ]
 
 LossFn = Callable[[Any, Any], jax.Array]  # (params, batch) -> scalar loss
+
+# Backwards-compatible alias: the per-agent compression helper now lives in
+# comm_round (it is the engine's default compress path).
+_compress_stacked = compress_stacked
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,19 +116,6 @@ def porter_init(params: Any, n_agents: int, w: Optional[np.ndarray] = None,
                        m_x=m_x, m_v=zeros, step=jnp.zeros((), jnp.int32))
 
 
-def _compress_stacked(comp: Compressor, key: jax.Array, tree):
-    """Compress each agent's row of every leaf independently."""
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    keys = jax.random.split(key, len(leaves))
-
-    def one(k, leaf):
-        n = leaf.shape[0]
-        ks = jax.random.split(k, n)
-        return jax.vmap(lambda kk, row: comp(kk, row))(ks, leaf)
-
-    return treedef.unflatten([one(k, l) for k, l in zip(keys, leaves)])
-
-
 def _agent_gradient(cfg: PorterConfig, loss_fn: LossFn, params, batch,
                     key: jax.Array) -> Tuple[jax.Array, Any]:
     """One agent's G_p (Algorithm 1 lines 5-10).  batch leaves: (b, ...)."""
@@ -140,6 +137,14 @@ def _agent_gradient(cfg: PorterConfig, loss_fn: LossFn, params, batch,
     return loss, g
 
 
+def _resolve_engine(engine: Optional[CommRound], mixer: MixFn,
+                    compressor: Compressor, compress_fn) -> CommRound:
+    if engine is not None:
+        return engine
+    return CommRound(compressor=compressor, mixer=mixer,
+                     compress_fn=compress_fn)
+
+
 def porter_step(
     cfg: PorterConfig,
     loss_fn: LossFn,
@@ -149,6 +154,7 @@ def porter_step(
     batch: Any,
     key: jax.Array,
     compress_fn=None,
+    engine: Optional[CommRound] = None,
 ) -> Tuple[PorterState, Dict[str, jax.Array]]:
     """One PORTER iteration over all agents (pure; jit/pjit-able).
 
@@ -157,11 +163,15 @@ def porter_step(
     (e.g. the shard-local compressor from repro.launch.steps, which keeps
     top-k selection inside each model shard and avoids resharding
     all-gathers).  Defaults to per-agent-row compression of ``compressor``.
+    engine: optional pre-built CommRound (launch.steps builds one with the
+    pallas backend); defaults to an 'auto'-backend engine over
+    (compressor, mixer, compress_fn).  When given, the engine's own
+    compressor/mixer/compress_fn take precedence -- the positional ones are
+    then only used for tracing-compatible signatures.
     """
+    eng = _resolve_engine(engine, mixer, compressor, compress_fn)
     n = jax.tree_util.tree_leaves(state.x)[0].shape[0]
     _, k_noise, k_cv, k_cx = jax.random.split(key, 4)
-    if compress_fn is None:
-        compress_fn = functools.partial(_compress_stacked, compressor)
 
     # ---- stochastic gradients (local; lines 4-10) -------------------------
     agent_keys = jax.random.split(k_noise, n)
@@ -169,27 +179,11 @@ def porter_step(
     losses, g = jax.vmap(grad_fn)(state.x, batch, agent_keys)
     g = jax.tree_util.tree_map(lambda l: l.astype(cfg.grad_dtype), g)
 
-    # ---- gradient-estimate track (lines 11-12) ----------------------------
-    incr_v = compress_fn(k_cv,
-                         jax.tree_util.tree_map(jnp.subtract, state.v,
-                                                state.q_v))
-    q_v = jax.tree_util.tree_map(jnp.add, state.q_v, incr_v)
-    m_v = jax.tree_util.tree_map(jnp.add, state.m_v, mixer(incr_v))
-    gossip_v = jax.tree_util.tree_map(lambda m, q: m - q, m_v, q_v)
-    v = jax.tree_util.tree_map(
-        lambda v0, gv, gn, gp: v0 + cfg.gamma * gv + gn - gp,
-        state.v, gossip_v, g, state.g_prev)
-
-    # ---- parameter update (lines 13-14) -----------------------------------
-    incr_x = compress_fn(k_cx,
-                         jax.tree_util.tree_map(jnp.subtract, state.x,
-                                                state.q_x))
-    q_x = jax.tree_util.tree_map(jnp.add, state.q_x, incr_x)
-    m_x = jax.tree_util.tree_map(jnp.add, state.m_x, mixer(incr_x))
-    gossip_x = jax.tree_util.tree_map(lambda m, q: m - q, m_x, q_x)
-    x = jax.tree_util.tree_map(
-        lambda x0, gx, vv: (x0 + cfg.gamma * gx - cfg.eta * vv).astype(x0.dtype),
-        state.x, gossip_x, v)
+    # ---- comm rounds: track (lines 11-12) + step (lines 13-14) ------------
+    v, q_v, m_v = eng.track(k_cv, state.v, state.q_v, state.m_v, g,
+                            state.g_prev, cfg.gamma)
+    x, q_x, m_x = eng.step(k_cx, state.x, state.q_x, state.m_x, v,
+                           cfg.gamma, cfg.eta)
 
     new_state = PorterState(x=x, v=v, q_x=q_x, q_v=q_v, g_prev=g,
                             m_x=m_x, m_v=m_v, step=state.step + 1)
@@ -198,15 +192,27 @@ def porter_step(
         "consensus_x": consensus_error(x),
         "consensus_v": consensus_error(v),
         "v_norm": clipping.tree_global_norm(v) / np.sqrt(n),
+        # two compressed streams (Q_x and Q_v) per round
+        "wire_bytes": jnp.asarray(2.0 * eng.wire_bytes(state.x),
+                                  jnp.float32),
     }
     return new_state, metrics
 
 
 def make_porter_step(cfg: PorterConfig, loss_fn: LossFn, mixer: MixFn,
-                     compressor: Compressor, compress_fn=None):
-    """Bind the static pieces; returns step(state, batch, key)."""
+                     compressor: Compressor, compress_fn=None,
+                     backend: str = "auto",
+                     interpret: Optional[bool] = None):
+    """Bind the static pieces; returns step(state, batch, key).
+
+    backend / interpret configure the comm-round engine ('auto' = fused
+    Pallas kernels on TPU, jnp reference elsewhere).
+    """
+    engine = CommRound(compressor=compressor, mixer=mixer,
+                       compress_fn=compress_fn, backend=backend,
+                       interpret=interpret)
     return functools.partial(porter_step, cfg, loss_fn, mixer, compressor,
-                             compress_fn=compress_fn)
+                             engine=engine)
 
 
 def average_params(x_stacked):

@@ -19,7 +19,9 @@ accelerates the ill-conditioned MLP problem.  A proof is future work; the
 implementation exists so the framework can train real models with the
 optimizer people actually use.
 
-Communication is *identical* to PORTER (same two compressed streams);
+Communication is *identical* to PORTER (same two compressed streams via the
+same :class:`repro.core.comm_round.CommRound` engine -- the parameter round
+is ``engine.step`` with the preconditioned update as the descent direction);
 moments are purely local state.
 """
 
@@ -27,15 +29,16 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, NamedTuple, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from .comm_round import CommRound
 from .compression import Compressor
 from .gossip import MixFn
 from .porter import (LossFn, PorterConfig, PorterState, _agent_gradient,
-                     _compress_stacked, consensus_error, porter_init)
+                     _resolve_engine, consensus_error, porter_init)
 
 __all__ = ["PorterAdamState", "porter_adam_init", "make_porter_adam_step"]
 
@@ -65,12 +68,12 @@ def porter_adam_step(
     b2: float = 0.999,
     adam_eps: float = 1e-8,
     compress_fn=None,
+    engine: Optional[CommRound] = None,
 ) -> Tuple[PorterAdamState, Dict[str, jax.Array]]:
     st = state.base
     n = jax.tree_util.tree_leaves(st.x)[0].shape[0]
     _, k_noise, k_cv, k_cx = jax.random.split(key, 4)
-    if compress_fn is None:
-        compress_fn = functools.partial(_compress_stacked, compressor)
+    eng = _resolve_engine(engine, mixer, compressor, compress_fn)
 
     # gradients + tracking: identical to Algorithm 1 lines 4-12
     agent_keys = jax.random.split(k_noise, n)
@@ -78,13 +81,8 @@ def porter_adam_step(
     losses, g = jax.vmap(grad_fn)(st.x, batch, agent_keys)
     g = jax.tree_util.tree_map(lambda l: l.astype(cfg.grad_dtype), g)
 
-    incr_v = compress_fn(k_cv, jax.tree_util.tree_map(jnp.subtract, st.v,
-                                                      st.q_v))
-    q_v = jax.tree_util.tree_map(jnp.add, st.q_v, incr_v)
-    m_v = jax.tree_util.tree_map(jnp.add, st.m_v, mixer(incr_v))
-    v = jax.tree_util.tree_map(
-        lambda v0, mm, qq, gn, gp: v0 + cfg.gamma * (mm - qq) + gn - gp,
-        st.v, m_v, q_v, g, st.g_prev)
+    v, q_v, m_v = eng.track(k_cv, st.v, st.q_v, st.m_v, g, st.g_prev,
+                            cfg.gamma)
 
     # local Adam moments on the tracked gradient
     step_no = (st.step + 1).astype(jnp.float32)
@@ -97,24 +95,24 @@ def porter_adam_step(
     update = jax.tree_util.tree_map(
         lambda mm, ss: (mm / bc1) / (jnp.sqrt(ss / bc2) + adam_eps), m, s)
 
-    # parameter step: Algorithm 1 lines 13-14 with the preconditioned update
-    incr_x = compress_fn(k_cx, jax.tree_util.tree_map(jnp.subtract, st.x,
-                                                      st.q_x))
-    q_x = jax.tree_util.tree_map(jnp.add, st.q_x, incr_x)
-    m_x = jax.tree_util.tree_map(jnp.add, st.m_x, mixer(incr_x))
-    x = jax.tree_util.tree_map(
-        lambda x0, mm, qq, uu: (x0 + cfg.gamma * (mm - qq)
-                                - cfg.eta * uu).astype(x0.dtype),
-        st.x, m_x, q_x, update)
+    # parameter round: Algorithm 1 lines 13-14 with the preconditioned update
+    x, q_x, m_x = eng.step(k_cx, st.x, st.q_x, st.m_x, update,
+                           cfg.gamma, cfg.eta)
 
     new_base = PorterState(x=x, v=v, q_x=q_x, q_v=q_v, g_prev=g, m_x=m_x,
                            m_v=m_v, step=st.step + 1)
     metrics = {"loss": jnp.mean(losses), "consensus_x": consensus_error(x),
-               "consensus_v": consensus_error(v)}
+               "consensus_v": consensus_error(v),
+               "wire_bytes": jnp.asarray(2.0 * eng.wire_bytes(st.x),
+                                         jnp.float32)}
     return PorterAdamState(base=new_base, m=m, s=s), metrics
 
 
 def make_porter_adam_step(cfg: PorterConfig, loss_fn: LossFn, mixer: MixFn,
-                          compressor: Compressor, **adam_kw):
+                          compressor: Compressor, backend: str = "auto",
+                          interpret: Optional[bool] = None, **adam_kw):
+    engine = CommRound(compressor=compressor, mixer=mixer,
+                       compress_fn=adam_kw.pop("compress_fn", None),
+                       backend=backend, interpret=interpret)
     return functools.partial(porter_adam_step, cfg, loss_fn, mixer,
-                             compressor, **adam_kw)
+                             compressor, engine=engine, **adam_kw)

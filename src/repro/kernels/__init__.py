@@ -3,6 +3,9 @@
 smooth_clip : fused norm + rescale (+ DP noise)        -- Definition 2
 block_topk  : per-block top-k via bisection select     -- Definition 3
 ef_update   : fused error-feedback/tracking AXPYs      -- Algorithm 1 l.11-14
+              (ef_track / ef_step for PORTER, ef_gossip for CHOCO/Soteria)
+flatten     : pytree <-> padded (tiles, 8*1024) f32 planes -- the flat tile
+              layout the comm-round engine feeds the ef kernels
 rwkv6_chunk : RWKV6 chunked linear-attention scan with VMEM-resident state
 ssd_chunk   : Mamba2 SSD chunked scan (zamba2 backbone), same state trick
 
@@ -10,6 +13,6 @@ ops.py are the public jit'd wrappers (interpret=True on CPU, Mosaic on TPU);
 ref.py + repro.nn.ssm scan references are the oracles the tests sweep
 against (shapes x dtypes, hypothesis).
 """
-from . import ops, ref
+from . import flatten, ops, ref
 
-__all__ = ["ops", "ref"]
+__all__ = ["flatten", "ops", "ref"]

@@ -15,7 +15,12 @@ outside the model itself, which is why this is a kernel (see EXPERIMENTS.md
 
 This kernel fuses the V-side (``ef_track``):   q+=c; m+=wc; v = v + gamma*
 (m-q) + g - gp;   the X-side (``ef_step``) is the same shape with the
-gradient terms swapped for -eta*v.  Tiles: (8, 1024) f32 VPU blocks.
+gradient terms swapped for -eta*v.  ``ef_gossip`` is the two-term tail of
+the same family (q+=c; m+=wc; y = y + gamma*(m-q)) and serves the
+CHOCO-SGD / SoteriaFL compressed-gossip updates through the comm-round
+engine (core/comm_round.py).  Tiles: (8, 1024) f32 VPU blocks; callers feed
+the flat plane layout of kernels/flatten.py so one launch covers every
+(agent, leaf) pair.
 """
 
 from __future__ import annotations
@@ -80,3 +85,36 @@ def ef_step(q, m, x, c, wc, v, gamma, eta, interpret: bool = False):
         interpret=interpret,
     )(q, m, x, c, wc, v, jnp.asarray(gamma, jnp.float32).reshape(1),
       jnp.asarray(eta, jnp.float32).reshape(1))
+
+
+def _gossip_kernel(q_ref, m_ref, y_ref, c_ref, wc_ref, gamma_ref, scale_ref,
+                   q_out, m_out, y_out):
+    scale = scale_ref[0]
+    q = (q_ref[...].astype(jnp.float32)
+         + scale * c_ref[...].astype(jnp.float32))
+    m = (m_ref[...].astype(jnp.float32)
+         + scale * wc_ref[...].astype(jnp.float32))
+    y = y_ref[...].astype(jnp.float32) + gamma_ref[0] * (m - q)
+    q_out[...] = q.astype(q_out.dtype)
+    m_out[...] = m.astype(m_out.dtype)
+    y_out[...] = y.astype(y_out.dtype)
+
+
+def ef_gossip(q, m, y, c, wc, gamma, scale=1.0, interpret: bool = False):
+    """(q,m,y) CHOCO/Soteria update: q += s*c; m += s*wc; y += gamma*(m-q).
+
+    ``scale`` is 1 for CHOCO-SGD and the SoteriaFL shift stepsize alpha for
+    shifted compression.  All tensor inputs (tiles, TILE).
+    """
+    tiles = q.shape[0]
+    blk = pl.BlockSpec((1, TILE), lambda i: (i, 0))
+    scl = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        _gossip_kernel,
+        grid=(tiles,),
+        in_specs=[blk] * 5 + [scl, scl],
+        out_specs=[blk] * 3,
+        out_shape=[jax.ShapeDtypeStruct(q.shape, q.dtype)] * 3,
+        interpret=interpret,
+    )(q, m, y, c, wc, jnp.asarray(gamma, jnp.float32).reshape(1),
+      jnp.asarray(scale, jnp.float32).reshape(1))

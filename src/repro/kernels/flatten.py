@@ -1,0 +1,125 @@
+"""Flat tile-buffer layout: pytree <-> padded ``(tiles, 8*1024)`` f32 planes.
+
+The fused error-feedback kernels (:mod:`repro.kernels.ef_update`) operate on
+2-D tile planes whose rows are one ``(8, 1024)`` f32 VPU tile each.  The
+algorithm layer, however, keeps its state as agent-stacked pytrees (leading
+``n_agents`` axis per leaf).  This module is the bridge: it concatenates all
+leaves of a tree into one flat per-agent vector, zero-pads to a tile
+multiple, and exposes the result as a ``(rows * tiles_per_row, TILE)`` f32
+plane the kernels can grid over in a single launch -- one kernel invocation
+covers every (agent, leaf) pair instead of one pallas_call per leaf.
+
+Padding correctness is the subtle part: the pad region is zero on the way
+in, whatever the kernel computes there is dropped by :func:`from_planes`,
+and per-leaf dtypes are restored on the way out (the planes themselves are
+always f32, the kernels' accumulation dtype).  tests/test_comm_round.py pins
+this for odd, non-tile-aligned shapes.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["LANE", "SUBLANES", "TILE", "FlatSpec", "flat_spec", "to_planes",
+           "from_planes"]
+
+LANE = 1024
+SUBLANES = 8
+TILE = SUBLANES * LANE  # elements per (8, 1024) f32 VPU tile
+
+
+class FlatSpec(NamedTuple):
+    """Static description of a tree's flat layout (per row).
+
+    ``rows`` is the leading (agent) axis size, or 0 for an unstacked tree;
+    ``shapes``/``dtypes``/``sizes`` describe each leaf *without* the row
+    axis; ``d`` is the per-row element count and ``tiles`` the number of
+    TILE-sized rows of the plane each logical row occupies.
+    """
+
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+    sizes: Tuple[int, ...]
+    rows: int
+    d: int
+    tiles: int
+
+    @property
+    def padded(self) -> int:
+        return self.tiles * TILE
+
+    @property
+    def plane_shape(self) -> Tuple[int, int]:
+        n = max(self.rows, 1)
+        return (n * self.tiles, TILE)
+
+
+def flat_spec(tree, stacked: bool = True) -> FlatSpec:
+    """Compute the flat layout of ``tree`` (leaves may be ShapeDtypeStructs).
+
+    stacked: leaves carry a leading agent axis (must agree across leaves),
+    which becomes ``spec.rows``; the per-row vector concatenates the
+    remaining dims of every leaf in tree-flatten order.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if not leaves:
+        raise ValueError("cannot flatten an empty pytree")
+    if stacked:
+        rows = leaves[0].shape[0]
+        for l in leaves:
+            if l.ndim < 1 or l.shape[0] != rows:
+                raise ValueError(
+                    "stacked flatten needs a shared leading agent axis; got "
+                    f"shapes {[tuple(x.shape) for x in leaves]}")
+        shapes = tuple(tuple(l.shape[1:]) for l in leaves)
+    else:
+        rows = 0
+        shapes = tuple(tuple(l.shape) for l in leaves)
+    sizes = tuple(math.prod(s) if s else 1 for s in shapes)
+    d = sum(sizes)
+    tiles = -(-d // TILE)
+    return FlatSpec(treedef=treedef, shapes=shapes,
+                    dtypes=tuple(l.dtype for l in leaves), sizes=sizes,
+                    rows=rows, d=d, tiles=tiles)
+
+
+def to_planes(tree, spec: FlatSpec) -> jax.Array:
+    """Pack ``tree`` into an f32 plane of shape ``spec.plane_shape``.
+
+    The tree must match ``spec`` structurally; its leaves may have any
+    floating dtype (cast to f32 here, restored by :func:`from_planes`).
+    """
+    leaves = jax.tree_util.tree_leaves(tree)
+    if spec.rows:
+        parts = [l.reshape(l.shape[0], -1).astype(jnp.float32)
+                 for l in leaves]
+        flat = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+        flat = jnp.pad(flat, ((0, 0), (0, spec.padded - spec.d)))
+        return flat.reshape(spec.rows * spec.tiles, TILE)
+    parts = [l.reshape(-1).astype(jnp.float32) for l in leaves]
+    flat = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+    flat = jnp.pad(flat, (0, spec.padded - spec.d))
+    return flat.reshape(spec.tiles, TILE)
+
+
+def from_planes(planes: jax.Array, spec: FlatSpec):
+    """Invert :func:`to_planes`: drop padding, split leaves, restore dtypes."""
+    if spec.rows:
+        flat = planes.reshape(spec.rows, spec.padded)[:, :spec.d]
+        offs, out = 0, []
+        for shape, dtype, size in zip(spec.shapes, spec.dtypes, spec.sizes):
+            leaf = flat[:, offs:offs + size]
+            out.append(leaf.reshape((spec.rows,) + shape).astype(dtype))
+            offs += size
+        return spec.treedef.unflatten(out)
+    flat = planes.reshape(-1)[:spec.d]
+    offs, out = 0, []
+    for shape, dtype, size in zip(spec.shapes, spec.dtypes, spec.sizes):
+        out.append(flat[offs:offs + size].reshape(shape).astype(dtype))
+        offs += size
+    return spec.treedef.unflatten(out)

@@ -23,7 +23,7 @@ from . import ssd_chunk as _ssd
 from . import smooth_clip as _sc
 from . import ref
 
-__all__ = ["smooth_clip", "block_topk", "ef_track", "ef_step",
+__all__ = ["smooth_clip", "block_topk", "ef_track", "ef_step", "ef_gossip",
            "rwkv6_scan", "ssd_scan", "default_interpret"]
 
 
@@ -103,6 +103,18 @@ def ef_step(q, m, x, c, wc, v, gamma, eta, interpret: bool | None = None):
                              interpret=interpret)
     unpad = lambda a: a.reshape(-1)[:d].reshape(shape)
     return unpad(qo), unpad(mo), unpad(xo)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ef_gossip(q, m, y, c, wc, gamma, scale=1.0, interpret: bool | None = None):
+    """Fused CHOCO/Soteria update (q += s*c; m += s*wc; y += gamma*(m-q))."""
+    interpret = default_interpret() if interpret is None else interpret
+    shape = q.shape
+    (q2, m2, y2, c2, wc2), d = _tile_args((q, m, y, c, wc), _ef.TILE)
+    qo, mo, yo = _ef.ef_gossip(q2, m2, y2, c2, wc2, gamma, scale,
+                               interpret=interpret)
+    unpad = lambda a: a.reshape(-1)[:d].reshape(shape)
+    return unpad(qo), unpad(mo), unpad(yo)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -42,6 +42,14 @@ def ef_step_ref(q, m, x, c, wc, v, gamma, eta):
     return q2.astype(q.dtype), m2.astype(m.dtype), x2.astype(x.dtype)
 
 
+def ef_gossip_ref(q, m, y, c, wc, gamma, scale=1.0):
+    f = jnp.float32
+    q2 = q.astype(f) + scale * c.astype(f)
+    m2 = m.astype(f) + scale * wc.astype(f)
+    y2 = y.astype(f) + gamma * (m2 - q2)
+    return q2.astype(q.dtype), m2.astype(m.dtype), y2.astype(y.dtype)
+
+
 def rwkv6_scan_ref(r, k, v, logw, u, s0):
     """Oracle: the exact per-token RWKV6 recurrence from repro.nn.ssm."""
     from repro.nn.ssm import rwkv_scan_ref

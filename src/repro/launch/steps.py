@@ -55,7 +55,7 @@ def make_shard_local_compress(comp, mesh: Mesh, leaf_specs):
         raise ValueError("shard-local compression needs a deterministic "
                          "compressor (top_k / block_top_k)")
 
-    from jax import shard_map
+    from repro.compat import shard_map
 
     def compress(key, tree):
         del key  # deterministic
@@ -127,12 +127,23 @@ def build_train_step(
     buffer_dtype=jnp.float32,
     remat: bool = True,
     local_compress: bool = False,
+    comm_backend: str = "auto",
 ) -> TrainSetup:
     """PORTER train step, sharded for ``mesh``.
 
     Hyper-parameters follow the paper's stable choices:
     gamma = (1-alpha) * rho / 2, eta from O(1/L) heuristics (configurable by
     the caller for real runs; the dry-run only needs a lowerable program).
+
+    comm_backend: backend of the comm-round engine -- 'auto' runs the fused
+    ef_track/ef_step Pallas kernels on TPU and the jnp reference elsewhere;
+    shard-local compression and the packed wire format compose with either
+    (compression/mixing stay in the pytree domain, only the AXPY chain runs
+    over the flat tile planes).  CAVEAT: the flat plane is sharded along
+    the agent axis only, so with *model*-sharded parameter leaves the
+    pallas path reshards on pack/unpack -- prefer 'ref' for
+    tensor-parallel layouts until per-shard planes land (comm_round.py
+    docstring).
     """
     cfg = dataclasses.replace(cfg, remat=remat)
     bundle = build_model(cfg)
@@ -157,7 +168,7 @@ def build_train_step(
     compress_fn = (make_shard_local_compress(comp, mesh, stacked_specs)
                    if local_compress else None)
     step = make_porter_step(pcfg, bundle.loss, mixer, comp,
-                            compress_fn=compress_fn)
+                            compress_fn=compress_fn, backend=comm_backend)
     state_specs = PorterState(
         x=stacked_specs, v=stacked_specs, q_x=stacked_specs,
         q_v=stacked_specs, g_prev=stacked_specs, m_x=stacked_specs,
@@ -168,7 +179,8 @@ def build_train_step(
     batch_sh = _shardings(mesh, batch_specs)
     repl = NamedSharding(mesh, P())
     metrics_sh = {k: repl for k in
-                  ("loss", "consensus_x", "consensus_v", "v_norm")}
+                  ("loss", "consensus_x", "consensus_v", "v_norm",
+                   "wire_bytes")}
     jitted = jax.jit(step,
                      in_shardings=(state_sh, batch_sh, repl),
                      out_shardings=(state_sh, metrics_sh))

@@ -124,7 +124,8 @@ def main(argv=None):
             history.append(m)
             print(f"  step {t:5d}  loss {m['loss']:.4f}  "
                   f"consensus_x {m['consensus_x']:.3e}  "
-                  f"|v| {m['v_norm']:.3f}  ({m['wall_s']}s)")
+                  f"|v| {m['v_norm']:.3f}  "
+                  f"wire {m['wire_bytes']/1e6:.3f}MB/round  ({m['wall_s']}s)")
         if args.ckpt_dir and (t + 1) % args.ckpt_every == 0:
             from repro.launch.checkpoint import save_state
             save_state(args.ckpt_dir, state)

@@ -1,0 +1,19 @@
+"""Shared test config.
+
+``hypothesis`` is an optional dependency (the property sweeps use it); on
+containers without it the affected modules are skipped at collection instead
+of aborting the whole run with an ImportError.
+"""
+
+import importlib.util
+
+collect_ignore = []
+if importlib.util.find_spec("hypothesis") is None:
+    collect_ignore += [
+        "test_clipping_mixing_privacy.py",
+        "test_compression.py",
+        "test_kernel_rwkv6.py",
+        "test_kernel_ssd.py",
+        "test_kernels.py",
+        "test_porter_properties.py",
+    ]

@@ -1,0 +1,305 @@
+"""Comm-round engine tests: the Pallas (interpret-mode) backend must match
+the pure-jnp reference path bit-for-close for every algorithm that routes
+through CommRound, across odd, non-tile-aligned pytree shapes (flat-plane
+padding correctness), and the wire-byte metric must be uniform across
+algorithms.
+
+These tests run without hypothesis and are never skipped, so ef_track /
+ef_step / ef_gossip are always exercised via interpret=True on CPU CI.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CommRound, PorterConfig, make_compressor, make_mixer,
+                        make_porter_step, make_topology, porter_init)
+from repro.core import baselines as BL
+from repro.core.comm_round import compress_stacked
+from repro.core.porter_adam import make_porter_adam_step, porter_adam_init
+from repro.kernels import flatten as FL
+from repro.kernels import ops, ref
+
+N = 5  # agents
+
+# odd, non-tile-aligned shapes: scalar leaf, non-multiple-of-8 vector, 3-D
+# leaf, and one leaf that crosses a tile boundary (8*1024 elements per tile)
+ODD_PARAMS = {
+    "b": jnp.zeros(()),
+    "w": jnp.zeros((123,)),
+    "k": jnp.zeros((7, 11, 3)),
+    "big": jnp.zeros((9000,)),
+}
+
+
+def _loss_fn(params, batch):
+    f, l = batch
+    f = jnp.atleast_2d(f)
+    l = jnp.atleast_1d(l)
+    pred = (f @ params["w"] + params["b"] + jnp.sum(params["k"])
+            + jnp.mean(params["big"]))
+    return jnp.mean((pred - l) ** 2)
+
+
+def _batch(key, n=N, b=4):
+    k1, k2 = jax.random.split(key)
+    return (jax.random.normal(k1, (n, b, 123)),
+            jax.random.normal(k2, (n, b)))
+
+
+def _top():
+    return make_topology("erdos_renyi", N, weights="best_constant", p=0.9,
+                         seed=2)
+
+
+def _tree_allclose(a, b, atol=1e-5):
+    fa = jax.tree_util.tree_leaves(a)
+    fb = jax.tree_util.tree_leaves(b)
+    for x, y in zip(fa, fb):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), atol=atol,
+                                   rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flat tile layout: padding correctness
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("stacked", [True, False])
+def test_flatten_roundtrip_odd_shapes(stacked):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, len(ODD_PARAMS))
+    lead = (N,) if stacked else ()
+    tree = {name: jax.random.normal(k, lead + p.shape).astype(
+                jnp.float32 if i % 2 == 0 else jnp.bfloat16)
+            for i, (k, (name, p)) in enumerate(zip(ks, ODD_PARAMS.items()))}
+    spec = FL.flat_spec(tree, stacked=stacked)
+    planes = FL.to_planes(tree, spec)
+    assert planes.shape == spec.plane_shape
+    assert planes.shape[-1] == FL.TILE
+    assert planes.dtype == jnp.float32
+    # padding region is zero (kernels may compute garbage there; from_planes
+    # must never read it back)
+    if stacked:
+        flat = planes.reshape(N, -1)
+        assert float(jnp.abs(flat[:, spec.d:]).max()) == 0.0
+    back = FL.from_planes(planes, spec)
+    for name in tree:
+        assert back[name].dtype == tree[name].dtype
+        np.testing.assert_allclose(np.asarray(back[name], np.float32),
+                                   np.asarray(tree[name], np.float32),
+                                   atol=2e-2 if tree[name].dtype ==
+                                   jnp.bfloat16 else 1e-7)
+
+
+def test_flatten_rejects_mismatched_agent_axis():
+    with pytest.raises(ValueError):
+        FL.flat_spec({"a": jnp.zeros((4, 3)), "b": jnp.zeros((5, 3))})
+
+
+# ---------------------------------------------------------------------------
+# ef_gossip kernel vs oracle (ef_track/ef_step sweeps live in test_kernels)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d", [1, 123, 8192, 9000])
+@pytest.mark.parametrize("scale", [1.0, 0.5])
+def test_ef_gossip_matches_ref(d, scale):
+    keys = jax.random.split(jax.random.PRNGKey(d), 5)
+    q, m, y, c, wc = [jax.random.normal(k, (d,)) for k in keys]
+    out_k = ops.ef_gossip(q, m, y, c, wc, 0.37, scale, interpret=True)
+    out_r = ref.ef_gossip_ref(q, m, y, c, wc, 0.37, scale)
+    for a, b in zip(out_k, out_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_ef_track_and_step_fused_semantics():
+    """The engine's pallas path == running ef_track/ef_step on flat planes
+    == the jnp reference, on a non-tile-aligned buffer."""
+    d = 355
+    keys = jax.random.split(jax.random.PRNGKey(1), 7)
+    q, m, v, c, wc, g, gp = [jax.random.normal(k, (d,)) for k in keys]
+    qo, mo, vo = ops.ef_track(q, m, v, c, wc, g, gp, 0.2, interpret=True)
+    qr, mr, vr = ref.ef_track_ref(q, m, v, c, wc, g, gp, 0.2)
+    for a, b in zip((qo, mo, vo), (qr, mr, vr)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    xo = ops.ef_step(q, m, v, c, wc, g, 0.2, 0.05, interpret=True)
+    xr = ref.ef_step_ref(q, m, v, c, wc, g, 0.2, 0.05)
+    for a, b in zip(xo, xr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# engine parity: pallas(interpret) vs ref across algorithms and variants
+# ---------------------------------------------------------------------------
+
+def _porter_cfg(variant):
+    top = _top()
+    gamma = 0.5 * (1 - top.alpha) * 0.1
+    sigma = 0.05 if variant == "dp" else 0.0
+    return top, PorterConfig(eta=0.03, gamma=gamma, tau=1.0, variant=variant,
+                             sigma_p=sigma)
+
+
+@pytest.mark.parametrize("variant,comp_name",
+                         [("gc", "top_k"), ("dp", "random_k"),
+                          ("beer", "block_top_k")])
+def test_porter_engine_parity(variant, comp_name):
+    """PORTER-GC/DP/BEER: pallas interpret backend == jnp reference backend
+    after several steps, odd shapes, atol 1e-5."""
+    top, cfg = _porter_cfg(variant)
+    comp = make_compressor(comp_name, frac=0.1)
+    mixer = make_mixer(top, "dense")
+    state_ref = state_pal = porter_init(ODD_PARAMS, N, w=top.w)
+    step_ref = jax.jit(make_porter_step(cfg, _loss_fn, mixer, comp,
+                                        backend="ref"))
+    step_pal = jax.jit(make_porter_step(cfg, _loss_fn, mixer, comp,
+                                        backend="pallas", interpret=True))
+    key = jax.random.PRNGKey(7)
+    for _ in range(3):
+        key, kb, ks = jax.random.split(key, 3)
+        batch = _batch(kb)
+        state_ref, m_ref = step_ref(state_ref, batch, ks)
+        state_pal, m_pal = step_pal(state_pal, batch, ks)
+    for field in ("x", "v", "q_x", "q_v", "m_x", "m_v", "g_prev"):
+        _tree_allclose(getattr(state_ref, field), getattr(state_pal, field))
+    np.testing.assert_allclose(float(m_ref["loss"]), float(m_pal["loss"]),
+                               rtol=1e-5)
+    assert float(m_ref["wire_bytes"]) == float(m_pal["wire_bytes"]) > 0
+
+
+def test_porter_adam_engine_parity():
+    top, cfg = _porter_cfg("gc")
+    comp = make_compressor("top_k", frac=0.1)
+    mixer = make_mixer(top, "dense")
+    state_ref = state_pal = porter_adam_init(ODD_PARAMS, N, w=top.w)
+    step_ref = jax.jit(make_porter_adam_step(cfg, _loss_fn, mixer, comp,
+                                             backend="ref"))
+    step_pal = jax.jit(make_porter_adam_step(cfg, _loss_fn, mixer, comp,
+                                             backend="pallas",
+                                             interpret=True))
+    key = jax.random.PRNGKey(9)
+    for _ in range(3):
+        key, kb, ks = jax.random.split(key, 3)
+        batch = _batch(kb)
+        state_ref, _ = step_ref(state_ref, batch, ks)
+        state_pal, _ = step_pal(state_pal, batch, ks)
+    _tree_allclose(state_ref.base.x, state_pal.base.x)
+    _tree_allclose(state_ref.m, state_pal.m)
+    _tree_allclose(state_ref.s, state_pal.s)
+
+
+def test_choco_engine_parity():
+    top = _top()
+    comp = make_compressor("top_k", frac=0.1)
+    mixer = make_mixer(top, "dense")
+    gamma = 0.3 * (1 - top.alpha) * 0.1
+    eng_pal = CommRound(compressor=comp, mixer=mixer, backend="pallas",
+                        interpret=True)
+    state_ref = state_pal = BL.choco_init(ODD_PARAMS, N)
+    step_ref = jax.jit(functools.partial(BL.choco_step, 0.03, gamma,
+                                         _loss_fn, mixer, comp))
+    step_pal = jax.jit(functools.partial(BL.choco_step, 0.03, gamma,
+                                         _loss_fn, mixer, comp,
+                                         engine=eng_pal))
+    key = jax.random.PRNGKey(11)
+    for _ in range(3):
+        key, kb, ks = jax.random.split(key, 3)
+        batch = _batch(kb)
+        state_ref, m_ref = step_ref(state_ref, batch, ks)
+        state_pal, m_pal = step_pal(state_pal, batch, ks)
+    for field in ("x", "q", "m"):
+        _tree_allclose(getattr(state_ref, field), getattr(state_pal, field))
+    assert float(m_ref["wire_bytes"]) == float(m_pal["wire_bytes"]) > 0
+
+
+# ---------------------------------------------------------------------------
+# engine invariants and metrics schema
+# ---------------------------------------------------------------------------
+
+def test_engine_preserves_mirror_identity():
+    """m == W q after every engine round (the wire-protocol identity),
+    through the pallas path."""
+    top, cfg = _porter_cfg("gc")
+    comp = make_compressor("top_k", frac=0.2)
+    mixer = make_mixer(top, "dense")
+    state = porter_init(ODD_PARAMS, N, w=top.w)
+    step = jax.jit(make_porter_step(cfg, _loss_fn, mixer, comp,
+                                    backend="pallas", interpret=True))
+    key = jax.random.PRNGKey(3)
+    for _ in range(4):
+        key, kb, ks = jax.random.split(key, 3)
+        state, _ = step(state, _batch(kb), ks)
+    w = jnp.asarray(top.w, jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(state.m_x["w"]),
+        np.asarray(jnp.einsum("ij,jd->id", w, state.q_x["w"])),
+        rtol=1e-3, atol=1e-5)
+
+
+def test_wire_bytes_uniform_schema():
+    """Every algorithm reports wire_bytes; PORTER moves 2x CHOCO's stream
+    and DSGD pays the dense price."""
+    top = _top()
+    comp = make_compressor("top_k", frac=0.05)
+    mixer = make_mixer(top, "dense")
+    eng = CommRound(compressor=comp, mixer=mixer)
+    d = sum(int(np.prod(p.shape)) for p in
+            jax.tree_util.tree_leaves(ODD_PARAMS))
+    one_stream = eng.wire_bytes(d, n_agents=N)
+    assert one_stream > 0
+    # dense identity: full n*d*4 bytes
+    ident = CommRound(compressor=make_compressor("identity"), mixer=mixer)
+    assert ident.wire_bytes(d, n_agents=N) == pytest.approx(4.0 * N * d)
+    # sparse stream strictly cheaper than dense
+    assert one_stream < ident.wire_bytes(d, n_agents=N)
+
+    key = jax.random.PRNGKey(5)
+    batch = _batch(key)
+    _, cfg = _porter_cfg("gc")
+    pstate = porter_init(ODD_PARAMS, N, w=top.w)
+    pstep = jax.jit(make_porter_step(cfg, _loss_fn, mixer, comp))
+    _, pm = pstep(pstate, batch, key)
+    cstate = BL.choco_init(ODD_PARAMS, N)
+    cstep = jax.jit(functools.partial(BL.choco_step, 0.03, 0.01, _loss_fn,
+                                      mixer, comp))
+    _, cm = cstep(cstate, batch, key)
+    dstate = BL.dsgd_init(ODD_PARAMS, N)
+    dstep = jax.jit(functools.partial(BL.dsgd_step, 0.03, 1.0, _loss_fn,
+                                      mixer))
+    _, dm = dstep(dstate, batch, key)
+    sstate = BL.soteria_init(ODD_PARAMS, N)
+    sstep = jax.jit(functools.partial(BL.soteria_step, 0.03, 0.5, _loss_fn,
+                                      comp, tau=1.0, sigma_p=0.01))
+    _, sm = sstep(sstate, batch, key)
+    for m in (pm, cm, dm, sm):
+        assert "wire_bytes" in m and "loss" in m
+    # PORTER gossips two compressed streams, CHOCO one
+    assert float(pm["wire_bytes"]) == pytest.approx(2 * float(cm["wire_bytes"]))
+    # consensus reported by all decentralized algorithms
+    for m in (pm, cm, dm):
+        assert "consensus_x" in m
+    # DSGD uncompressed: strictly more bytes than CHOCO's sparse stream
+    assert float(dm["wire_bytes"]) > float(cm["wire_bytes"])
+
+
+def test_engine_rejects_unknown_backend():
+    comp = make_compressor("top_k", frac=0.1)
+    with pytest.raises(ValueError):
+        CommRound(compressor=comp, mixer=None, backend="cuda")
+
+
+def test_compress_stacked_per_agent_rows():
+    """Each agent's row is compressed independently (k per row, not global)."""
+    comp = make_compressor("top_k", frac=0.5)
+    tree = {"w": jnp.asarray([[1.0, -2.0, 0.5, 3.0],
+                              [10.0, 0.1, -0.2, 0.05]])}
+    out = compress_stacked(comp, jax.random.PRNGKey(0), tree)["w"]
+    # frac=0.5 of 4 -> 2 kept per row
+    assert int((out[0] != 0).sum()) == 2
+    assert int((out[1] != 0).sum()) == 2
+    np.testing.assert_allclose(np.asarray(out[0]), [0, -2.0, 0, 3.0])
+    np.testing.assert_allclose(np.asarray(out[1]), [10.0, 0, -0.2, 0])

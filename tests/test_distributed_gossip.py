@@ -42,7 +42,7 @@ SCRIPT = textwrap.dedent("""
     # compress per (agent row x model shard) = per shard-local block
     comp = make_compressor("block_top_k", frac=0.25, block=4)
     def shard_local(t):
-        from jax import shard_map
+        from repro.compat import shard_map
         f = shard_map(lambda tt: jax.tree_util.tree_map(
             lambda l: comp(None, l), tt), mesh=mesh, in_specs=(specs,),
             out_specs=specs, check_vma=False)

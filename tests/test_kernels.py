@@ -101,6 +101,19 @@ def test_ef_step_sweep(d, seed, dt):
                                    np.asarray(b, np.float32), **_tol(dtype))
 
 
+@given(st.integers(1, 30000), st.integers(0, 10**6), st.sampled_from([0, 1]))
+@settings(max_examples=15, deadline=None)
+def test_ef_gossip_sweep(d, seed, dt):
+    dtype = DTYPES[dt]
+    keys = jax.random.split(jax.random.PRNGKey(seed % 997), 5)
+    args = [jax.random.normal(k, (d,)).astype(dtype) for k in keys]
+    out_k = ops.ef_gossip(*args, 0.37, 0.5, interpret=True)
+    out_r = ref.ef_gossip_ref(*args, 0.37, 0.5)
+    for a, b in zip(out_k, out_r):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), **_tol(dtype))
+
+
 def test_ef_track_matches_porter_algebra():
     """The fused kernel implements exactly lines 11-12 of Algorithm 1."""
     d = 4096

@@ -99,6 +99,20 @@ def test_beer_is_unclipped_porter(problem):
                                rtol=1e-4, atol=1e-6)
 
 
+def test_beer_config_rejects_clipping_overrides():
+    """beer_config must refuse tau/variant instead of silently dropping them
+    (a silently-ignored tau would run a different algorithm than asked)."""
+    from repro.core.beer import beer_config
+    with pytest.raises(ValueError, match="tau"):
+        beer_config(eta=0.05, gamma=0.1, tau=2.0)
+    with pytest.raises(ValueError, match="variant"):
+        beer_config(eta=0.05, gamma=0.1, variant="gc")
+    # other PorterConfig knobs still pass through
+    cfg = beer_config(eta=0.05, gamma=0.1, clip_mode="piecewise")
+    assert cfg.variant == "beer" and cfg.tau == float("inf")
+    assert cfg.clip_mode == "piecewise"
+
+
 def test_vbar_tracks_gbar(problem):
     """Gradient tracking invariant: mean_i v_i == mean_i g_p,i (exactly,
     by induction -- the gossip term is mean-zero)."""
