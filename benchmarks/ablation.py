@@ -11,11 +11,14 @@ measured by exactly the bytes their wire format moves per round:
     DSGD      : n * d floats, uncompressed                (1 buffer)
     CHOCO-SGD : n * (rho*d values + indices)              (1 buffer)
     PORTER    : n * (rho*d values + indices) x 2 buffers  (Q_x and Q_v)
+
+Every contender is declared as an ExperimentSpec and built through the
+``repro.api`` facade -- the equal footing is the registry's uniform
+init/step/metrics protocol.
 """
 
 from __future__ import annotations
 
-import functools
 import json
 from pathlib import Path
 
@@ -23,11 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (PorterConfig, average_params, make_compressor,
-                        make_mixer, make_porter_step, make_topology,
-                        porter_init)
-from repro.core import baselines as BL
-from repro.core.gossip import make_dense_mixer
+from repro.api import build
+from repro.core import average_params
 from repro.data import a9a_like, agent_batch_iterator, shard_to_agents
 from benchmarks import common as C
 
@@ -47,8 +47,6 @@ def run_ablation(steps=400, seed=0):
         g = jax.grad(loss_fn)(p, flat)
         return float(jnp.sqrt(sum(jnp.sum(v ** 2)
                                   for v in jax.tree_util.tree_leaves(g))))
-
-    comp = make_compressor("top_k", frac=RHO)
 
     results = {}
 
@@ -71,12 +69,21 @@ def run_ablation(steps=400, seed=0):
                          "MB_to_target": mb, "final_grad": final,
                          "bytes_per_round": bytes_per_round}
 
-    def porter_iter(variant):
-        gamma = 0.5 * (1 - top.alpha) * RHO
-        cfg = PorterConfig(eta=0.05, gamma=gamma, tau=1.0, variant=variant)
-        state = porter_init(params0, C.N_AGENTS, w=top.w)
-        step = jax.jit(make_porter_step(cfg, loss_fn,
-                                        make_mixer(top, "dense"), comp))
+    # the four contenders, on one declarative footing (gamma_scale mirrors
+    # each method's stable tuning: PORTER/BEER 0.5, CHOCO 0.3; DSGD is
+    # uncompressed so its gossip weight defaults to 1)
+    base = C.PAPER_SPEC.replace(compressor="top_k", frac=RHO, eta=0.05)
+    specs = {
+        "porter_gc": base.replace(algo="porter-gc", tau=1.0),
+        "beer": base.replace(algo="beer", tau=None),
+        "choco_sgd": base.replace(algo="choco", tau=None, gamma_scale=0.3),
+        "dsgd": base.replace(algo="dsgd", tau=None),
+    }
+
+    def algo_iter(spec):
+        algo = build(spec, loss_fn, topology=top)
+        state = algo.init(params0)
+        step = jax.jit(algo.step)
         it = agent_batch_iterator(xs, ys, batch=4, seed=seed)
         key = jax.random.PRNGKey(seed)
         for t in range(steps):
@@ -85,35 +92,8 @@ def run_ablation(steps=400, seed=0):
             if t % 10 == 0 or t == steps - 1:
                 yield t, average_params(state.x), m
 
-    def choco_iter():
-        gamma = 0.3 * (1 - top.alpha) * RHO
-        state = BL.choco_init(params0, C.N_AGENTS)
-        step = jax.jit(functools.partial(BL.choco_step, 0.05, gamma, loss_fn,
-                                         make_dense_mixer(top.w), comp))
-        it = agent_batch_iterator(xs, ys, batch=4, seed=seed)
-        key = jax.random.PRNGKey(seed)
-        for t in range(steps):
-            key, k = jax.random.split(key)
-            state, m = step(state, next(it), k)
-            if t % 10 == 0 or t == steps - 1:
-                yield t, average_params(state.x), m
-
-    def dsgd_iter():
-        state = BL.dsgd_init(params0, C.N_AGENTS)
-        step = jax.jit(functools.partial(BL.dsgd_step, 0.05, 1.0, loss_fn,
-                                         make_dense_mixer(top.w)))
-        it = agent_batch_iterator(xs, ys, batch=4, seed=seed)
-        key = jax.random.PRNGKey(seed)
-        for t in range(steps):
-            key, k = jax.random.split(key)
-            state, m = step(state, next(it), k)
-            if t % 10 == 0 or t == steps - 1:
-                yield t, average_params(state.x), m
-
-    track("porter_gc", porter_iter("gc"))
-    track("beer", porter_iter("beer"))
-    track("choco_sgd", choco_iter())
-    track("dsgd", dsgd_iter())
+    for name, spec in specs.items():
+        track(name, algo_iter(spec))
     return results
 
 

@@ -32,7 +32,7 @@ if __package__ in (None, ""):  # allow `python benchmarks/bench_comm_round.py`
 import jax
 import jax.numpy as jnp
 
-from repro.core import CommRound, make_compressor, make_mixer, make_topology
+from repro.api import ExperimentSpec, build_engine
 
 # the paper's sparse family; 'rand_k' is the registry's random_k
 COMPRESSORS = (("top_k", "top_k"), ("block_top_k", "block_top_k"),
@@ -66,8 +66,10 @@ def timed_us(fn, *args, reps: int):
 
 
 def bench(n_agents: int, d: int, frac: float, reps: int):
-    top = make_topology("ring", n_agents, weights="metropolis")
-    mixer = make_mixer(top, "dense")
+    base = ExperimentSpec(n_agents=n_agents, topology="ring",
+                          topology_weights="metropolis", frac=frac,
+                          interpret=None if jax.default_backend() == "tpu"
+                          else True)
     key = jax.random.PRNGKey(0)
     y, q, m, g, gp = make_buffers(key, n_agents, d)
     gamma, eta = 0.1, 0.05
@@ -77,11 +79,9 @@ def bench(n_agents: int, d: int, frac: float, reps: int):
     print("compressor,backend,us_per_round,bytes_per_round")
     rows = []
     for label, reg_name in COMPRESSORS:
-        comp = make_compressor(reg_name, frac=frac)
         for backend in ("ref", "pallas"):
-            eng = CommRound(compressor=comp, mixer=mixer, backend=backend,
-                            interpret=None if jax.default_backend() == "tpu"
-                            else True)
+            eng = build_engine(base.replace(compressor=reg_name,
+                                            comm_backend=backend))
 
             @jax.jit
             def one_round(key, y, q, m, g, gp, eng=eng):

@@ -1,10 +1,13 @@
 """Shared benchmark plumbing: experiment protocol of paper Section 5
 (10 agents, ER(0.8), random-5% compression, tau=1, batch 1, best-tuned-ish
-learning rates) over synthetic stand-ins with the paper's dimensions."""
+learning rates) over synthetic stand-ins with the paper's dimensions.
+
+This module is the benchmarks' one stop for algorithm construction: the
+``run_*`` helpers and the topology builders delegate to the ``repro.api``
+facade, so no benchmark wires mixers/engines by hand."""
 
 from __future__ import annotations
 
-import functools
 import time
 from typing import Callable, Dict, List
 
@@ -12,13 +15,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (PorterConfig, average_params, calibrate_sigma,
-                        make_compressor, make_mixer, make_porter_step,
-                        make_topology, porter_init)
-from repro.core import baselines as BL
-from repro.core.gossip import make_dense_mixer
+from repro.api import ExperimentSpec, build, resolve_topology
+from repro.core import average_params, calibrate_sigma
 
 N_AGENTS = 10
+
+# the paper's Section-5 graph: ER(0.8) with the best-constant weights
+PAPER_SPEC = ExperimentSpec(n_agents=N_AGENTS, topology="erdos_renyi",
+                            topology_weights="best_constant", topology_p=0.8,
+                            topology_seed=1)
 
 
 def timed(fn, *args, reps=3):
@@ -31,8 +36,14 @@ def timed(fn, *args, reps=3):
 
 
 def paper_topology(seed=1):
-    return make_topology("erdos_renyi", N_AGENTS, weights="best_constant",
-                         p=0.8, seed=seed)
+    return resolve_topology(PAPER_SPEC.replace(topology_seed=seed))
+
+
+def topology(kind: str, seed=1):
+    """A best-constant-weighted graph of the given kind at benchmark scale
+    (the facade-backed replacement for ad-hoc make_topology calls)."""
+    return resolve_topology(PAPER_SPEC.replace(topology=kind,
+                                               topology_seed=seed))
 
 
 def logreg_loss(lam=0.2):
@@ -83,55 +94,54 @@ def accuracy_fn(kind):
     return acc
 
 
-def run_porter(loss_fn, params0, it, top, steps, eta, variant="dp",
-               sigma_p=0.0, frac=0.05, comp_name="random_k", tau=1.0,
-               eval_every=25, eval_cb=None, seed=0):
-    comp = make_compressor(comp_name, frac=frac)
-    mixer = make_mixer(top, "dense")
-    gamma = 0.5 * (1 - top.alpha) * frac
-    cfg = PorterConfig(eta=eta, gamma=gamma, tau=tau, variant=variant,
-                       sigma_p=sigma_p)
-    state = porter_init(params0, top.n, w=top.w)
-    step = jax.jit(make_porter_step(cfg, loss_fn, mixer, comp))
+def run_algorithm(spec, loss_fn, params0, it, steps, *, topology=None,
+                  eval_every=25, eval_cb=None, eval_point=None, seed=0):
+    """Build ``spec`` through the facade and run it for ``steps`` rounds.
+
+    eval_cb(point, loss) -> tuple is sampled every ``eval_every`` rounds;
+    ``eval_point`` maps the state to the evaluation iterate (defaults to the
+    average replica for agent-stacked states, the server model otherwise).
+    """
+    algo = build(spec, loss_fn, topology=topology)
+    if eval_point is None:
+        eval_point = ((lambda s: average_params(s.x))
+                      if algo.info.decentralized else (lambda s: s.x))
+    state = algo.init(params0, n_agents=(topology.n if topology is not None
+                                         else None))
+    step = jax.jit(algo.step)
     key = jax.random.PRNGKey(seed)
     curve = []
     for t in range(steps):
         key, k = jax.random.split(key)
         state, m = step(state, next(it), k)
         if eval_cb and (t % eval_every == 0 or t == steps - 1):
-            curve.append((t,) + eval_cb(average_params(state.x),
-                                        float(m["loss"])))
+            curve.append((t,) + eval_cb(eval_point(state), float(m["loss"])))
     return state, curve
+
+
+def run_porter(loss_fn, params0, it, top, steps, eta, variant="dp",
+               sigma_p=0.0, frac=0.05, comp_name="random_k", tau=1.0,
+               eval_every=25, eval_cb=None, seed=0):
+    spec = PAPER_SPEC.replace(algo=f"porter-{variant}" if variant != "beer"
+                              else "beer", n_agents=top.n, eta=eta,
+                              sigma_p=sigma_p, frac=frac,
+                              compressor=comp_name, tau=tau)
+    return run_algorithm(spec, loss_fn, params0, it, steps, topology=top,
+                         eval_every=eval_every, eval_cb=eval_cb, seed=seed)
 
 
 def run_soteria(loss_fn, params0, it, steps, eta, sigma_p=0.0, frac=0.05,
                 tau=1.0, eval_every=25, eval_cb=None, seed=0):
-    comp = make_compressor("random_k", frac=frac)
-    state = BL.soteria_init(params0, N_AGENTS)
-    step = jax.jit(functools.partial(BL.soteria_step, eta, 0.5, loss_fn,
-                                     comp, tau=tau, sigma_p=sigma_p))
-    key = jax.random.PRNGKey(seed)
-    curve = []
-    for t in range(steps):
-        key, k = jax.random.split(key)
-        state, m = step(state, next(it), k)
-        if eval_cb and (t % eval_every == 0 or t == steps - 1):
-            curve.append((t,) + eval_cb(state.x, float(m["loss"])))
-    return state, curve
+    spec = PAPER_SPEC.replace(algo="soteriafl", eta=eta, sigma_p=sigma_p,
+                              frac=frac, compressor="random_k", tau=tau,
+                              alpha_shift=0.5)
+    return run_algorithm(spec, loss_fn, params0, it, steps,
+                         eval_every=eval_every, eval_cb=eval_cb, seed=seed)
 
 
 def run_dsgd_dp(loss_fn, params0, it, top, steps, eta, sigma_p=0.0, tau=1.0,
                 eval_every=25, eval_cb=None, seed=0):
-    mixer = make_dense_mixer(top.w)
-    state = BL.dsgd_init(params0, top.n)
-    step = jax.jit(functools.partial(BL.dsgd_step, eta, 1.0, loss_fn, mixer,
-                                     tau=tau, sigma_p=sigma_p, dp=True))
-    key = jax.random.PRNGKey(seed)
-    curve = []
-    for t in range(steps):
-        key, k = jax.random.split(key)
-        state, m = step(state, next(it), k)
-        if eval_cb and (t % eval_every == 0 or t == steps - 1):
-            curve.append((t,) + eval_cb(average_params(state.x),
-                                        float(m["loss"])))
-    return state, curve
+    spec = PAPER_SPEC.replace(algo="dsgd", n_agents=top.n, eta=eta,
+                              sigma_p=sigma_p, tau=tau, dp=True)
+    return run_algorithm(spec, loss_fn, params0, it, steps, topology=top,
+                         eval_every=eval_every, eval_cb=eval_cb, seed=seed)

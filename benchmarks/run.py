@@ -22,8 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (calibrate_sigma, ldp_epsilon, make_compressor,
-                        make_topology, phi_m, smooth_clip, piecewise_clip)
+from repro.core import (calibrate_sigma, ldp_epsilon, phi_m, smooth_clip,
+                        piecewise_clip)
 from repro.data import a9a_like, agent_batch_iterator, mnist_like, \
     shard_to_agents
 from benchmarks import common as C
@@ -236,8 +236,7 @@ def bench_scaling(steps=60):
         out["rho"][rho] = {"consensus": float(consensus_error(st.x)),
                            "grad": grad_norm(average_params(st.x))}
     for kind in ("complete", "erdos_renyi", "ring"):
-        t = make_topology(kind, C.N_AGENTS, weights="best_constant", p=0.8,
-                          seed=1)
+        t = C.topology(kind)
         it = agent_batch_iterator(xs, ys, batch=2, seed=0)
         st, _ = C.run_porter(loss_fn, params0, it, t, steps, eta=0.05,
                              variant="gc", frac=0.05, comp_name="top_k")

@@ -10,18 +10,13 @@ On the badly-scaled MLP this typically reaches a given loss in fewer rounds.
 import jax
 import jax.numpy as jnp
 
-from repro.core import (PorterConfig, make_compressor, make_mixer,
-                        make_porter_step, make_topology, porter_init)
-from repro.core.porter_adam import make_porter_adam_step, porter_adam_init
+from repro.api import ExperimentSpec, build
 from repro.data import agent_batch_iterator, mnist_like, shard_to_agents
 
 N, STEPS = 8, 200
 
 x, y = mnist_like(8000, seed=0)
 xs, ys = shard_to_agents(x, y, N)
-top = make_topology("exponential", N, weights="metropolis")
-comp = make_compressor("top_k", frac=0.05)
-mixer = make_mixer(top, "dense")
 
 
 def loss_fn(params, batch):
@@ -39,18 +34,18 @@ params0 = {"w1": 0.05 * jax.random.normal(k1, (784, 64)),
            "c1": jnp.zeros(64),
            "w2": 0.05 * jax.random.normal(k2, (64, 10)),
            "c2": jnp.zeros(10)}
-gamma = 0.5 * (1 - top.alpha) * 0.05
+
+base = ExperimentSpec(n_agents=N, topology="exponential",
+                      compressor="top_k", frac=0.05, tau=5.0)
 
 runs = {}
-for name, (init, make_step, eta) in {
-    "porter_gc": (lambda: porter_init(params0, N, w=top.w),
-                  make_porter_step, 0.2),
-    "porter_adam": (lambda: porter_adam_init(params0, N, w=top.w),
-                    make_porter_adam_step, 0.02),
+for name, spec in {
+    "porter_gc": base.replace(algo="porter-gc", eta=0.2),
+    "porter_adam": base.replace(algo="porter-adam", eta=0.02),
 }.items():
-    cfg = PorterConfig(eta=eta, gamma=gamma, tau=5.0, variant="gc")
-    state = init()
-    step = jax.jit(make_step(cfg, loss_fn, mixer, comp))
+    algo = build(spec, loss_fn)
+    state = algo.init(params0)
+    step = jax.jit(algo.step)
     it = agent_batch_iterator(xs, ys, batch=8, seed=0)
     key = jax.random.PRNGKey(0)
     curve = []

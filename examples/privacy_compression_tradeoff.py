@@ -8,9 +8,8 @@ Theorems 2-4 on the logistic-regression testbed.
 import jax
 import jax.numpy as jnp
 
-from repro.core import (PorterConfig, average_params, calibrate_sigma,
-                        make_compressor, make_mixer, make_porter_step,
-                        make_topology, phi_m, porter_init)
+from repro.api import ExperimentSpec, build
+from repro.core import average_params, calibrate_sigma, phi_m
 from repro.data import a9a_like, agent_batch_iterator, shard_to_agents
 
 N, D, STEPS = 10, 123, 250
@@ -18,7 +17,10 @@ N, D, STEPS = 10, 123, 250
 x, y = a9a_like(20000, D, seed=0)
 xs, ys = shard_to_agents(x, y, N)
 m = xs.shape[1]
-top = make_topology("erdos_renyi", N, weights="best_constant", p=0.8, seed=1)
+
+BASE = ExperimentSpec(n_agents=N, topology="erdos_renyi",
+                      topology_weights="best_constant", topology_p=0.8,
+                      topology_seed=1, eta=0.05, tau=1.0)
 
 
 def loss_fn(params, batch):
@@ -30,13 +32,13 @@ def loss_fn(params, batch):
 
 
 def run_sweep(variant, rho, sigma_p):
-    comp = make_compressor("top_k" if variant == "gc" else "random_k",
-                           frac=rho)
-    cfg = PorterConfig(eta=0.05, gamma=0.5 * (1 - top.alpha) * rho, tau=1.0,
-                       variant=variant, sigma_p=sigma_p)
-    state = porter_init({"w": jnp.zeros(D), "b": jnp.zeros(())}, N, w=top.w)
-    step = jax.jit(make_porter_step(cfg, loss_fn, make_mixer(top, "dense"),
-                                    comp))
+    spec = BASE.replace(
+        algo=f"porter-{variant}",
+        compressor="top_k" if variant == "gc" else "random_k", frac=rho,
+        sigma_p=sigma_p)
+    algo = build(spec, loss_fn)
+    state = algo.init({"w": jnp.zeros(D), "b": jnp.zeros(())})
+    step = jax.jit(algo.step)
     it = agent_batch_iterator(xs, ys, batch=1 if variant == "dp" else 4,
                               seed=0)
     key = jax.random.PRNGKey(0)

@@ -17,10 +17,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import ExperimentSpec, build
 from repro.configs import get_config, get_smoke
-from repro.core import (PorterConfig, calibrate_sigma, ldp_epsilon,
-                        make_compressor, make_mixer, make_porter_step,
-                        make_topology, porter_init)
+from repro.core import calibrate_sigma, ldp_epsilon
 from repro.data import token_batch
 from repro.models import build_model
 
@@ -55,13 +54,12 @@ print(f"model: {n_params/1e6:.1f}M params | agents: {args.agents} | "
       f"(accountant says eps = {eps_acct:.3g})")
 
 # --- PORTER-DP over a ring ----------------------------------------------------
-top = make_topology("ring", args.agents, weights="metropolis")
-comp = make_compressor("top_k", frac=0.05)
-mixer = make_mixer(top, "dense")
-pcfg = PorterConfig(eta=5e-2, gamma=0.5 * (1 - top.alpha) * 0.05, tau=tau,
-                    variant="dp", sigma_p=sigma_p)
-state = porter_init(params, args.agents, w=top.w)
-step = jax.jit(make_porter_step(pcfg, bundle.loss, mixer, comp))
+spec = ExperimentSpec(algo="porter-dp", n_agents=args.agents,
+                      topology="ring", compressor="top_k", frac=0.05,
+                      eta=5e-2, tau=tau, sigma_p=sigma_p)
+algo = build(spec, bundle.loss)
+state = algo.init(params)
+step = jax.jit(algo.step)
 
 key = jax.random.PRNGKey(1)
 t0 = time.time()

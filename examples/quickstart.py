@@ -1,8 +1,14 @@
-"""Quickstart: decentralized training with PORTER in ~40 lines.
+"""Quickstart: decentralized training through the ``repro.api`` facade.
 
 Ten agents on an Erdos-Renyi graph minimize a nonconvex logistic-regression
 objective with 5%-top-k compressed gossip and smooth gradient clipping --
 exactly the paper's Section 5.1 protocol, on synthetic a9a-shaped data.
+
+One ExperimentSpec names the whole experiment; ``build`` resolves the
+topology, mixing matrix, compressor, comm-round engine and the consensus
+stepsize gamma = 0.5 * (1 - alpha) * rho.  Swap ``algo="porter-gc"`` for any
+registered name (porter-dp, beer, choco, dsgd, soteriafl, porter-adam,
+dp-sgd) to train a different optimizer with the same three lines.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,10 +16,9 @@ exactly the paper's Section 5.1 protocol, on synthetic a9a-shaped data.
 import jax
 import jax.numpy as jnp
 
-from repro.core import (PorterConfig, average_params, make_compressor,
-                        make_mixer, make_porter_step, make_topology,
-                        porter_init)
+from repro.api import ExperimentSpec, build
 from repro.data import a9a_like, agent_batch_iterator, shard_to_agents
+from repro.core import average_params
 
 N_AGENTS, RHO = 10, 0.05
 
@@ -32,17 +37,17 @@ def loss_fn(params, batch):
     return nll + 0.2 * jnp.sum(params["w"] ** 2 / (1 + params["w"] ** 2))
 
 
-# --- PORTER-GC over an ER(0.8) graph ----------------------------------------
-topology = make_topology("erdos_renyi", N_AGENTS, weights="best_constant",
-                         p=0.8, seed=1)
-compressor = make_compressor("top_k", frac=RHO)
-mixer = make_mixer(topology, "dense")
-config = PorterConfig(eta=0.05, gamma=0.5 * (1 - topology.alpha) * RHO,
-                      tau=1.0, variant="gc")
+# --- PORTER-GC over an ER(0.8) graph, declared then built -------------------
+spec = ExperimentSpec(algo="porter-gc", n_agents=N_AGENTS,
+                      topology="erdos_renyi", topology_weights="best_constant",
+                      topology_p=0.8, topology_seed=1,
+                      compressor="top_k", frac=RHO,
+                      eta=0.05, tau=1.0)
+algo = build(spec, loss_fn)
 
 params0 = {"w": jnp.zeros(123), "b": jnp.zeros(())}
-state = porter_init(params0, N_AGENTS, w=topology.w)
-step = jax.jit(make_porter_step(config, loss_fn, mixer, compressor))
+state = algo.init(params0)
+step = jax.jit(algo.step)
 
 key = jax.random.PRNGKey(0)
 for t in range(400):
@@ -58,5 +63,6 @@ g = jax.grad(loss_fn)(avg, full)
 gn = float(jnp.sqrt(sum(jnp.sum(v ** 2)
                         for v in jax.tree_util.tree_leaves(g))))
 print(f"\nfinal grad norm of the average iterate: {gn:.4f} "
-      f"(alpha={topology.alpha:.3f}, rho={RHO})")
+      f"(alpha={algo.topology.alpha:.3f}, rho={RHO}, "
+      f"gamma={algo.gamma:.4f})")
 assert gn < 0.1

@@ -6,6 +6,11 @@ roofline tooling).  See DESIGN.md for the system inventory.
 
 Module map:
 
+    api         THE entry point: ExperimentSpec (declarative experiment)
+                + build(spec, loss_fn) -> Algorithm over the registry of
+                all eight optimizers (porter-gc/dp, beer, porter-adam,
+                dsgd, choco, dp-sgd, soteriafl); owns topology/compressor/
+                engine construction and the gamma derivation
     core        the paper's algorithms and their substrate
       .comm_round   the one fused EF/gossip round primitive: CommRound
                     compresses an increment, accumulates surrogate q and
@@ -13,6 +18,8 @@ Module map:
                     update (ef_track/ef_step/ef_gossip kernels over the
                     flat tile layout); PORTER, PORTER-Adam, CHOCO-SGD and
                     SoteriaFL are thin clients of it
+      .registry     the Algorithm protocol + registry repro.api publishes
+                    every optimizer through
       .porter       Algorithm 1 (PORTER-DP / PORTER-GC / BEER)
       .baselines    DSGD, CHOCO-SGD, DP-SGD, SoteriaFL-SGD
       .gossip       dense / ring / packed wire executors + byte accounting

@@ -1,0 +1,403 @@
+"""repro.api -- the one facade over every decentralized optimizer.
+
+The paper analyzes PORTER-DP, PORTER-GC, BEER, CHOCO-SGD, DSGD, DP-SGD and
+SoteriaFL-SGD in one framework; this module exposes them through one
+framework too.  A declarative :class:`ExperimentSpec` names the algorithm
+and its knobs (topology, compressor, gossip mode, clipping/privacy,
+comm backend), and :func:`build` turns it into a ready-to-train
+:class:`repro.core.registry.Algorithm`:
+
+    from repro.api import ExperimentSpec, build
+
+    spec = ExperimentSpec(algo="porter-gc", n_agents=10,
+                          topology="erdos_renyi", topology_p=0.8,
+                          compressor="top_k", frac=0.05, eta=0.05, tau=1.0)
+    algo = build(spec, loss_fn)
+    state = algo.init(params0)
+    step = jax.jit(algo.step)
+    state, metrics = step(state, batch, key)   # metrics: loss, wire_bytes, ...
+
+``build`` owns everything that used to be copy-pasted at every call site:
+topology + mixing-matrix construction, compressor construction, the
+comm-round engine, and the paper's consensus-stepsize derivation
+
+    gamma = gamma_scale * (1 - alpha) * rho        (default scale 1/2)
+
+with ``alpha`` the mixing rate of the resolved topology and ``rho`` the
+resolved compressor's contraction factor.  Launch-level hooks (mesh,
+agent axes, shard-local compression, sharded leaf specs) are keyword
+arguments of :func:`build` -- they are runtime objects, not experiment
+declarations, so they stay out of the spec.
+
+Registered algorithms (see :func:`repro.core.registry.list_algorithms`):
+
+    porter-gc    Algorithm 1, Option II (batch-then-clip)
+    porter-dp    Algorithm 1, Option I  (per-sample clip + Gaussian noise)
+    beer         the unclipped ancestor [ZLL+22] (tau pinned to inf)
+    porter-adam  beyond-paper: Adam-preconditioned tracked gradient
+    dsgd         decentralized SGD with uncompressed gossip
+    choco        CHOCO-SGD [KSJ19], compressed gossip, no tracking
+    dp-sgd       centralized DP-SGD [ACG+16] (Table 1 reference point)
+    soteriafl    SoteriaFL-SGD [LZLC22], server/client shifted compression
+
+The per-algorithm functional APIs (``porter_step``, ``choco_step``, ...)
+remain importable for tests and power users, but no call site should build
+mixers/topologies/engines by hand anymore -- that is the facade's job.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines as BL
+from repro.core.beer import beer_config
+from repro.core.comm_round import CommRound
+from repro.core.compression import Compressor, make_compressor
+from repro.core.gossip import MixFn, make_mixer
+from repro.core.mixing import Topology, make_topology
+from repro.core.porter import (PorterConfig, PorterState, porter_init,
+                               porter_step)
+from repro.core.porter_adam import (PorterAdamState, porter_adam_init,
+                                    porter_adam_step)
+from repro.core.registry import (Algorithm, AlgorithmInfo, algorithm_info,
+                                 get_factory, list_algorithms,
+                                 register_algorithm)
+
+__all__ = [
+    "ExperimentSpec",
+    "VARIANT_TO_ALGO",
+    "build",
+    "build_engine",
+    "resolve_topology",
+    "resolve_compressor",
+    "resolve_gamma",
+    "Algorithm",
+    "AlgorithmInfo",
+    "algorithm_info",
+    "list_algorithms",
+]
+
+# compressors whose knob is a kept-fraction (rho = frac)
+_FRAC_COMPRESSORS = ("top_k", "block_top_k", "random_k")
+
+# legacy PorterConfig.variant spelling -> registry name (launch drivers
+# keep accepting --variant / variant= as sugar; one mapping, kept next to
+# the registrations it must stay in sync with)
+VARIANT_TO_ALGO = {"gc": "porter-gc", "dp": "porter-dp", "beer": "beer"}
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """Declarative description of one decentralized-training experiment.
+
+    Every field is a plain value (names, floats, bools) so specs can be
+    logged, swept and diffed; :func:`build` resolves them into objects.
+    ``gamma=None`` means "derive it": gamma_scale * (1 - alpha) * rho
+    (the paper's stable choice) for compressed gossip, 1.0 for plain DSGD.
+    ``tau=None`` disables clipping where that is optional (dsgd, choco,
+    porter-gc/beer); the DP algorithms (porter-dp, dp-sgd, soteriafl)
+    *reject* it -- their noise is calibrated to tau's sensitivity, so an
+    unclipped run would silently void the privacy guarantee.
+    """
+
+    algo: str = "porter-gc"
+    # agents + communication graph (Definition 1)
+    n_agents: int = 10
+    topology: str = "ring"
+    topology_weights: str = "metropolis"
+    topology_p: float = 0.8          # erdos_renyi edge probability
+    topology_seed: int = 0
+    # compression (Definition 3)
+    compressor: str = "top_k"
+    frac: float = 0.05               # kept fraction for the sparse family
+    compressor_kwargs: Mapping[str, Any] = dataclasses.field(
+        default_factory=dict)        # extras, e.g. block=, rank=, bits=
+    # wire format / engine backend
+    gossip_mode: str = "dense"       # 'dense' | 'ring' | 'packed'
+    comm_backend: str = "auto"       # 'auto' | 'pallas' | 'ref'
+    interpret: Optional[bool] = None
+    # stepsizes
+    eta: float = 0.05
+    gamma: Optional[float] = None    # None -> derived (see resolve_gamma)
+    gamma_scale: float = 0.5
+    # clipping / privacy (Definition 2 / Theorem 1)
+    tau: Optional[float] = 1.0
+    clip_mode: str = "smooth"
+    sigma_p: float = 0.0
+    dp: bool = False                 # per-sample clip+noise oracle for dsgd
+    # porter-adam moments
+    b1: float = 0.9
+    b2: float = 0.999
+    adam_eps: float = 1e-8
+    # soteriafl shift stepsize
+    alpha_shift: float = 0.5
+    # EF/tracking buffer accumulation dtype
+    buffer_dtype: Any = jnp.float32
+
+    def replace(self, **kw) -> "ExperimentSpec":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class Resolved:
+    """What :func:`build` constructed from a spec (the factory context)."""
+
+    info: AlgorithmInfo
+    topology: Optional[Topology]
+    compressor: Optional[Compressor]
+    mixer: Optional[MixFn]
+    engine: Optional[CommRound]
+    gamma: Optional[float]
+
+
+# ---------------------------------------------------------------------------
+# resolvers: spec fields -> objects (the construction no call site repeats)
+# ---------------------------------------------------------------------------
+
+def resolve_topology(spec: ExperimentSpec) -> Topology:
+    return make_topology(spec.topology, spec.n_agents,
+                         weights=spec.topology_weights, p=spec.topology_p,
+                         seed=spec.topology_seed)
+
+
+def resolve_compressor(spec: ExperimentSpec) -> Compressor:
+    kwargs = dict(spec.compressor_kwargs)
+    if spec.compressor in _FRAC_COMPRESSORS:
+        kwargs.setdefault("frac", spec.frac)
+    return make_compressor(spec.compressor, **kwargs)
+
+
+def resolve_gamma(spec: ExperimentSpec, topology: Topology,
+                  compressor: Compressor) -> float:
+    """The paper's consensus stepsize: gamma_scale * (1 - alpha) * rho."""
+    if spec.gamma is not None:
+        return spec.gamma
+    gamma = spec.gamma_scale * (1.0 - topology.alpha) * compressor.rho
+    if gamma <= 0.0:
+        # e.g. low_rank advertises rho=0 (data-dependent contraction):
+        # a zero gamma would silently disable gossip and train agents in
+        # isolation, so demand an explicit choice instead
+        raise ValueError(
+            f"derived gamma is 0 (alpha={topology.alpha:.4g}, "
+            f"rho={compressor.rho:.4g} for {compressor.name}); pass an "
+            "explicit gamma= in the ExperimentSpec")
+    return gamma
+
+
+def build_engine(spec: ExperimentSpec, *,
+                 mesh=None, agent_axes: Sequence[str] = ("data",),
+                 leaf_specs=None, compress_fn=None,
+                 topology: Optional[Topology] = None) -> CommRound:
+    """Comm-round engine for ``spec`` (compressor + mixer + backend).
+
+    The only sanctioned way to get a :class:`CommRound` outside repro.core;
+    benchmarks that exercise the engine directly use this instead of wiring
+    make_topology/make_mixer/CommRound by hand.
+    """
+    top = resolve_topology(spec) if topology is None else topology
+    comp = resolve_compressor(spec)
+    mixer = make_mixer(top, spec.gossip_mode, mesh=mesh, frac=spec.frac,
+                       agent_axes=agent_axes, leaf_specs=leaf_specs)
+    return CommRound(compressor=comp, mixer=mixer, compress_fn=compress_fn,
+                     backend=spec.comm_backend, interpret=spec.interpret)
+
+
+def build(spec: ExperimentSpec, loss_fn, *,
+          mesh=None, agent_axes: Sequence[str] = ("data",), leaf_specs=None,
+          compress_fn=None, topology: Optional[Topology] = None) -> Algorithm:
+    """Resolve ``spec`` into a ready-to-train :class:`Algorithm`.
+
+    loss_fn: (params, batch) -> scalar loss, per agent.
+    mesh / agent_axes / leaf_specs: sharded-launch hooks, forwarded to the
+      gossip executor (required for 'ring'/'packed' wire formats).
+    compress_fn: optional (key, tree) -> tree compression override (e.g.
+      the shard-local compressor from repro.launch.steps).
+    topology: pre-built Topology override; by default the spec's
+      topology fields are resolved via make_topology.
+    """
+    info = algorithm_info(spec.algo)
+    top = None
+    if info.decentralized:
+        top = resolve_topology(spec) if topology is None else topology
+    comp, mixer, engine = None, None, None
+    if info.decentralized and info.compressed:
+        # the one engine-construction path, shared with microbenchmarks
+        engine = build_engine(spec, mesh=mesh, agent_axes=agent_axes,
+                              leaf_specs=leaf_specs,
+                              compress_fn=compress_fn, topology=top)
+        comp, mixer = engine.compressor, engine.mixer
+    elif info.decentralized:
+        mixer = make_mixer(top, spec.gossip_mode, mesh=mesh, frac=spec.frac,
+                           agent_axes=agent_axes, leaf_specs=leaf_specs)
+    elif info.compressed:
+        # server/client: compression without gossip
+        comp = resolve_compressor(spec)
+        engine = CommRound(compressor=comp, mixer=None,
+                           compress_fn=compress_fn,
+                           backend=spec.comm_backend,
+                           interpret=spec.interpret)
+    gamma = None
+    if info.decentralized:
+        gamma = (resolve_gamma(spec, top, comp) if info.compressed
+                 else (1.0 if spec.gamma is None else spec.gamma))
+    r = Resolved(info=info, topology=top, compressor=comp, mixer=mixer,
+                 engine=engine, gamma=gamma)
+    return get_factory(spec.algo)(spec, loss_fn, r)
+
+
+def _bind_init(spec: ExperimentSpec, r: Resolved, init_fn):
+    """Uniform init(params, n_agents=None, w=None) with spec defaults.
+
+    ``w`` is passed through as given: every init here broadcasts a single
+    replica, so W X^0 = X^0 exactly (rows of W sum to 1) and the default
+    no-mix path is both correct and free -- materializing topology.w at
+    init would cost an O(n^2 d) einsum on the large-model launch path for
+    a bit-identical result.
+    """
+
+    def init(params, n_agents: Optional[int] = None, w=None):
+        n = spec.n_agents if n_agents is None else n_agents
+        return init_fn(params, n, w)
+
+    return init
+
+
+def _algorithm(spec, r, *, state_cls, init, step, config=None) -> Algorithm:
+    return Algorithm(name=spec.algo, info=r.info, spec=spec,
+                     state_cls=state_cls, init=init, step=step,
+                     topology=r.topology, compressor=r.compressor,
+                     mixer=r.mixer, engine=r.engine, gamma=r.gamma,
+                     config=config)
+
+
+# ---------------------------------------------------------------------------
+# the eight registered entry points
+# ---------------------------------------------------------------------------
+
+def _require_tau(spec: ExperimentSpec) -> float:
+    """DP oracles calibrate noise to tau's sensitivity -- no clipping, no
+    guarantee -- so tau=None is an error rather than a silent fallback."""
+    if spec.tau is None:
+        raise ValueError(f"{spec.algo} is a DP algorithm: its Gaussian "
+                         "noise is calibrated to the clipping threshold, "
+                         "so tau=None (unclipped) would void the privacy "
+                         "guarantee -- set a finite tau")
+    return spec.tau
+
+
+def _porter_family(spec: ExperimentSpec, loss_fn, r: Resolved, variant: str,
+                   adam: bool = False) -> Algorithm:
+    if variant == "gc" and spec.tau is None:
+        # unclipped PORTER-GC *is* BEER (paper Section 4.3); routing through
+        # beer_config keeps the no-clip point exact instead of feeding
+        # tau=inf into the smooth clip factor (inf/(inf+nrm) is NaN)
+        variant = "beer"
+    if variant == "beer":
+        cfg = beer_config(spec.eta, r.gamma, clip_mode=spec.clip_mode,
+                          grad_dtype=spec.buffer_dtype)
+    else:
+        tau = (_require_tau(spec) if variant == "dp"
+               else (float("inf") if spec.tau is None else spec.tau))
+        cfg = PorterConfig(eta=spec.eta, gamma=r.gamma, tau=tau,
+                           variant=variant, clip_mode=spec.clip_mode,
+                           sigma_p=spec.sigma_p,
+                           grad_dtype=spec.buffer_dtype)
+    if adam:
+        step = functools.partial(porter_adam_step, cfg, loss_fn, None, None,
+                                 engine=r.engine, b1=spec.b1, b2=spec.b2,
+                                 adam_eps=spec.adam_eps)
+        init = _bind_init(spec, r, porter_adam_init)
+        return _algorithm(spec, r, state_cls=PorterAdamState, init=init,
+                          step=step, config=cfg)
+    step = functools.partial(porter_step, cfg, loss_fn, None, None,
+                             engine=r.engine)
+    init = _bind_init(
+        spec, r,
+        functools.partial(porter_init, buffer_dtype=spec.buffer_dtype))
+    return _algorithm(spec, r, state_cls=PorterState, init=init, step=step,
+                      config=cfg)
+
+
+@register_algorithm("porter-gc")
+def _build_porter_gc(spec, loss_fn, r):
+    return _porter_family(spec, loss_fn, r, "gc")
+
+
+@register_algorithm("porter-dp", dp=True)
+def _build_porter_dp(spec, loss_fn, r):
+    return _porter_family(spec, loss_fn, r, "dp")
+
+
+@register_algorithm("beer")
+def _build_beer(spec, loss_fn, r):
+    return _porter_family(spec, loss_fn, r, "beer")
+
+
+@register_algorithm("porter-adam")
+def _build_porter_adam(spec, loss_fn, r):
+    return _porter_family(spec, loss_fn, r, "gc", adam=True)
+
+
+@register_algorithm("dsgd", compressed=False)
+def _build_dsgd(spec, loss_fn, r):
+    step = functools.partial(BL.dsgd_step, spec.eta, r.gamma, loss_fn,
+                             r.mixer, tau=spec.tau, clip_mode=spec.clip_mode,
+                             sigma_p=spec.sigma_p, dp=spec.dp)
+    init = _bind_init(spec, r, lambda params, n, w: BL.dsgd_init(params, n))
+    return _algorithm(spec, r, state_cls=BL.DsgdState, init=init, step=step)
+
+
+@register_algorithm("choco")
+def _build_choco(spec, loss_fn, r):
+    step = functools.partial(BL.choco_step, spec.eta, r.gamma, loss_fn,
+                             None, None, engine=r.engine, tau=spec.tau,
+                             clip_mode=spec.clip_mode)
+    init = _bind_init(spec, r, lambda params, n, w: BL.choco_init(params, n))
+    return _algorithm(spec, r, state_cls=BL.ChocoState, init=init, step=step)
+
+
+@register_algorithm("dp-sgd", dp=True, decentralized=False, compressed=False)
+def _build_dpsgd(spec, loss_fn, r):
+    tau = _require_tau(spec)
+
+    def step(state, batch, key):
+        # the registry protocol feeds agent-stacked batches (n_agents, b,
+        # ...); the central server pools them into one batch of n*b
+        # samples.  Validate the contract instead of guessing from ndim.
+        lead = {l.shape[0] for l in jax.tree_util.tree_leaves(batch)
+                if hasattr(l, "shape") and l.ndim >= 1}
+        if lead != {spec.n_agents}:
+            raise ValueError(
+                f"dp-sgd consumes agent-stacked batches with leading dim "
+                f"n_agents={spec.n_agents} (the registry's uniform batch "
+                f"layout); got leading dims {sorted(lead)} -- call "
+                "repro.core.baselines.dpsgd_step directly for plain "
+                "central batches")
+        flat = jax.tree_util.tree_map(
+            lambda l: l.reshape((-1,) + l.shape[2:]) if l.ndim >= 2 else l,
+            batch)
+        return BL.dpsgd_step(spec.eta, loss_fn, state, flat, key, tau=tau,
+                             clip_mode=spec.clip_mode, sigma_p=spec.sigma_p)
+
+    def init(params, n_agents=None, w=None):
+        del n_agents, w  # single server replica
+        return BL.dpsgd_init(params)
+
+    return _algorithm(spec, r, state_cls=BL.DpSgdState, init=init, step=step)
+
+
+@register_algorithm("soteriafl", dp=True, decentralized=False)
+def _build_soteriafl(spec, loss_fn, r):
+    tau = _require_tau(spec)
+    step = functools.partial(BL.soteria_step, spec.eta, spec.alpha_shift,
+                             loss_fn, None, engine=r.engine, tau=tau,
+                             clip_mode=spec.clip_mode, sigma_p=spec.sigma_p)
+    init = _bind_init(spec, r,
+                      lambda params, n, w: BL.soteria_init(params, n))
+    return _algorithm(spec, r, state_cls=BL.SoteriaState, init=init,
+                      step=step)

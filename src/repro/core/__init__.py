@@ -9,15 +9,27 @@ Public surface:
     gossip      : dense / ring / packed mixers over agent-stacked pytrees
     comm_round  : the one fused EF/gossip round primitive (CommRound) every
                   compressed algorithm is a thin client of
+    registry    : the Algorithm protocol + registry every optimizer is
+                  published through (init/step/state_cls, uniform
+                  loss/wire_bytes metrics)
     porter      : Algorithm 1 (PORTER-DP / PORTER-GC / BEER)
     baselines   : DSGD, CHOCO-SGD, DP-SGD, SoteriaFL-SGD
+
+The recommended entry point is the facade one level up, :mod:`repro.api`:
+declare an ``ExperimentSpec`` (algorithm name + topology + compressor +
+clipping/privacy knobs) and ``build(spec, loss_fn)`` it into a ready
+``Algorithm`` -- the facade owns topology/mixer/compressor/engine
+construction and the ``gamma = 0.5 * (1 - alpha) * rho`` derivation, and it
+registers all eight entry points (porter-gc, porter-dp, beer, porter-adam,
+dsgd, choco, dp-sgd, soteriafl).  The per-algorithm functions below remain
+as thin, stable wrappers for tests and power users.
 """
 
 from . import (baselines, beer, clipping, comm_round, compression, gossip,
-               mixing, porter, privacy)
+               mixing, porter, privacy, registry)
 
 from .clipping import piecewise_clip, smooth_clip, tree_clip, tree_global_norm
-from .comm_round import CommRound
+from .comm_round import CommRound, resolve_engine
 from .compression import Compressor, make_compressor
 from .gossip import make_mixer
 from .mixing import Topology, make_topology, mixing_rate
@@ -25,14 +37,19 @@ from .porter import (PorterConfig, PorterState, average_params,
                      consensus_error, make_porter_step, porter_init,
                      porter_step)
 from .privacy import MomentsAccountant, calibrate_sigma, ldp_epsilon, phi_m
+from .registry import (Algorithm, AlgorithmInfo, algorithm_info,
+                       list_algorithms, register_algorithm)
 
 __all__ = [
     "baselines", "beer", "clipping", "comm_round", "compression", "gossip",
-    "mixing", "porter", "privacy",
-    "CommRound", "Compressor", "make_compressor", "Topology", "make_topology",
+    "mixing", "porter", "privacy", "registry",
+    "CommRound", "resolve_engine", "Compressor", "make_compressor",
+    "Topology", "make_topology",
     "mixing_rate", "PorterConfig", "PorterState", "porter_init", "porter_step",
     "make_porter_step", "average_params", "consensus_error",
     "MomentsAccountant", "calibrate_sigma", "ldp_epsilon", "phi_m",
     "make_mixer", "smooth_clip", "piecewise_clip", "tree_clip",
     "tree_global_norm",
+    "Algorithm", "AlgorithmInfo", "algorithm_info", "list_algorithms",
+    "register_algorithm",
 ]

@@ -36,7 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import clipping
-from .comm_round import CommRound
+from .comm_round import CommRound, resolve_engine
 from .compression import Compressor
 from .gossip import MixFn, gossip_wire_bytes
 from .porter import LossFn, average_params, consensus_error
@@ -136,14 +136,14 @@ def choco_init(params, n_agents: int) -> ChocoState:
     return ChocoState(x=x, q=zeros, m=zeros, step=jnp.zeros((), jnp.int32))
 
 
-def choco_step(eta: float, gamma: float, loss_fn: LossFn, mixer: MixFn,
-               compressor: Compressor, state: ChocoState, batch, key,
+def choco_step(eta: float, gamma: float, loss_fn: LossFn,
+               mixer: Optional[MixFn], compressor: Optional[Compressor],
+               state: ChocoState, batch, key,
                tau: Optional[float] = None, clip_mode: str = "smooth",
                engine: Optional[CommRound] = None,
                ) -> Tuple[ChocoState, Dict[str, jax.Array]]:
     """CHOCO-SGD: x+ = x - eta g;  q += C(x+ - q);  x = x+ + gamma (m - q)."""
-    eng = engine if engine is not None else CommRound(compressor=compressor,
-                                                      mixer=mixer)
+    eng = resolve_engine(engine, mixer, compressor)
     n = jax.tree_util.tree_leaves(state.x)[0].shape[0]
     k_g, k_c = jax.random.split(key)
     keys = jax.random.split(k_g, n)
@@ -182,10 +182,12 @@ def dpsgd_step(eta: float, loss_fn: LossFn, state: DpSgdState, batch, key,
     loss, g = _dp_gradient(loss_fn, state.x, batch, key, tau, clip_mode,
                            sigma_p)
     x = _tree(lambda x0, gg: x0 - eta * gg, state.x, g)
-    # one dense gradient upload to the server per round
-    d = sum(int(l.size) for l in jax.tree_util.tree_leaves(state.x))
+    # one dense gradient upload to the server per round, at each buffer's
+    # actual dtype width (a bf16 run moves half the bytes of an f32 one)
+    wire = sum(int(l.size) * jnp.dtype(l.dtype).itemsize
+               for l in jax.tree_util.tree_leaves(state.x))
     return DpSgdState(x=x, step=state.step + 1), {
-        "loss": loss, "wire_bytes": jnp.asarray(4.0 * d, jnp.float32)}
+        "loss": loss, "wire_bytes": jnp.asarray(float(wire), jnp.float32)}
 
 
 # ---------------------------------------------------------------------------
@@ -208,7 +210,8 @@ def soteria_init(params, n_agents: int) -> SoteriaState:
 
 
 def soteria_step(eta: float, alpha_shift: float, loss_fn: LossFn,
-                 compressor: Compressor, state: SoteriaState, batch, key,
+                 compressor: Optional[Compressor], state: SoteriaState,
+                 batch, key,
                  tau: float = 1.0, clip_mode: str = "smooth",
                  sigma_p: float = 0.0,
                  engine: Optional[CommRound] = None
@@ -219,8 +222,7 @@ def soteria_step(eta: float, alpha_shift: float, loss_fn: LossFn,
     client side is the engine's shifted-compression primitive; the server
     mean replaces the gossip mirror.
     """
-    eng = engine if engine is not None else CommRound(compressor=compressor,
-                                                      mixer=None)
+    eng = resolve_engine(engine, None, compressor)
     n = jax.tree_util.tree_leaves(state.h)[0].shape[0]
     k_g, k_c = jax.random.split(key)
     keys = jax.random.split(k_g, n)

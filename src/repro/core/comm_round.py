@@ -54,7 +54,7 @@ from ..kernels import ops
 from .compression import Compressor
 from .gossip import MixFn, gossip_wire_bytes
 
-__all__ = ["CommRound", "compress_stacked"]
+__all__ = ["CommRound", "compress_stacked", "resolve_engine"]
 
 CompressFn = Callable[[jax.Array, Any], Any]  # (key, tree) -> tree
 
@@ -76,6 +76,43 @@ def compress_stacked(comp: Compressor, key: jax.Array, tree):
 
 def _tree(op, *trees):
     return jax.tree_util.tree_map(op, *trees)
+
+
+def resolve_engine(engine: Optional["CommRound"], mixer=None,
+                   compressor: Optional[Compressor] = None,
+                   compress_fn: Optional[CompressFn] = None,
+                   backend: str = "auto",
+                   interpret: Optional[bool] = None) -> "CommRound":
+    """Return ``engine`` or build one from the pieces -- never both.
+
+    When an ``engine`` is given it owns its compressor/mixer/compress_fn;
+    passing a *different* object alongside it used to be silently ignored
+    (the footgun: the positional pieces looked load-bearing but were not).
+    Now it raises -- build the engine with the right pieces instead (the
+    facade :func:`repro.api.build` / :func:`repro.api.build_engine` is the
+    one place engines are constructed).
+
+    ``mixer=None`` without an engine is allowed: server/client algorithms
+    (SoteriaFL, DP-SGD accounting) compress without gossip.
+    """
+    if engine is not None:
+        for what, given, owned in (("mixer", mixer, engine.mixer),
+                                   ("compressor", compressor,
+                                    engine.compressor),
+                                   ("compress_fn", compress_fn,
+                                    engine.compress_fn)):
+            if given is not None and given is not owned:
+                raise ValueError(
+                    f"both engine= and a conflicting {what} were given; the "
+                    f"engine owns its {what} -- pass the pieces the engine "
+                    "was built with (or None), or rebuild it via "
+                    "repro.api.build_engine")
+        return engine
+    if compressor is None:
+        raise ValueError("need either engine= or a compressor")
+    return CommRound(compressor=compressor, mixer=mixer,
+                     compress_fn=compress_fn, backend=backend,
+                     interpret=interpret)
 
 
 @dataclasses.dataclass(frozen=True)

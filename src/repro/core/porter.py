@@ -42,7 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import clipping
-from .comm_round import CommRound, compress_stacked
+from .comm_round import CommRound, compress_stacked, resolve_engine
 from .compression import Compressor
 from .gossip import MixFn, make_dense_mixer
 from .mixing import Topology
@@ -137,19 +137,16 @@ def _agent_gradient(cfg: PorterConfig, loss_fn: LossFn, params, batch,
     return loss, g
 
 
-def _resolve_engine(engine: Optional[CommRound], mixer: MixFn,
-                    compressor: Compressor, compress_fn) -> CommRound:
-    if engine is not None:
-        return engine
-    return CommRound(compressor=compressor, mixer=mixer,
-                     compress_fn=compress_fn)
+# Backwards-compatible alias: engine resolution (and its conflict check)
+# lives in comm_round; porter_adam and older call sites import it from here.
+_resolve_engine = resolve_engine
 
 
 def porter_step(
     cfg: PorterConfig,
     loss_fn: LossFn,
-    mixer: MixFn,
-    compressor: Compressor,
+    mixer: Optional[MixFn],
+    compressor: Optional[Compressor],
     state: PorterState,
     batch: Any,
     key: jax.Array,
@@ -163,13 +160,13 @@ def porter_step(
     (e.g. the shard-local compressor from repro.launch.steps, which keeps
     top-k selection inside each model shard and avoids resharding
     all-gathers).  Defaults to per-agent-row compression of ``compressor``.
-    engine: optional pre-built CommRound (launch.steps builds one with the
-    pallas backend); defaults to an 'auto'-backend engine over
-    (compressor, mixer, compress_fn).  When given, the engine's own
-    compressor/mixer/compress_fn take precedence -- the positional ones are
-    then only used for tracing-compatible signatures.
+    engine: optional pre-built CommRound (the facade repro.api.build makes
+    one per algorithm).  An engine owns its compressor/mixer/compress_fn;
+    passing a *different* object alongside ``engine=`` raises (it used to be
+    silently ignored).  With ``engine=`` the positional mixer/compressor may
+    simply be None.
     """
-    eng = _resolve_engine(engine, mixer, compressor, compress_fn)
+    eng = resolve_engine(engine, mixer, compressor, compress_fn)
     n = jax.tree_util.tree_leaves(state.x)[0].shape[0]
     _, k_noise, k_cv, k_cx = jax.random.split(key, 4)
 
@@ -211,7 +208,7 @@ def make_porter_step(cfg: PorterConfig, loss_fn: LossFn, mixer: MixFn,
     engine = CommRound(compressor=compressor, mixer=mixer,
                        compress_fn=compress_fn, backend=backend,
                        interpret=interpret)
-    return functools.partial(porter_step, cfg, loss_fn, mixer, compressor,
+    return functools.partial(porter_step, cfg, loss_fn, None, None,
                              engine=engine)
 
 

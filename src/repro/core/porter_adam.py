@@ -59,8 +59,8 @@ def porter_adam_init(params, n_agents: int, w=None) -> PorterAdamState:
 def porter_adam_step(
     cfg: PorterConfig,
     loss_fn: LossFn,
-    mixer: MixFn,
-    compressor: Compressor,
+    mixer: Optional[MixFn],
+    compressor: Optional[Compressor],
     state: PorterAdamState,
     batch: Any,
     key: jax.Array,
@@ -114,5 +114,5 @@ def make_porter_adam_step(cfg: PorterConfig, loss_fn: LossFn, mixer: MixFn,
     engine = CommRound(compressor=compressor, mixer=mixer,
                        compress_fn=adam_kw.pop("compress_fn", None),
                        backend=backend, interpret=interpret)
-    return functools.partial(porter_adam_step, cfg, loss_fn, mixer,
-                             compressor, engine=engine, **adam_kw)
+    return functools.partial(porter_adam_step, cfg, loss_fn, None, None,
+                             engine=engine, **adam_kw)

@@ -1,0 +1,137 @@
+"""Algorithm registry: one uniform surface for every decentralized optimizer.
+
+The paper's headline claim is a *uniform* analysis framework covering the
+clipping variants (PORTER-DP / PORTER-GC), their no-clip ancestor (BEER) and
+the baselines it compares against (CHOCO-SGD, DSGD, SoteriaFL, DP-SGD).  The
+code mirrors that: every algorithm is registered here as a factory that
+:func:`repro.api.build` turns into an :class:`Algorithm` with one shape:
+
+    state = algo.init(params)                       # or init(params, n, w)
+    state, metrics = algo.step(state, batch, key)   # pure; jit/pjit-able
+
+Metrics schema (uniform, enforced by tests/test_api_registry.py): every
+``step`` emits at least ``loss`` (mean agent loss) and ``wire_bytes``
+(model-level bytes crossing links per round); decentralized algorithms add
+``consensus_x``.
+
+This module holds only the registry machinery -- the eight concrete
+registrations live in :mod:`repro.api`, which also owns the construction of
+topologies, mixers, compressors and comm-round engines (no call site should
+build those by hand).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+
+__all__ = [
+    "Algorithm",
+    "AlgorithmInfo",
+    "register_algorithm",
+    "algorithm_info",
+    "get_factory",
+    "list_algorithms",
+]
+
+# step(state, batch, key) -> (state, metrics)
+StepFn = Callable[[Any, Any, jax.Array], Tuple[Any, Dict[str, jax.Array]]]
+# init(params, n_agents=None, w=None) -> state
+InitFn = Callable[..., Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class AlgorithmInfo:
+    """Static capabilities of a registered algorithm.
+
+    dp:            the gradient oracle clips per-sample and adds Gaussian
+                   noise (an LDP mechanism; drivers calibrate sigma_p and
+                   accept non-decreasing smoke losses for these).
+    decentralized: runs over a communication graph (needs topology + mixer;
+                   emits ``consensus_x``).
+    compressed:    communicates through a rho-compressor (needs a
+                   :class:`repro.core.comm_round.CommRound` engine).
+    """
+
+    name: str
+    dp: bool = False
+    decentralized: bool = True
+    compressed: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class Algorithm:
+    """A built, ready-to-train algorithm (the registry's uniform protocol).
+
+    ``init``/``step`` are the only members a driver needs; the remaining
+    fields expose what :func:`repro.api.build` resolved (topology, mixing
+    matrix, compressor, engine, the derived consensus stepsize gamma, and
+    the algorithm-native config object) so launch code, checkpointing and
+    benchmarks never re-derive them.
+    """
+
+    name: str
+    info: AlgorithmInfo
+    spec: Any                       # the ExperimentSpec this was built from
+    state_cls: type                 # NamedTuple class of the training state
+    init: InitFn
+    step: StepFn
+    topology: Optional[Any] = None  # repro.core.mixing.Topology
+    compressor: Optional[Any] = None
+    mixer: Optional[Any] = None
+    engine: Optional[Any] = None    # repro.core.comm_round.CommRound
+    gamma: Optional[float] = None
+    config: Optional[Any] = None    # e.g. the PorterConfig actually used
+
+
+# name -> (info, factory(spec, loss_fn, resolved) -> Algorithm)
+_REGISTRY: Dict[str, Tuple[AlgorithmInfo, Callable]] = {}
+
+
+def _ensure_builtin():
+    """The eight built-in registrations live in repro.api (they need the
+    facade's resolvers); import it lazily so lookups work regardless of
+    which of repro.core / repro.api the caller imported first."""
+    import repro.api  # noqa: F401  (registers on import)
+
+
+def register_algorithm(name: str, *, dp: bool = False,
+                       decentralized: bool = True, compressed: bool = True):
+    """Decorator: register ``factory(spec, loss_fn, resolved) -> Algorithm``
+    under ``name``.  ``resolved`` is the build context (topology, mixer,
+    compressor, engine, gamma) that :func:`repro.api.build` constructed from
+    the spec -- factories never build those pieces themselves."""
+    info = AlgorithmInfo(name=name, dp=dp, decentralized=decentralized,
+                         compressed=compressed)
+
+    def deco(factory):
+        if name in _REGISTRY:
+            raise ValueError(f"algorithm {name!r} registered twice")
+        _REGISTRY[name] = (info, factory)
+        return factory
+
+    return deco
+
+
+def _lookup(name: str) -> Tuple[AlgorithmInfo, Callable]:
+    _ensure_builtin()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown algorithm {name!r}; registered: "
+                         f"{list_algorithms()}") from None
+
+
+def algorithm_info(name: str) -> AlgorithmInfo:
+    return _lookup(name)[0]
+
+
+def get_factory(name: str) -> Callable:
+    return _lookup(name)[1]
+
+
+def list_algorithms() -> Tuple[str, ...]:
+    _ensure_builtin()
+    return tuple(sorted(_REGISTRY))

@@ -1,15 +1,22 @@
-"""Checkpointing for PORTER training state (orbax is not available offline).
+"""Checkpointing for decentralized training state (orbax is unavailable
+offline).
 
-Layout: one directory per step, one .npz per top-level PorterState buffer,
-plus a JSON manifest with the treedef and step metadata.  Pytrees are
-flattened with key-paths so restore is structure-checked; device arrays are
-pulled to host as numpy.  Works for agent-stacked states of any size the
-host can hold (per-agent sharded save on real pods would stream shard-wise;
-the manifest format already records per-leaf shapes/dtypes to support that).
+Works for *any* registered algorithm's state -- every state in the repo is a
+NamedTuple of pytree buffers (PorterState, ChocoState, SoteriaState,
+PorterAdamState with its nested base, ...).  Layout: one directory per step,
+one .npz per top-level state field, plus a JSON manifest recording the state
+class, field list and per-leaf shapes/dtypes.  Pytrees are flattened with
+key-paths so restore is structure-checked; device arrays are pulled to host
+as numpy.  Per-agent sharded save on real pods would stream shard-wise; the
+manifest format already records per-leaf shapes/dtypes to support that.
 
     save_state(dir, state, step=10)
     state = restore_state(dir, like=state)           # latest
     state = restore_state(dir, like=state, step=10)
+
+``like`` supplies both the structure and the NamedTuple class to
+reconstruct, so the same two functions round-trip every algorithm the
+registry knows about (tests/test_checkpoint.py).
 """
 
 from __future__ import annotations
@@ -21,11 +28,7 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-from repro.core.porter import PorterState
-
 __all__ = ["save_state", "restore_state", "latest_step"]
-
-_BUFFERS = ("x", "v", "q_x", "q_v", "g_prev", "m_x", "m_v")
 
 
 def _flatten(tree):
@@ -33,16 +36,47 @@ def _flatten(tree):
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in path)
-        out[key] = np.asarray(leaf)
+        # a bare-array field has an empty path; npz keys cannot be empty
+        out[key or "_root"] = np.asarray(leaf)
     return out
 
 
-def save_state(ckpt_dir: str, state: PorterState, step: Optional[int] = None):
-    step = int(state.step) if step is None else step
+def _leaf_paths(tree):
+    return ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path) or "_root"
+            for path, _ in jax.tree_util.tree_flatten_with_path(tree)[0]]
+
+
+def _state_fields(state) -> tuple:
+    fields = getattr(state, "_fields", None)
+    if fields is None:
+        raise TypeError(f"expected a NamedTuple state, got "
+                        f"{type(state).__name__}")
+    return fields
+
+
+def _state_step(state) -> int:
+    """The iteration counter, wherever the state keeps it (PorterAdamState
+    nests it inside its PORTER base)."""
+    if hasattr(state, "step"):
+        return int(state.step)
+    for name in _state_fields(state):
+        v = getattr(state, name)
+        if hasattr(v, "_fields"):
+            try:
+                return _state_step(v)
+            except AttributeError:
+                continue
+    raise AttributeError(f"{type(state).__name__} carries no step counter")
+
+
+def save_state(ckpt_dir: str, state: Any, step: Optional[int] = None) -> str:
+    step = _state_step(state) if step is None else step
     d = Path(ckpt_dir) / f"step_{step:08d}"
     d.mkdir(parents=True, exist_ok=True)
-    manifest = {"step": step, "buffers": {}}
-    for name in _BUFFERS:
+    manifest = {"step": step, "state_cls": type(state).__name__,
+                "fields": list(_state_fields(state)), "buffers": {}}
+    for name in _state_fields(state):
         flat = _flatten(getattr(state, name))
         np.savez(d / f"{name}.npz", **flat)
         manifest["buffers"][name] = {
@@ -61,35 +95,44 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
-def restore_state(ckpt_dir: str, like: PorterState,
-                  step: Optional[int] = None) -> PorterState:
-    """Restore into the structure of ``like`` (shape/dtype checked)."""
+def _restore_field(d: Path, name: str, ref):
+    data = np.load(d / f"{name}.npz")
+    ref_keys = set(_leaf_paths(ref))  # keys only -- no device-to-host copy
+    if set(data.files) != ref_keys:
+        raise ValueError(f"checkpoint buffer {name} keys mismatch: "
+                         f"{sorted(set(data.files) ^ ref_keys)[:5]}")
+    leaves_ref, treedef = jax.tree_util.tree_flatten(ref)
+    leaves = []
+    for path_key, ref_leaf in zip(_leaf_paths(ref), leaves_ref):
+        arr = data[path_key]
+        if tuple(arr.shape) != tuple(ref_leaf.shape):
+            raise ValueError(f"{name}/{path_key}: shape {arr.shape} != "
+                             f"{ref_leaf.shape}")
+        leaves.append(jax.numpy.asarray(arr, dtype=ref_leaf.dtype))
+    return treedef.unflatten(leaves)
+
+
+def restore_state(ckpt_dir: str, like: Any, step: Optional[int] = None):
+    """Restore into the structure (and class) of ``like``; shape/dtype
+    checked leaf-wise."""
     step = latest_step(ckpt_dir) if step is None else step
     if step is None:
         raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
     d = Path(ckpt_dir) / f"step_{step:08d}"
     manifest = json.loads((d / "manifest.json").read_text())
+    saved_cls = manifest.get("state_cls")
+    if saved_cls is not None and saved_cls != type(like).__name__:
+        raise ValueError(f"checkpoint holds a {saved_cls}, but restore was "
+                         f"asked for a {type(like).__name__}")
     new = {}
-    for name in _BUFFERS:
-        data = np.load(d / f"{name}.npz")
-        ref = getattr(like, name)
-        flat_ref = _flatten(ref)
-        if set(data.files) != set(flat_ref):
-            raise ValueError(f"checkpoint buffer {name} keys mismatch: "
-                             f"{sorted(set(data.files) ^ set(flat_ref))[:5]}")
-        leaves_ref, treedef = jax.tree_util.tree_flatten(ref)
-        paths = [
-            "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                     for p in path)
-            for path, _ in jax.tree_util.tree_flatten_with_path(ref)[0]
-        ]
-        leaves = []
-        for path_key, ref_leaf in zip(paths, leaves_ref):
-            arr = data[path_key]
-            if tuple(arr.shape) != tuple(ref_leaf.shape):
-                raise ValueError(f"{name}/{path_key}: shape {arr.shape} != "
-                                 f"{ref_leaf.shape}")
-            leaves.append(jax.numpy.asarray(arr, dtype=ref_leaf.dtype))
-        new[name] = treedef.unflatten(leaves)
-    return PorterState(step=jax.numpy.asarray(manifest["step"],
-                                              jax.numpy.int32), **new)
+    for name in _state_fields(like):
+        if name == "step":
+            # the manifest's step is authoritative (save_state's step=
+            # override labels the checkpoint without mutating the state)
+            new[name] = jax.numpy.asarray(manifest["step"],
+                                          jax.numpy.int32)
+            continue
+        if not (d / f"{name}.npz").exists():
+            raise ValueError(f"checkpoint at {d} has no buffer {name!r}")
+        new[name] = _restore_field(d, name, getattr(like, name))
+    return type(like)(**new)

@@ -166,6 +166,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, variant: str,
         rec["compile_s"] = round(time.time() - t1, 2)
 
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):  # older jax: one dict per device
+            ca = ca[0] if ca else {}
         flops = float(ca.get("flops", 0.0))
         bytes_acc = float(ca.get("bytes accessed", 0.0))
         rec["cost_analysis"] = {"flops": flops, "bytes_accessed": bytes_acc}

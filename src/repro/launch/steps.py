@@ -15,7 +15,6 @@ parameter is ever materialized, so grok-1-314b lowers on one CPU.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -23,8 +22,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import (PorterConfig, make_compressor, make_mixer,
-                        make_porter_step, make_topology, porter_init)
+from repro import api
+from repro.core import PorterConfig
 from repro.core.porter import PorterState
 from repro.models import ModelBundle, ModelConfig, build_model
 from repro.nn.module import prepend_axis_specs
@@ -103,6 +102,7 @@ class TrainSetup:
     key_shape: Any
     n_agents: int
     porter_cfg: PorterConfig
+    algorithm: Any = None        # the built repro.api Algorithm
 
     def lower(self):
         return self.jitted.lower(self.state_shapes, self.batch_shapes,
@@ -110,7 +110,7 @@ class TrainSetup:
 
     def init_state(self, key) -> PorterState:
         params, _ = self.bundle.init(key)
-        return porter_init(params, self.n_agents)
+        return self.algorithm.init(params, n_agents=self.n_agents)
 
 
 def build_train_step(
@@ -131,9 +131,11 @@ def build_train_step(
 ) -> TrainSetup:
     """PORTER train step, sharded for ``mesh``.
 
-    Hyper-parameters follow the paper's stable choices:
-    gamma = (1-alpha) * rho / 2, eta from O(1/L) heuristics (configurable by
-    the caller for real runs; the dry-run only needs a lowerable program).
+    Construction is delegated to the ``repro.api`` facade (one
+    ExperimentSpec -> Algorithm build), which owns the paper's stable
+    hyper-parameter choices: gamma = (1-alpha) * rho / 2, eta from O(1/L)
+    heuristics (configurable by the caller for real runs; the dry-run only
+    needs a lowerable program).
 
     comm_backend: backend of the comm-round engine -- 'auto' runs the fused
     ef_track/ef_step Pallas kernels on TPU and the jnp reference elsewhere;
@@ -149,26 +151,28 @@ def build_train_step(
     bundle = build_model(cfg)
     ax = agent_axes(mesh)
     n = n_agents(mesh)
-    top = make_topology(topology_kind, n, weights="metropolis")
-    comp = make_compressor(compressor_name, frac=frac)
+    spec = api.ExperimentSpec(
+        algo=api.VARIANT_TO_ALGO[variant],
+        n_agents=n, topology=topology_kind, topology_weights="metropolis",
+        compressor=compressor_name, frac=frac, gossip_mode=gossip_mode,
+        comm_backend=comm_backend, eta=1e-3, tau=tau, sigma_p=sigma_p,
+        buffer_dtype=buffer_dtype)
 
     # ---- abstract state & shardings ---------------------------------------
     params_shapes, pspecs = abstract_init(bundle)
-    state_shapes = jax.eval_shape(
-        functools.partial(porter_init, n_agents=n,
-                          buffer_dtype=buffer_dtype), params_shapes)
     ax_entry = ax if len(ax) > 1 else ax[0]
     stacked_specs = prepend_axis_specs(pspecs, ax_entry)
 
-    mixer = make_mixer(top, gossip_mode, mesh=mesh, frac=frac, agent_axes=ax,
-                       leaf_specs=stacked_specs)
-    gamma = 0.5 * (1.0 - top.alpha) * frac
-    pcfg = PorterConfig(eta=1e-3, gamma=gamma, tau=tau, variant=variant,
-                        sigma_p=sigma_p, grad_dtype=buffer_dtype)
-    compress_fn = (make_shard_local_compress(comp, mesh, stacked_specs)
-                   if local_compress else None)
-    step = make_porter_step(pcfg, bundle.loss, mixer, comp,
-                            compress_fn=compress_fn, backend=comm_backend)
+    compress_fn = None
+    if local_compress:
+        compress_fn = make_shard_local_compress(
+            api.resolve_compressor(spec), mesh, stacked_specs)
+    algo = api.build(spec, bundle.loss, mesh=mesh, agent_axes=ax,
+                     leaf_specs=stacked_specs, compress_fn=compress_fn)
+    pcfg = algo.config
+    step = algo.step
+    state_shapes = jax.eval_shape(
+        lambda p: algo.init(p, n_agents=n, w=None), params_shapes)
     state_specs = PorterState(
         x=stacked_specs, v=stacked_specs, q_x=stacked_specs,
         q_v=stacked_specs, g_prev=stacked_specs, m_x=stacked_specs,
@@ -188,7 +192,8 @@ def build_train_step(
     return TrainSetup(cfg=cfg, bundle=bundle, jitted=jitted,
                       state_shapes=state_shapes, batch_shapes=batch_shapes,
                       state_shardings=state_sh, batch_shardings=batch_sh,
-                      key_shape=key_shape, n_agents=n, porter_cfg=pcfg)
+                      key_shape=key_shape, n_agents=n, porter_cfg=pcfg,
+                      algorithm=algo)
 
 
 # ---------------------------------------------------------------------------

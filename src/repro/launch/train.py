@@ -1,14 +1,19 @@
-"""End-to-end decentralized training driver.
+"""End-to-end decentralized training driver for *any* registered algorithm.
 
-Runs PORTER (or a baseline) for real on whatever devices exist -- the CPU
-container trains reduced configs; on a TPU pod the same driver shards over
-the production mesh (the step builder is shared with the dry-run).
+``--algo`` picks an entry from the algorithm registry (porter-gc, porter-dp,
+beer, porter-adam, dsgd, choco, dp-sgd, soteriafl); the driver builds it
+through the ``repro.api`` facade, so topology/compressor/engine construction
+and the gamma derivation live in one place.  Runs for real on whatever
+devices exist -- the CPU container trains reduced configs; on a TPU pod the
+same driver shards over the production mesh (the step builder is shared
+with the dry-run).
 
 Examples (CPU, ~100M-scale and smoke-scale):
     PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
         --smoke --steps 50 --batch 8 --seq 128
+    PYTHONPATH=src python -m repro.launch.train --smoke --algo choco
     PYTHONPATH=src python -m repro.launch.train --arch rwkv6-7b --smoke \
-        --variant dp --epsilon 0.1 --steps 30
+        --algo porter-dp --epsilon 0.1 --steps 30
 """
 
 from __future__ import annotations
@@ -23,10 +28,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import (VARIANT_TO_ALGO, ExperimentSpec, algorithm_info,
+                       build, list_algorithms)
 from repro.configs import get_config, get_smoke
-from repro.core import (PorterConfig, average_params, calibrate_sigma,
-                        ldp_epsilon, make_compressor, make_mixer,
-                        make_porter_step, make_topology, porter_init)
+from repro.core import calibrate_sigma, ldp_epsilon
 from repro.data import token_batch
 from repro.models import build_model
 
@@ -51,18 +56,22 @@ def main(argv=None):
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced config (CPU-trainable)")
+    ap.add_argument("--algo", default=None, choices=list(list_algorithms()),
+                    help="registered algorithm (default porter-gc; "
+                         "see repro.api)")
+    ap.add_argument("--variant", default=None, choices=["gc", "dp", "beer"],
+                    help="deprecated alias for --algo porter-<variant>")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--agents", type=int, default=4)
     ap.add_argument("--batch", type=int, default=4, help="per-agent batch")
     ap.add_argument("--seq", type=int, default=64)
-    ap.add_argument("--variant", default="gc", choices=["gc", "dp", "beer"])
     ap.add_argument("--topology", default="ring")
     ap.add_argument("--compressor", default="top_k")
     ap.add_argument("--frac", type=float, default=0.05)
     ap.add_argument("--eta", type=float, default=3e-2)
     ap.add_argument("--tau", type=float, default=1.0)
     ap.add_argument("--epsilon", type=float, default=0.1,
-                    help="LDP epsilon target (variant=dp)")
+                    help="LDP epsilon target (DP algorithms)")
     ap.add_argument("--delta", type=float, default=1e-3)
     ap.add_argument("--local-samples", type=int, default=4096,
                     help="m: per-agent dataset size (privacy accounting)")
@@ -73,16 +82,19 @@ def main(argv=None):
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
 
+    if args.algo and args.variant:
+        ap.error("--algo and --variant are mutually exclusive")
+    algo_name = (args.algo or
+                 (VARIANT_TO_ALGO[args.variant] if args.variant
+                  else "porter-gc"))
+    info = algorithm_info(algo_name)
+
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     cfg = dataclasses.replace(cfg, remat=False)
     bundle = build_model(cfg)
-    top = make_topology(args.topology, args.agents, weights="metropolis")
-    comp = make_compressor(args.compressor, frac=args.frac)
-    mixer = make_mixer(top, "dense")
-    gamma = 0.5 * (1 - top.alpha) * args.frac
 
     sigma_p = 0.0
-    if args.variant == "dp":
+    if info.dp:
         sigma_p = calibrate_sigma(args.tau, args.steps, args.local_samples,
                                   args.epsilon, args.delta)
         eps_acct = ldp_epsilon(args.tau, sigma_p, args.steps,
@@ -91,24 +103,37 @@ def main(argv=None):
               f"({args.epsilon},{args.delta})-LDP over {args.steps} steps; "
               f"accountant eps={eps_acct:.4g}")
 
-    pcfg = PorterConfig(eta=args.eta, gamma=gamma, tau=args.tau,
-                        variant=args.variant, sigma_p=sigma_p)
+    spec = ExperimentSpec(algo=algo_name, n_agents=args.agents,
+                          topology=args.topology,
+                          compressor=args.compressor, frac=args.frac,
+                          eta=args.eta, tau=args.tau, sigma_p=sigma_p)
+    algo = build(spec, bundle.loss)
+
     params, _ = bundle.init(jax.random.PRNGKey(0))
     n_params = sum(int(np.prod(p.shape))
                    for p in jax.tree_util.tree_leaves(params))
+    top_note = (f"{args.topology}, alpha={algo.topology.alpha:.3f}"
+                if algo.topology is not None else "server/client")
     print(f"[model] {cfg.name}: {n_params/1e6:.2f}M params, "
-          f"{args.agents} agents ({args.topology}, alpha={top.alpha:.3f}), "
-          f"{args.compressor}(rho={args.frac}) variant={args.variant}")
+          f"{args.agents} agents ({top_note}), "
+          f"{args.compressor}(rho={args.frac}) algo={algo_name}")
 
-    state = porter_init(params, args.agents, w=top.w)
+    state = algo.init(params)
     start = 0
     if args.resume and args.ckpt_dir:
         from repro.launch.checkpoint import latest_step, restore_state
         if latest_step(args.ckpt_dir) is not None:
             state = restore_state(args.ckpt_dir, like=state)
-            start = int(state.step)
+            start = int(latest_step(args.ckpt_dir))
             print(f"[ckpt] resumed from step {start}")
-    step = jax.jit(make_porter_step(pcfg, bundle.loss, mixer, comp))
+            if start >= args.steps:
+                print(f"[done] checkpoint already at step {start} >= "
+                      f"--steps {args.steps}; nothing to train")
+                if args.out:  # downstream readers still expect the file
+                    Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+                    Path(args.out).write_text(json.dumps([]))
+                return 0
+    step = jax.jit(algo.step)
 
     key = jax.random.PRNGKey(1)
     history = []
@@ -122,20 +147,28 @@ def main(argv=None):
             m["step"] = t
             m["wall_s"] = round(time.time() - t0, 2)
             history.append(m)
-            print(f"  step {t:5d}  loss {m['loss']:.4f}  "
-                  f"consensus_x {m['consensus_x']:.3e}  "
-                  f"|v| {m['v_norm']:.3f}  "
+            extra = "".join(
+                f"  {label} {m[k]:.3e}" for k, label in
+                (("consensus_x", "consensus_x"), ("v_norm", "|v|"))
+                if k in m)
+            print(f"  step {t:5d}  loss {m['loss']:.4f}{extra}  "
                   f"wire {m['wire_bytes']/1e6:.3f}MB/round  ({m['wall_s']}s)")
         if args.ckpt_dir and (t + 1) % args.ckpt_every == 0:
             from repro.launch.checkpoint import save_state
-            save_state(args.ckpt_dir, state)
+            save_state(args.ckpt_dir, state, step=t + 1)
     first, last = history[0]["loss"], history[-1]["loss"]
     print(f"[done] loss {first:.4f} -> {last:.4f} in {args.steps} steps "
           f"({time.time()-t0:.1f}s)")
     if args.out:
         Path(args.out).parent.mkdir(parents=True, exist_ok=True)
         Path(args.out).write_text(json.dumps(history, indent=2))
-    return 0 if (last < first or args.variant == "dp") else 1
+    # Exit gate: fail on divergence, not on noise.  The smoke task is random
+    # tokens (loss sits at its entropy floor and fluctuates), and DP runs
+    # are perturbation-dominated, so require descent *or* staying within a
+    # small band of the initial loss; NaN/blow-up still exits nonzero.
+    ok = np.isfinite(last) and (last < first
+                                or abs(last - first) <= 0.02 * abs(first))
+    return 0 if (ok or (info.dp and np.isfinite(last))) else 1
 
 
 if __name__ == "__main__":

@@ -1,0 +1,221 @@
+"""Registry completeness + facade contract.
+
+Every registered algorithm must: build from an ExperimentSpec, jit, emit
+the uniform ``loss``/``wire_bytes`` metrics schema, and decrease loss on
+the logreg smoke task in <= 200 steps.  The engine-footgun fix and the
+gamma derivation are pinned here too.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (ExperimentSpec, algorithm_info, build, build_engine,
+                       list_algorithms, resolve_compressor, resolve_gamma,
+                       resolve_topology)
+from repro.core import CommRound, make_compressor, make_mixer, make_topology
+from repro.core.porter import porter_init, porter_step
+
+EXPECTED_ALGOS = {"porter-gc", "porter-dp", "beer", "porter-adam", "dsgd",
+                  "choco", "dp-sgd", "soteriafl"}
+
+N, D, B = 4, 24, 6
+
+
+def _loss_fn(params, batch):
+    f, l = batch
+    f, l = jnp.atleast_2d(f), jnp.atleast_1d(l)
+    logits = f @ params["w"] + params["b"]
+    return jnp.mean(jnp.log1p(jnp.exp(-(2 * l - 1) * logits)))
+
+
+def _problem(seed=0):
+    rng = np.random.default_rng(seed)
+    w_true = rng.normal(size=D)
+    f = rng.normal(size=(N, B, D)).astype(np.float32)
+    l = (f @ w_true > 0).astype(np.float32)
+    params0 = {"w": jnp.zeros(D), "b": jnp.zeros(())}
+    return params0, (jnp.asarray(f), jnp.asarray(l))
+
+
+def _spec(name, **over):
+    kw = dict(algo=name, n_agents=N, topology="ring", compressor="top_k",
+              frac=0.25, eta=0.1, tau=5.0, sigma_p=0.0)
+    kw.update(over)
+    return ExperimentSpec(**kw)
+
+
+def test_all_eight_registered():
+    assert set(list_algorithms()) == EXPECTED_ALGOS
+
+
+@pytest.mark.parametrize("name", sorted(EXPECTED_ALGOS))
+def test_registered_algorithm_trains(name):
+    """build -> init -> jit(step): uniform schema + loss decreases."""
+    params0, batch = _problem()
+    algo = build(_spec(name), _loss_fn)
+    assert algo.name == name and algo.info is algorithm_info(name)
+    state = algo.init(params0)
+    assert isinstance(state, algo.state_cls)
+    step = jax.jit(algo.step)
+    key = jax.random.PRNGKey(0)
+    first = None
+    for _ in range(120):  # <= 200-step smoke budget
+        key, k = jax.random.split(key)
+        state, m = step(state, batch, k)
+        first = float(m["loss"]) if first is None else first
+    # uniform metrics schema
+    assert {"loss", "wire_bytes"} <= set(m)
+    assert float(m["wire_bytes"]) > 0
+    if algo.info.decentralized:
+        assert "consensus_x" in m
+    last = float(m["loss"])
+    assert np.isfinite(last) and last < first
+
+
+def test_dp_flags_match_oracles():
+    for name in ("porter-dp", "dp-sgd", "soteriafl"):
+        assert algorithm_info(name).dp
+    for name in ("porter-gc", "beer", "porter-adam", "choco", "dsgd"):
+        assert not algorithm_info(name).dp
+
+
+def test_unclipped_porter_gc_is_beer():
+    """tau=None for porter-gc must hit the exact no-clip point (BEER),
+    not tau=inf through the smooth clip (whose factor is NaN)."""
+    params0, batch = _problem()
+    algo = build(_spec("porter-gc", tau=None), _loss_fn)
+    assert algo.config.variant == "beer"
+    state = algo.init(params0)
+    state, m = jax.jit(algo.step)(state, batch, jax.random.PRNGKey(0))
+    assert np.isfinite(float(m["loss"]))
+    assert all(np.all(np.isfinite(np.asarray(l)))
+               for l in jax.tree_util.tree_leaves(state.x))
+
+
+@pytest.mark.parametrize("name", ["porter-dp", "dp-sgd", "soteriafl"])
+def test_dp_algorithms_reject_unclipped_tau(name):
+    """Noise is calibrated to tau's sensitivity; tau=None must not silently
+    run unclipped."""
+    with pytest.raises(ValueError, match="privacy guarantee"):
+        build(_spec(name, tau=None), _loss_fn)
+
+
+def test_dpsgd_rejects_non_agent_stacked_batch():
+    params0, _ = _problem()
+    algo = build(_spec("dp-sgd"), _loss_fn)
+    state = algo.init(params0)
+    rng = np.random.default_rng(0)
+    central = (jnp.asarray(rng.normal(size=(8, D)).astype(np.float32)),
+               jnp.asarray((rng.random(8) > 0.5).astype(np.float32)))
+    with pytest.raises(ValueError, match="agent-stacked"):
+        algo.step(state, central, jax.random.PRNGKey(0))
+
+
+def test_registry_populated_via_core_import():
+    """Lookups must work no matter which of repro.core / repro.api the
+    caller imported first (registrations are triggered lazily)."""
+    import subprocess, sys
+    code = ("from repro.core import list_algorithms, algorithm_info; "
+            "assert len(list_algorithms()) == 8, list_algorithms(); "
+            "assert algorithm_info('choco').decentralized")
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True)
+    assert res.returncode == 0, res.stderr
+
+
+def test_unknown_algorithm_rejected():
+    with pytest.raises(ValueError, match="unknown algorithm"):
+        build(_spec("porter-gc").replace(algo="nope"), _loss_fn)
+
+
+def test_gamma_derivation_matches_paper_formula():
+    spec = _spec("porter-gc", topology="erdos_renyi", topology_p=0.8,
+                 topology_seed=1, frac=0.05)
+    top = resolve_topology(spec)
+    comp = resolve_compressor(spec)
+    assert resolve_gamma(spec, top, comp) == pytest.approx(
+        0.5 * (1 - top.alpha) * 0.05)
+    # explicit gamma wins; gamma_scale rescales the derived value
+    assert resolve_gamma(spec.replace(gamma=0.123), top, comp) == 0.123
+    assert resolve_gamma(spec.replace(gamma_scale=0.3), top, comp) == \
+        pytest.approx(0.3 * (1 - top.alpha) * 0.05)
+    algo = build(spec, _loss_fn)
+    assert algo.gamma == pytest.approx(0.5 * (1 - top.alpha) * 0.05)
+
+
+def test_zero_derived_gamma_rejected():
+    """low_rank advertises rho=0 (data-dependent); a silently-zero gamma
+    would disable gossip, so the facade demands an explicit one."""
+    spec = _spec("porter-gc", compressor="low_rank",
+                 compressor_kwargs={"rank": 2})
+    with pytest.raises(ValueError, match="derived gamma is 0"):
+        build(spec, _loss_fn)
+    algo = build(spec.replace(gamma=0.01), _loss_fn)
+    assert algo.gamma == 0.01
+
+
+def test_build_engine_matches_spec():
+    spec = _spec("porter-gc")
+    eng = build_engine(spec)
+    assert isinstance(eng, CommRound)
+    assert eng.compressor.rho == pytest.approx(spec.frac)
+    assert getattr(eng.mixer, "wire_mode", None) == "dense"
+
+
+def test_engine_conflict_raises():
+    """The footgun: engine= plus a *different* mixer/compressor used to be
+    silently ignored; now it raises."""
+    top = make_topology("ring", N)
+    comp = make_compressor("top_k", frac=0.25)
+    other_comp = make_compressor("top_k", frac=0.5)
+    mixer = make_mixer(top, "dense")
+    eng = CommRound(compressor=comp, mixer=mixer)
+    params0, batch = _problem()
+    state = porter_init(params0, N, w=top.w)
+    cfg = build(_spec("porter-gc"), _loss_fn).config
+    with pytest.raises(ValueError, match="conflicting compressor"):
+        porter_step(cfg, _loss_fn, mixer, other_comp, state, batch,
+                    jax.random.PRNGKey(0), engine=eng)
+    # same objects (what make_porter_step passes) stay fine
+    out_state, _ = porter_step(cfg, _loss_fn, mixer, comp, state, batch,
+                               jax.random.PRNGKey(0), engine=eng)
+    assert isinstance(out_state, type(state))
+    # and the engine-less path still needs a compressor
+    with pytest.raises(ValueError, match="compressor"):
+        porter_step(cfg, _loss_fn, mixer, None, state, batch,
+                    jax.random.PRNGKey(0))
+
+
+def test_dpsgd_wire_bytes_follow_dtype():
+    """bf16 buffers must report half the wire traffic of f32 ones."""
+    from repro.core import baselines as BL
+    params32 = {"w": jnp.zeros(D, jnp.float32)}
+    params16 = {"w": jnp.zeros(D, jnp.bfloat16)}
+    rng = np.random.default_rng(0)
+    f = jnp.asarray(rng.normal(size=(8, D)).astype(np.float32))
+    l = jnp.asarray((rng.random(8) > 0.5).astype(np.float32))
+
+    def loss(p, b):
+        ff, ll = b
+        logits = ff @ p["w"].astype(jnp.float32)
+        return jnp.mean(jnp.log1p(jnp.exp(-(2 * ll - 1) * logits)))
+
+    _, m32 = BL.dpsgd_step(0.1, loss, BL.dpsgd_init(params32), (f, l),
+                           jax.random.PRNGKey(0))
+    _, m16 = BL.dpsgd_step(0.1, loss, BL.dpsgd_init(params16), (f, l),
+                           jax.random.PRNGKey(0))
+    assert float(m32["wire_bytes"]) == 4.0 * D
+    assert float(m16["wire_bytes"]) == 2.0 * D
+
+
+def test_spec_is_declarative():
+    """Specs are frozen plain-value records: replace() copies, fields hash
+    out to something loggable."""
+    spec = _spec("choco")
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        spec.eta = 1.0
+    assert spec.replace(eta=1.0).eta == 1.0 and spec.eta == 0.1
