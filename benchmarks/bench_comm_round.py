@@ -12,9 +12,16 @@ slice -- gradients excluded -- for the engine's two backends:
             interpret exists for correctness CI, the speedup is a TPU
             number)
 
+``--sharded`` adds the model-sharded case: a (data x model) mesh whose
+buffers carry model-parallel PartitionSpecs, ref vs the pallas per-shard
+planes path (pack/unpack inside shard_map; the layout the launch layer
+uses for tensor-parallel training).  Off-TPU this forces
+--xla_force_host_platform_device_count=8 host devices.
+
 Usage:
     PYTHONPATH=src python benchmarks/bench_comm_round.py            # full
     PYTHONPATH=src python benchmarks/bench_comm_round.py --smoke    # CI
+    PYTHONPATH=src python benchmarks/bench_comm_round.py --smoke --sharded
 
 Rows: compressor,backend,us_per_round,bytes_per_round
 """
@@ -29,10 +36,15 @@ from pathlib import Path
 if __package__ in (None, ""):  # allow `python benchmarks/bench_comm_round.py`
     sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
+# must precede the jax import: device count locks at first backend init
+if "--sharded" in sys.argv:
+    from repro._env import ensure_host_device_count
+    ensure_host_device_count(8)
+
 import jax
 import jax.numpy as jnp
 
-from repro.api import ExperimentSpec, build_engine
+from repro.api import ExperimentSpec, build_engine, resolve_compressor
 
 # the paper's sparse family; 'rand_k' is the registry's random_k
 COMPRESSORS = (("top_k", "top_k"), ("block_top_k", "block_top_k"),
@@ -103,10 +115,75 @@ def bench(n_agents: int, d: int, frac: float, reps: int):
     return rows
 
 
+def bench_sharded(d: int, frac: float, reps: int):
+    """Model-sharded case: (data=4, model=2) mesh, per-shard pallas planes
+    vs the jnp reference, ring wire format, shard-local compression --
+    the engine exactly as the tensor-parallel launch path builds it."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.launch.steps import make_shard_local_compress
+
+    n_data, n_model = 4, 2
+    if len(jax.devices()) < n_data * n_model:
+        print(f"# sharded bench skipped: needs {n_data * n_model} devices, "
+              f"have {len(jax.devices())} (run with --sharded from the CLI "
+              "so the host-device flag is set before jax init)")
+        return []
+    mesh = jax.make_mesh((n_data, n_model), ("data", "model"))
+    n = n_data
+    d_sh = max(d - d // 3 - 1, 2) // (2 * n_model) * (2 * n_model)
+    d_rep = max(d - d_sh, 1)
+    shapes = {"w": (d_sh // (2 * n_model), 2 * n_model), "b": (d_rep,)}
+    specs = {"w": P("data", None, "model"), "b": P("data", None)}
+    sh = {k: NamedSharding(mesh, specs[k]) for k in specs}
+    key = jax.random.PRNGKey(0)
+
+    def tree(k):
+        ks = jax.random.split(k, len(shapes))
+        return {name: jax.device_put(
+                    jax.random.normal(kk, (n,) + shapes[name]), sh[name])
+                for kk, name in zip(ks, shapes)}
+
+    y, q, m, g, gp = (tree(k) for k in jax.random.split(key, 5))
+    gamma, eta = 0.1, 0.05
+    base = ExperimentSpec(n_agents=n, topology="ring",
+                          topology_weights="metropolis",
+                          compressor="block_top_k", frac=frac,
+                          gossip_mode="ring",
+                          interpret=None if jax.default_backend() == "tpu"
+                          else True)
+    shard_local = make_shard_local_compress(resolve_compressor(base), mesh,
+                                            specs)
+
+    print(f"# sharded comm-round bench: mesh=(data={n_data},model={n_model}) "
+          f"d={d} frac={frac} reps={reps}")
+    print("compressor,backend,us_per_round,bytes_per_round")
+    rows = []
+    for backend in ("ref", "pallas"):
+        eng = build_engine(base.replace(comm_backend=backend), mesh=mesh,
+                           leaf_specs=specs, compress_fn=shard_local)
+
+        @jax.jit
+        def one_round(key, y, q, m, g, gp, eng=eng):
+            k1, k2 = jax.random.split(key)
+            v, q2, m2 = eng.track(k1, y, q, m, g, gp, gamma)
+            x, q3, m3 = eng.step(k2, y, q2, m2, v, gamma, eta)
+            return x, v, q3, m3
+
+        us = timed_us(one_round, key, y, q, m, g, gp, reps=reps)
+        wire = 2.0 * eng.wire_bytes(y)
+        rows.append(("block_top_k/sharded", backend, us, wire))
+        print(f"block_top_k/sharded,{backend},{us:.1f},{wire:.0f}",
+              flush=True)
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small sizes for CPU CI")
+    ap.add_argument("--sharded", action="store_true",
+                    help="add the model-sharded (per-shard planes) case")
     ap.add_argument("--agents", type=int, default=None)
     ap.add_argument("--d", type=int, default=None,
                     help="per-agent parameter count")
@@ -122,6 +199,8 @@ def main(argv=None):
     d = args.d or d
     reps = args.reps or reps
     bench(n, d, args.frac, reps)
+    if args.sharded:
+        bench_sharded(d, args.frac, reps)
     return 0
 
 

@@ -1,0 +1,35 @@
+"""Process-environment knobs that must be set before jax backend init.
+
+jax locks the host device count at first backend initialization, so any
+driver that wants forced host devices (dry-run sweeps, sharded CPU
+benchmarks) has to mutate XLA_FLAGS before anything queries a device.
+This module is deliberately jax-free (and importable through the
+docstring-only ``repro`` package root) so callers can import it first,
+then import jax.
+
+One shared implementation instead of a copy per driver: the append/defer
+precedence rule lives here only.
+"""
+
+from __future__ import annotations
+
+import os
+
+__all__ = ["ensure_host_device_count"]
+
+_FLAG = "--xla_force_host_platform_device_count"
+
+
+def ensure_host_device_count(n: int) -> None:
+    """Force ``n`` host platform devices unless the caller already chose.
+
+    Appends to any user-provided XLA_FLAGS (never clobbers them) and
+    defers entirely when a host-device count is already present -- running
+    a driver under an outer harness that set its own count keeps the outer
+    choice.  A no-op after jax backend init (the count is locked); call
+    before importing anything that might initialize jax.
+    """
+    existing = os.environ.get("XLA_FLAGS", "")
+    if _FLAG in existing:
+        return
+    os.environ["XLA_FLAGS"] = f"{existing} {_FLAG}={n}".strip()

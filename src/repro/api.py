@@ -198,13 +198,21 @@ def build_engine(spec: ExperimentSpec, *,
     The only sanctioned way to get a :class:`CommRound` outside repro.core;
     benchmarks that exercise the engine directly use this instead of wiring
     make_topology/make_mixer/CommRound by hand.
+
+    mesh/leaf_specs/agent_axes feed both the gossip executor (ring/packed
+    wire formats) and the engine's pallas path: leaf specs that carry model
+    axes switch the fused update to per-shard planes (pack/unpack inside
+    shard_map), so ``comm_backend='pallas'`` stays reshard-free on
+    tensor-parallel layouts.
     """
     top = resolve_topology(spec) if topology is None else topology
     comp = resolve_compressor(spec)
     mixer = make_mixer(top, spec.gossip_mode, mesh=mesh, frac=spec.frac,
                        agent_axes=agent_axes, leaf_specs=leaf_specs)
     return CommRound(compressor=comp, mixer=mixer, compress_fn=compress_fn,
-                     backend=spec.comm_backend, interpret=spec.interpret)
+                     backend=spec.comm_backend, interpret=spec.interpret,
+                     mesh=mesh, leaf_specs=leaf_specs,
+                     agent_axes=tuple(agent_axes))
 
 
 def build(spec: ExperimentSpec, loss_fn, *,
@@ -240,7 +248,9 @@ def build(spec: ExperimentSpec, loss_fn, *,
         engine = CommRound(compressor=comp, mixer=None,
                            compress_fn=compress_fn,
                            backend=spec.comm_backend,
-                           interpret=spec.interpret)
+                           interpret=spec.interpret,
+                           mesh=mesh, leaf_specs=leaf_specs,
+                           agent_axes=tuple(agent_axes))
     gamma = None
     if info.decentralized:
         gamma = (resolve_gamma(spec, top, comp) if info.compressed

@@ -26,12 +26,15 @@ Backends:
 * ``'auto'``   -- 'pallas' on TPU, 'ref' elsewhere (the default: CPU tests
   keep XLA-fused jnp speed, TPU gets the kernels).
 
-Sharding caveat: the flat plane concatenates *all* leaves, so under a mesh
-whose leaves carry different model-parallel PartitionSpecs the pack/unpack
-reshards (the plane can only be sharded along the agent axis).  That is
-fine for pure data/agent-sharded states (every buffer P(agents, None, ...))
-and on single hosts; for mixed model-sharded layouts keep
-``backend='ref'`` until per-shard planes land (see ROADMAP).
+Sharding: for pure data/agent-sharded states (every buffer
+P(agents, None, ...)) the flat plane is sharded along its row axis and the
+in-jit pack is reshard-free.  When the engine is built with ``mesh`` +
+``leaf_specs`` that carry model axes (tensor-parallel layouts), the pallas
+path switches to *per-shard planes*: pack -> kernel -> unpack runs inside
+``shard_map`` with those leaf specs, one padded plane per (agent shard x
+model shard), so no buffer is ever all-gathered over the model axis
+(:func:`repro.kernels.flatten.plane_apply`).  ``backend='pallas'`` is
+therefore safe on every layout the launch layer builds.
 
 Wire accounting: :meth:`CommRound.wire_bytes` converts (gossip mode,
 compressor, n_agents, d) into per-round bytes via
@@ -43,16 +46,17 @@ comparisons are apples-to-apples (benchmarks/ablation.py).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from jax.sharding import PartitionSpec as P
+
 from ..kernels import flatten as FL
 from ..kernels import ops
 from .compression import Compressor
-from .gossip import MixFn, gossip_wire_bytes
+from .gossip import PACK_BLOCK, MixFn, gossip_wire_bytes
 
 __all__ = ["CommRound", "compress_stacked", "resolve_engine"]
 
@@ -130,6 +134,10 @@ class CommRound:
         per-leaf compression of ``compressor``.
       backend: 'pallas' | 'ref' | 'auto'.
       interpret: Pallas interpret mode; None = auto (True off-TPU).
+      mesh / leaf_specs / agent_axes: sharded-layout hooks (the facade
+        ``repro.api.build_engine`` plumbs them from the launch layer).  When
+        ``leaf_specs`` shard a non-agent mesh axis, the pallas path packs
+        per-shard planes inside ``shard_map`` instead of one global plane.
     """
 
     compressor: Compressor
@@ -137,6 +145,9 @@ class CommRound:
     compress_fn: Optional[CompressFn] = None
     backend: str = "auto"
     interpret: Optional[bool] = None
+    mesh: Any = None
+    leaf_specs: Any = None
+    agent_axes: Sequence[str] = ("data",)
 
     def __post_init__(self):
         if self.backend not in ("pallas", "ref", "auto"):
@@ -151,6 +162,14 @@ class CommRound:
 
     def _kernel_kw(self):
         return {} if self.interpret is None else {"interpret": self.interpret}
+
+    def _sharded_planes(self) -> Optional[FL.ShardedFlatSpec]:
+        """Per-shard plane layout, or None for the single-plane fast path."""
+        if (self.mesh is None or self.leaf_specs is None
+                or not FL.specs_have_model_axes(self.leaf_specs,
+                                                self.agent_axes)):
+            return None
+        return FL.sharded_spec(self.mesh, self.leaf_specs)
 
     # -- the shared front half: compress + mix ------------------------------
 
@@ -179,13 +198,11 @@ class CommRound:
         """
         c, wc = self.exchange(key, v, q)
         if self._use_pallas():
-            spec = FL.flat_spec(v)
-            pl = functools.partial(FL.to_planes, spec=spec)
-            qo, mo, vo = ops.ef_track(pl(q), pl(m), pl(v), pl(c), pl(wc),
-                                      pl(g), pl(g_prev), gamma,
-                                      **self._kernel_kw())
-            return (FL.from_planes(vo, spec), FL.from_planes(qo, spec),
-                    FL.from_planes(mo, spec))
+            kw = self._kernel_kw()
+            qo, mo, vo = FL.plane_apply(
+                lambda *p: ops.ef_track(*p, gamma, **kw),
+                (q, m, v, c, wc, g, g_prev), 3, self._sharded_planes())
+            return vo, qo, mo
         q2 = _tree(jnp.add, q, c)
         m2 = _tree(jnp.add, m, wc)
         v2 = _tree(lambda v0, mm, qq, gn, gp: v0 + gamma * (mm - qq)
@@ -201,12 +218,11 @@ class CommRound:
         """
         c, wc = self.exchange(key, x, q)
         if self._use_pallas():
-            spec = FL.flat_spec(x)
-            pl = functools.partial(FL.to_planes, spec=spec)
-            qo, mo, xo = ops.ef_step(pl(q), pl(m), pl(x), pl(c), pl(wc),
-                                     pl(v), gamma, eta, **self._kernel_kw())
-            return (FL.from_planes(xo, spec), FL.from_planes(qo, spec),
-                    FL.from_planes(mo, spec))
+            kw = self._kernel_kw()
+            qo, mo, xo = FL.plane_apply(
+                lambda *p: ops.ef_step(*p, gamma, eta, **kw),
+                (q, m, x, c, wc, v), 3, self._sharded_planes())
+            return xo, qo, mo
         q2 = _tree(jnp.add, q, c)
         m2 = _tree(jnp.add, m, wc)
         x2 = _tree(lambda x0, mm, qq, vv:
@@ -223,12 +239,11 @@ class CommRound:
         """
         c, wc = self.exchange(key, y, q)
         if self._use_pallas():
-            spec = FL.flat_spec(y)
-            pl = functools.partial(FL.to_planes, spec=spec)
-            qo, mo, yo = ops.ef_gossip(pl(q), pl(m), pl(y), pl(c), pl(wc),
-                                       gamma, scale, **self._kernel_kw())
-            return (FL.from_planes(yo, spec), FL.from_planes(qo, spec),
-                    FL.from_planes(mo, spec))
+            kw = self._kernel_kw()
+            qo, mo, yo = FL.plane_apply(
+                lambda *p: ops.ef_gossip(*p, gamma, scale, **kw),
+                (q, m, y, c, wc), 3, self._sharded_planes())
+            return yo, qo, mo
         q2 = _tree(lambda a, b: a + scale * b, q, c)
         m2 = _tree(lambda a, b: a + scale * b, m, wc)
         y2 = _tree(lambda y0, mm, qq: y0 + gamma * (mm - qq), y, m2, q2)
@@ -245,6 +260,45 @@ class CommRound:
 
     # -- wire accounting ----------------------------------------------------
 
+    def _packed_windows(self, tree, n_agents: int) -> int:
+        """PACK_BLOCK windows the packed executor actually pads for ``tree``.
+
+        ``make_packed_mixer.local`` packs each *leaf* separately and, under
+        a sharded layout, runs once per model shard -- so the window count
+        is summed per (leaf x model shard), not derived from the
+        concatenated element count (which under-reports whenever separate
+        pads each round up).  Falls back to unsharded per-leaf counts when
+        the engine carries no layout or the specs do not match ``tree``.
+        """
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        shard_counts = [1] * len(leaves)
+        if self.mesh is not None and self.leaf_specs is not None:
+            specs, sdef = jax.tree_util.tree_flatten(
+                self.leaf_specs, is_leaf=lambda x: isinstance(x, P))
+            if sdef == treedef:
+                agent = set(self.agent_axes)
+
+                def nshards(s) -> int:
+                    n = 1
+                    for entry in tuple(s):
+                        if entry is None:
+                            continue
+                        names = (entry if isinstance(entry, tuple)
+                                 else (entry,))
+                        for name in names:
+                            if name not in agent:
+                                n *= int(self.mesh.shape[name])
+                    return n
+
+                shard_counts = [nshards(s) if isinstance(s, P) else 1
+                                for s in specs]
+        total = 0
+        for leaf, ns in zip(leaves, shard_counts):
+            d_leaf = int(leaf.size) // n_agents
+            local = -(-d_leaf // ns)               # per-shard elements
+            total += ns * (-(-local // PACK_BLOCK))
+        return total
+
     def wire_bytes(self, tree_or_d, n_agents: Optional[int] = None) -> float:
         """Model-level bytes crossing agent links per round for one buffer.
 
@@ -257,12 +311,19 @@ class CommRound:
         charges the compressor's own payload (``Compressor.wire_bits``),
         which is n*d floats for identity and k*(value+index) for the
         sparse family -- i.e. the bytes a real deployment of that
-        compressor would move.  Compare algorithms under the *same* gossip
-        mode (as benchmarks/ablation.py does); cross-mode numbers follow
-        each wire format's own link accounting.
+        compressor would move.  For 'packed' with a pytree the window
+        count is exact per (leaf x model shard) via
+        :meth:`_packed_windows` -- the executor pads each leaf (and each
+        shard) separately, so ``gossip_wire_bytes``'s single-buffer model
+        would under-report; the scalar-``d`` overload keeps the
+        single-buffer convention.  Compare algorithms under the *same*
+        gossip mode (as benchmarks/ablation.py does); cross-mode numbers
+        follow each wire format's own link accounting.
         """
+        tree = None
         if n_agents is None:
-            leaves = jax.tree_util.tree_leaves(tree_or_d)
+            tree = tree_or_d
+            leaves = jax.tree_util.tree_leaves(tree)
             n_agents = leaves[0].shape[0]
             d = sum(int(l.size) // n_agents for l in leaves)
         else:
@@ -271,5 +332,9 @@ class CommRound:
         if mode in ("ring", "packed"):
             frac = getattr(self.mixer, "wire_frac", None)
             frac = self.compressor.rho if frac is None else frac
+            if mode == "packed" and tree is not None:
+                k_b = max(int(round(frac * PACK_BLOCK)), 1)
+                windows = self._packed_windows(tree, n_agents)
+                return float(n_agents) * windows * k_b * 8.0
             return gossip_wire_bytes(mode, n_agents, d, frac=frac)
         return n_agents * self.compressor.wire_bits(d) / 8.0

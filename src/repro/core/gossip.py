@@ -41,12 +41,18 @@ from .mixing import Topology
 
 __all__ = [
     "MixFn",
+    "PACK_BLOCK",
     "make_dense_mixer",
     "make_ring_mixer",
     "make_packed_mixer",
     "make_mixer",
     "gossip_wire_bytes",
 ]
+
+# packed wire format selection window; matches kernels/block_topk.py.  Both
+# the executor (make_packed_mixer) and the byte model (gossip_wire_bytes)
+# must agree on this, or the reported wire_bytes drift from the payload.
+PACK_BLOCK = 2048
 
 MixFn = Callable[[object], object]  # tree of (n, ...) -> tree of (n, ...)
 
@@ -72,17 +78,33 @@ def make_dense_mixer(w: np.ndarray) -> MixFn:
 # ---------------------------------------------------------------------------
 
 def _ring_weights(w: np.ndarray) -> Tuple[float, float, float]:
-    """Extract (w_self, w_prev, w_next) from a circulant ring mixing matrix."""
+    """Extract (w_self, w_prev, w_next) from a circulant ring mixing matrix.
+
+    At ``n == 2`` the two off-diagonal bands coincide: both ppermute shifts
+    deliver the *same* (only) neighbor, so summing a prev and a next term
+    would double-count it (``w_self*x + 2*w01*nb``, row sum != 1).  The whole
+    neighbor weight is therefore folded into ``w_prev`` and ``w_next`` is
+    zeroed, collapsing the executor to a single shift term.  The structure
+    check accumulates band weights instead of assigning them, so coinciding
+    positions can no longer mask a mismatch (``ref[0, 1]`` used to be
+    silently overwritten).
+    """
     n = w.shape[0]
+    if n < 2:
+        raise ValueError("ring gossip needs at least 2 agents; "
+                         "use dense gossip for a single agent")
     w_self = float(w[0, 0])
     w_next = float(w[0, 1 % n])
     w_prev = float(w[0, (n - 1) % n])
-    # verify circulant-banded structure
+    if n == 2:
+        w_prev, w_next = float(w[0, 1]), 0.0
+    # verify circulant-banded structure (accumulate: at n=2 both bands land
+    # on the same entry, and with w_next folded to 0 the sum is exact)
     ref = np.zeros_like(w)
     for i in range(n):
-        ref[i, i] = w_self
-        ref[i, (i + 1) % n] = w_next
-        ref[i, (i - 1) % n] = w_prev
+        ref[i, i] += w_self
+        ref[i, (i + 1) % n] += w_next
+        ref[i, (i - 1) % n] += w_prev
     if not np.allclose(ref, w, atol=1e-10):
         raise ValueError("mixing matrix is not a circulant ring band; "
                          "use dense or packed gossip")
@@ -107,25 +129,34 @@ def make_ring_mixer(w: np.ndarray, mesh: Mesh,
         return jax.lax.ppermute(x, axis, perm)
 
     def local(x):  # x: (1, ...) local agent block
+        # zero-weight bands send nothing (n=2 ring folds everything into
+        # w_prev; its second ppermute would be a dead wire transfer)
         if len(axes) == 1:
             ax = axes[0]
-            from_prev = shift(x, +1, ax)   # value of agent i-1 arrives at i
-            from_next = shift(x, -1, ax)
-            return w_self * x + w_prev * from_prev + w_next * from_next
+            out = w_self * x
+            if w_prev:
+                out = out + w_prev * shift(x, +1, ax)  # agent i-1 arrives at i
+            if w_next:
+                out = out + w_next * shift(x, -1, ax)
+            return out
 
         pod_ax, data_ax = axes
         dsize = mesh.shape[data_ax]
         didx = jax.lax.axis_index(data_ax)
-        # intra-pod shifted copies (wrap inside the pod is wrong at the seam)
-        prev_intra = shift(x, +1, data_ax)
-        next_intra = shift(x, -1, data_ax)
+        out = w_self * x
+        # intra-pod shifted copies (wrap inside the pod is wrong at the seam);
         # seam fix: data==0 must receive pod-1's last agent; data==dsize-1
         # must receive pod+1's first agent.
-        prev_cross = shift(prev_intra, +1, pod_ax)
-        next_cross = shift(next_intra, -1, pod_ax)
-        from_prev = jnp.where(didx == 0, prev_cross, prev_intra)
-        from_next = jnp.where(didx == dsize - 1, next_cross, next_intra)
-        return w_self * x + w_prev * from_prev + w_next * from_next
+        if w_prev:
+            prev_intra = shift(x, +1, data_ax)
+            prev_cross = shift(prev_intra, +1, pod_ax)
+            out = out + w_prev * jnp.where(didx == 0, prev_cross, prev_intra)
+        if w_next:
+            next_intra = shift(x, -1, data_ax)
+            next_cross = shift(next_intra, -1, pod_ax)
+            out = out + w_next * jnp.where(didx == dsize - 1, next_cross,
+                                           next_intra)
+        return out
 
     def mix(tree):
         if leaf_specs is not None:
@@ -165,7 +196,7 @@ def make_packed_mixer(w: np.ndarray, mesh: Mesh, frac: float,
     axes = tuple(agent_axes)
     gather_axis = axes if len(axes) > 1 else axes[0]
 
-    block = 2048  # selection window; matches kernels/block_topk.py
+    block = PACK_BLOCK  # selection window; matches kernels/block_topk.py
 
     def local(x, w_col):
         # x: (1, ...) local agent's increment block (possibly model-sharded).
@@ -252,12 +283,24 @@ def make_mixer(topology: Topology, mode: str = "dense",
 
 def gossip_wire_bytes(mode: str, n_agents: int, d_params: int,
                       frac: float = 1.0, dtype_bytes: int = 4) -> float:
-    """Per-round bytes crossing agent links for one buffer (model-level)."""
+    """Per-round bytes crossing agent links for one buffer (model-level).
+
+    'packed' mirrors the actual block-packed format of
+    :func:`make_packed_mixer`: each agent pads its buffer to PACK_BLOCK-sized
+    windows and all-gathers ``max(round(frac*PACK_BLOCK), 1)`` (value, int32
+    index) pairs *per window* -- ``nb * k_b`` pairs total, not
+    ``max(frac*d, 1)``.  The distinction matters for small or badly padded
+    buffers (a 10-element leaf still ships one full window's k_b pairs) and
+    is what the wire-bytes tests pin against the executor's payload.
+    """
     if mode == "dense":
         return float(n_agents) * d_params * dtype_bytes
     if mode == "ring":
-        return 2.0 * d_params * dtype_bytes
+        # n=2 folds both bands onto the single neighbor (one ppermute)
+        shifts = 1.0 if n_agents == 2 else 2.0
+        return shifts * d_params * dtype_bytes
     if mode == "packed":
-        k = max(frac * d_params, 1.0)
-        return float(n_agents) * k * (dtype_bytes + 4)  # value + int32 index
+        nb = -(-int(d_params) // PACK_BLOCK)          # windows after padding
+        k_b = max(int(round(frac * PACK_BLOCK)), 1)   # pairs per window
+        return float(n_agents) * nb * k_b * (dtype_bytes + 4)
     raise ValueError(mode)

@@ -14,18 +14,30 @@ in, whatever the kernel computes there is dropped by :func:`from_planes`,
 and per-leaf dtypes are restored on the way out (the planes themselves are
 always f32, the kernels' accumulation dtype).  tests/test_comm_round.py pins
 this for odd, non-tile-aligned shapes.
+
+Per-shard planes: a single global plane concatenates leaves with *different*
+model-parallel PartitionSpecs, which XLA SPMD can only realize by
+all-gathering every buffer over the model axis on pack and resharding again
+on unpack.  :class:`ShardedFlatSpec` + :func:`plane_apply` instead run the
+pack -> kernel -> unpack pipeline *inside* ``shard_map`` with the engine's
+leaf specs, building one padded ``(tiles, TILE)`` plane per (agent shard x
+model shard).  The fused updates are elementwise, so the per-shard program
+needs no communication at all -- no byte of the plane ever crosses the
+model axis.
 """
 
 from __future__ import annotations
 
 import math
-from typing import Any, NamedTuple, Tuple
+from typing import Any, NamedTuple, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 __all__ = ["LANE", "SUBLANES", "TILE", "FlatSpec", "flat_spec", "to_planes",
-           "from_planes"]
+           "from_planes", "ShardedFlatSpec", "sharded_spec",
+           "specs_have_model_axes", "plane_apply"]
 
 LANE = 1024
 SUBLANES = 8
@@ -123,3 +135,85 @@ def from_planes(planes: jax.Array, spec: FlatSpec):
         out.append(flat[offs:offs + size].reshape(shape).astype(dtype))
         offs += size
     return spec.treedef.unflatten(out)
+
+
+# ---------------------------------------------------------------------------
+# per-shard planes: pack/kernel/unpack inside shard_map
+# ---------------------------------------------------------------------------
+
+class ShardedFlatSpec(NamedTuple):
+    """Static description of the *per-shard* flat layout.
+
+    Unlike :class:`FlatSpec`, the tile counts are not recorded here: each
+    device derives its own local :class:`FlatSpec` from its shard's shapes
+    at trace time inside ``shard_map`` (every shard of an evenly-sharded
+    tree sees the same local shapes, so the derived layout is identical
+    across devices).  What this spec pins down is *where* the planes live:
+    the mesh and the per-leaf PartitionSpecs the pack/unpack must respect.
+    """
+
+    mesh: Any
+    leaf_specs: Any               # pytree of PartitionSpec, agent axis first
+
+
+def specs_have_model_axes(leaf_specs,
+                          agent_axes: Sequence[str] = ("data",)) -> bool:
+    """True when any leaf spec shards a non-agent (model) mesh axis.
+
+    Pure agent sharding (every leaf ``P(agents, None, ...)``) keeps the
+    single global plane shardable along its row axis, so the in-jit pack is
+    already reshard-free there; only model axes force per-shard planes.
+    """
+    agent = set(agent_axes)
+    for s in jax.tree_util.tree_leaves(
+            leaf_specs, is_leaf=lambda x: isinstance(x, P)):
+        if not isinstance(s, P):
+            continue
+        for entry in tuple(s):
+            if entry is None:
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            if any(n not in agent for n in names):
+                return True
+    return False
+
+
+def sharded_spec(mesh, leaf_specs) -> ShardedFlatSpec:
+    """Pin the per-shard plane layout for ``plane_apply``."""
+    if mesh is None or leaf_specs is None:
+        raise ValueError("per-shard planes need both a mesh and leaf_specs")
+    return ShardedFlatSpec(mesh=mesh, leaf_specs=leaf_specs)
+
+
+def plane_apply(kernel, trees: Sequence[Any], n_out: int,
+                sharded: "ShardedFlatSpec | None" = None):
+    """Run ``kernel`` over the flat planes of ``trees``.
+
+    kernel: ``(plane, ...) -> (plane, ...)`` over same-layout tile planes
+    (``n_out`` outputs); ``trees``: same-structure agent-stacked pytrees.
+    Returns ``n_out`` pytrees with the layout (and leaf dtypes) of
+    ``trees[0]``.
+
+    With ``sharded=None`` this is the single-plane path: one global pack,
+    one kernel launch, one unpack.  With a :class:`ShardedFlatSpec` the same
+    three steps run inside ``shard_map`` over ``sharded.mesh``, so every
+    device packs only its local (agent shard x model shard) block and the
+    kernel grid covers one per-shard plane -- no leaf ever crosses the
+    model axis.
+    """
+
+    def local(*ts):
+        spec = flat_spec(ts[0])
+        outs = kernel(*(to_planes(t, spec) for t in ts))
+        return tuple(from_planes(o, spec) for o in outs)
+
+    if sharded is None:
+        return local(*trees)
+
+    from repro.compat import shard_map  # deferred: keep kernels jax-only
+
+    specs = sharded.leaf_specs
+    fn = shard_map(local, mesh=sharded.mesh,
+                   in_specs=(specs,) * len(trees),
+                   out_specs=(specs,) * n_out, check_vma=False)
+    return fn(*trees)

@@ -5,6 +5,12 @@ un-pad) and the interpret switch: on CPU (this container) kernels execute in
 ``interpret=True`` mode, which runs the kernel body in Python/XLA-CPU and is
 what the allclose tests validate; on TPU the same code lowers to Mosaic.
 
+The ef_* wrappers are additionally shard_map-safe: the comm-round engine's
+per-shard plane path (:func:`repro.kernels.flatten.plane_apply`) invokes
+them once *per (agent shard x model shard)* inside ``shard_map``, so they
+must stay shape-polymorphic and free of global-device assumptions (no mesh
+queries, no collectives) -- each call sees only its shard's plane.
+
 Use ``repro.kernels.ops`` from the algorithm layer; never call the raw
 kernels directly.
 """

@@ -1,13 +1,12 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (architecture x input shape) on
 the production meshes and extract roofline terms from the compiled artifact.
 
-The two lines above MUST stay the first statements of this module (before any
-jax-importing import): jax locks the device count at first backend init, and
-the dry-run needs 512 placeholder host devices to build the (2,16,16) mesh.
-Do NOT set this flag globally -- smoke tests and benchmarks see 1 device.
+The ensure_host_device_count call below MUST stay ahead of any
+jax-importing import: jax locks the device count at first backend init,
+and the dry-run needs 512 placeholder host devices to build the (2,16,16)
+mesh.  It appends to (never clobbers) user-provided XLA_FLAGS and defers
+to a caller-chosen device count (repro/_env.py).  Do NOT set this flag
+globally -- smoke tests and benchmarks see 1 device.
 
 Usage:
     PYTHONPATH=src python -m repro.launch.dryrun --arch rwkv6-7b --shape train_4k
@@ -25,6 +24,10 @@ optimized HLO, and the three roofline terms (seconds, per device):
 The compiled module is the per-device SPMD program, so all three terms are
 per-chip without further division.
 """
+
+from repro._env import ensure_host_device_count
+
+ensure_host_device_count(512)
 
 import argparse
 import dataclasses
@@ -125,7 +128,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, variant: str,
             compressor: str = "block_top_k", remat: bool = True,
             local_compress: bool = False, buffer_dtype="f32",
             q_chunk=None, capacity: float = None, cache_dtype="bf16",
-            topology: str = "ring"):
+            topology: str = "ring", comm_backend: str = "auto"):
     shape = SH.SHAPES[shape_name]
     cfg = get_config(arch)
     if capacity is not None:
@@ -144,7 +147,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, variant: str,
                 cfg, mesh, shape, variant=variant, gossip_mode=gossip,
                 compressor_name=compressor, remat=remat,
                 local_compress=local_compress,
-                topology_kind=topology,
+                topology_kind=topology, comm_backend=comm_backend,
                 buffer_dtype=jnp.bfloat16 if buffer_dtype == "bf16"
                 else jnp.float32)
             params_shapes = setup.state_shapes.x
@@ -261,6 +264,10 @@ def main():
     ap.add_argument("--topology", default="ring",
                     help="agent graph for train shapes (ring, exponential, "
                          "hypercube, erdos_renyi, complete, torus)")
+    ap.add_argument("--comm-backend", default="auto",
+                    choices=["auto", "ref", "pallas"],
+                    help="comm-round engine backend (pallas packs per-shard "
+                         "planes under model-sharded layouts)")
     ap.add_argument("--tag", default="")
     ap.add_argument("--out", default="artifacts/dryrun")
     args = ap.parse_args()
@@ -285,7 +292,7 @@ def main():
                 local_compress=args.local_compress,
                 buffer_dtype=args.buffer_dtype, q_chunk=args.q_chunk,
                 capacity=args.capacity, cache_dtype=args.cache_dtype,
-                topology=args.topology))
+                topology=args.topology, comm_backend=args.comm_backend))
     n_ok = sum(r["ok"] for r in results)
     print(f"\n{n_ok}/{len(results)} combinations lowered+compiled OK")
     return 0 if n_ok == len(results) else 1

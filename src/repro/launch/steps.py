@@ -141,11 +141,11 @@ def build_train_step(
     ef_track/ef_step Pallas kernels on TPU and the jnp reference elsewhere;
     shard-local compression and the packed wire format compose with either
     (compression/mixing stay in the pytree domain, only the AXPY chain runs
-    over the flat tile planes).  CAVEAT: the flat plane is sharded along
-    the agent axis only, so with *model*-sharded parameter leaves the
-    pallas path reshards on pack/unpack -- prefer 'ref' for
-    tensor-parallel layouts until per-shard planes land (comm_round.py
-    docstring).
+    over the flat tile planes).  The stacked leaf specs built here flow
+    through ``api.build`` into the engine, so with model-sharded parameter
+    leaves the pallas path packs *per-shard planes* inside shard_map
+    (kernels/flatten.py) -- no pack/unpack reshard, 'pallas' is safe on
+    tensor-parallel layouts.
     """
     cfg = dataclasses.replace(cfg, remat=remat)
     bundle = build_model(cfg)

@@ -1,13 +1,19 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Reproduce the full artifacts/dryrun set used by EXPERIMENTS.md with one
 command (baselines on both meshes + optimized sweeps + every SPerf
 iteration tag).  This is the provenance script for the roofline/perf tables.
 
     PYTHONPATH=src python -m repro.launch.sweep             # everything (~1.5h on 1 CPU)
     PYTHONPATH=src python -m repro.launch.sweep --only perf # just the SPerf ladders
+
+The ensure_host_device_count call below must run before any jax-importing
+import (jax locks the device count at first backend init); it appends to
+any user-provided XLA_FLAGS instead of clobbering them, and defers to a
+caller-chosen device count if one is already set (repro/_env.py).
 """
+
+from repro._env import ensure_host_device_count
+
+ensure_host_device_count(512)
 
 import argparse
 from pathlib import Path
@@ -55,6 +61,17 @@ PERF_LADDERS = [
     # PORTER-DP at scale
     ("tinyllama-1.1b", "train_4k", False,
      dict(variant="dp", local_compress=True), "dp"),
+    # SPerf-5: per-shard planes -- the fused pallas engine on the
+    # tensor-parallel mesh, vs the same rung on the 'ref' backend above
+    ("rwkv6-7b", "train_4k", False,
+     dict(local_compress=True, gossip="ring", comm_backend="pallas"),
+     "lc_ring_pallas"),
+    ("rwkv6-7b", "train_4k", False,
+     dict(local_compress=True, gossip="packed", comm_backend="pallas"),
+     "lc_packed_pallas"),
+    ("arctic-480b", "train_4k", False,
+     dict(local_compress=True, gossip="ring", comm_backend="pallas"),
+     "lc_ring_pallas"),
 ]
 
 

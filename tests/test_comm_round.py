@@ -6,9 +6,16 @@ algorithms.
 
 These tests run without hypothesis and are never skipped, so ef_track /
 ef_step / ef_gossip are always exercised via interpret=True on CPU CI.
+
+The model-sharded (per-shard planes) parity tests run in a subprocess with
+--xla_force_host_platform_device_count=8 so this process keeps its single
+CPU device (same pattern as tests/test_distributed_gossip.py).
 """
 
 import functools
+import subprocess
+import sys
+import textwrap
 
 import jax
 import jax.numpy as jnp
@@ -290,6 +297,197 @@ def test_engine_rejects_unknown_backend():
     comp = make_compressor("top_k", frac=0.1)
     with pytest.raises(ValueError):
         CommRound(compressor=comp, mixer=None, backend="cuda")
+
+
+# ---------------------------------------------------------------------------
+# per-shard planes: model-sharded mesh parity + collective inspection
+# ---------------------------------------------------------------------------
+
+def test_specs_have_model_axes():
+    from jax.sharding import PartitionSpec as P
+    agent_only = {"a": P("data", None), "b": P(("pod", "data"), None)}
+    assert not FL.specs_have_model_axes(agent_only, ("pod", "data"))
+    sharded = {"a": P("data", None, "model"), "b": P("data", None)}
+    assert FL.specs_have_model_axes(sharded, ("data",))
+    # a non-agent axis folded into a tuple entry still counts
+    assert FL.specs_have_model_axes({"a": P(("data", "model"))}, ("data",))
+
+
+def test_engine_without_mesh_keeps_single_plane_path():
+    comp = make_compressor("top_k", frac=0.1)
+    eng = CommRound(compressor=comp, mixer=make_mixer(_top(), "dense"),
+                    backend="pallas", interpret=True)
+    assert eng._sharded_planes() is None
+
+
+_SHARDED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import re
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.api import ExperimentSpec, build_engine, resolve_compressor
+    from repro.launch.steps import make_shard_local_compress
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    n = 4
+    key = jax.random.PRNGKey(0)
+
+    # odd, non-tile-aligned leaves; 'a'/'c' model-sharded, 'b' replicated
+    # over the model axis
+    shapes = {"a": (n, 7, 6), "b": (n, 123), "c": (n, 10, 2)}
+    specs = {"a": P("data", None, "model"), "b": P("data", None),
+             "c": P("data", None, "model")}
+    sh = {k: NamedSharding(mesh, specs[k]) for k in specs}
+
+    def tree(k, dtype=jnp.float32):
+        ks = jax.random.split(k, len(shapes))
+        return {name: jax.device_put(
+                    jax.random.normal(kk, shapes[name]).astype(dtype),
+                    sh[name])
+                for kk, name in zip(ks, shapes)}
+
+    ks = jax.random.split(key, 6)
+    y, q, m, g, gp = (tree(k) for k in ks[:5])
+    kr = ks[5]
+
+    base = ExperimentSpec(n_agents=n, topology="ring",
+                          compressor="block_top_k", frac=0.25,
+                          compressor_kwargs={"block": 4})
+    comp = resolve_compressor(base)
+    shard_local = make_shard_local_compress(comp, mesh, specs)
+
+    def engines(gossip_mode):
+        kw = dict(mesh=mesh, leaf_specs=specs, compress_fn=shard_local)
+        ref = build_engine(base.replace(gossip_mode=gossip_mode,
+                                        comm_backend="ref"), **kw)
+        pal = build_engine(base.replace(gossip_mode=gossip_mode,
+                                        comm_backend="pallas",
+                                        interpret=True), **kw)
+        assert pal._sharded_planes() is not None, "per-shard planes inactive"
+        return ref, pal
+
+    def check(tref, tpal, atol=1e-5, rtol=1e-5):
+        for name in tref:
+            np.testing.assert_allclose(
+                np.asarray(tref[name], np.float32),
+                np.asarray(tpal[name], np.float32), atol=atol, rtol=rtol)
+
+    # --- parity: track / step / gossip_apply, ring + packed wire formats ---
+    for mode in ("ring", "packed"):
+        ref, pal = engines(mode)
+        vr, qr, mr = jax.jit(lambda k: ref.track(k, y, q, m, g, gp, 0.2))(kr)
+        vp, qp, mp = jax.jit(lambda k: pal.track(k, y, q, m, g, gp, 0.2))(kr)
+        for a, b in ((vr, vp), (qr, qp), (mr, mp)):
+            check(a, b)
+        xr, _, _ = jax.jit(lambda k: ref.step(k, y, q, m, vr, 0.2, 0.05))(kr)
+        xp, _, _ = jax.jit(lambda k: pal.step(k, y, q, m, vp, 0.2, 0.05))(kr)
+        check(xr, xp)
+        yr, _, _ = jax.jit(lambda k: ref.gossip_apply(k, y, q, m, 0.2, 0.5))(kr)
+        yp, _, _ = jax.jit(lambda k: pal.gossip_apply(k, y, q, m, 0.2, 0.5))(kr)
+        check(yr, yp)
+        print(mode + "-parity-ok")
+
+    # --- bf16 buffer dtype through the per-shard planes ---
+    yb, qb, mb, gb, gpb = (tree(k, jnp.bfloat16) for k in ks[:5])
+    ref, pal = engines("ring")
+    vr, qr, mr = jax.jit(lambda k: ref.track(k, yb, qb, mb, gb, gpb, 0.2))(kr)
+    vp, qp, mp = jax.jit(lambda k: pal.track(k, yb, qb, mb, gb, gpb, 0.2))(kr)
+    for name in vr:
+        assert vp[name].dtype == jnp.bfloat16, vp[name].dtype
+    # ref accumulates in bf16, the kernel in f32 -- parity up to bf16 ulps
+    for a, b in ((vr, vp), (qr, qp), (mr, mp)):
+        check(a, b, atol=6e-2, rtol=6e-2)
+    print("bf16-parity-ok")
+
+    # --- collective inspection: pack/unpack must add no all-gather --------
+    def ag_count(eng):
+        f = jax.jit(lambda k, y, q, m, g, gp: eng.track(k, y, q, m, g, gp,
+                                                        0.2),
+                    in_shardings=(NamedSharding(mesh, P()),) + (sh,) * 5)
+        txt = f.lower(kr, y, q, m, g, gp).compile().as_text()
+        return len(re.findall(r"all-gather", txt))
+
+    ref, pal = engines("ring")
+    # ring gossip + shard-local compression + per-shard planes: the whole
+    # round is ppermutes only -- zero all-gathers anywhere in the HLO
+    assert ag_count(pal) == 0, "pallas ring track lowered an all-gather"
+    print("ring-no-allgather-ok")
+
+    ref, pal = engines("packed")
+    # packed gossip all-gathers (value, index) pairs over the *agent* axis
+    # in both backends; per-shard planes must not add model-axis gathers
+    n_ref, n_pal = ag_count(ref), ag_count(pal)
+    assert n_pal <= n_ref, (n_pal, n_ref)
+    print("packed-no-extra-allgather-ok")
+""")
+
+
+def test_sharded_engine_parity_and_collectives():
+    """Tentpole oracle: on a data x model host mesh, backend='pallas'
+    (interpret, per-shard planes) matches backend='ref' to atol 1e-5 for
+    track/step/gossip_apply on odd shapes (+ bf16 buffers), and the plane
+    pack/unpack introduces no all-gather over the model axis."""
+    res = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT],
+                         capture_output=True, text=True, timeout=900,
+                         env={**__import__("os").environ,
+                              "PYTHONPATH": "src"})
+    assert res.returncode == 0, res.stderr[-3000:]
+    for marker in ("ring-parity-ok", "packed-parity-ok", "bf16-parity-ok",
+                   "ring-no-allgather-ok", "packed-no-extra-allgather-ok"):
+        assert marker in res.stdout, (marker, res.stdout,
+                                      res.stderr[-2000:])
+
+
+def test_packed_wire_bytes_per_leaf_and_shard_windows():
+    """Engine packed accounting matches the executor's padding: one window
+    count per leaf and per model shard, not ceil(sum(d)/PACK_BLOCK)."""
+    from types import SimpleNamespace
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.gossip import PACK_BLOCK
+
+    comp = make_compressor("block_top_k", frac=0.05)
+
+    def packed_mixer():
+        mix = lambda t: t  # noqa: E731 -- wire-mode tag carrier only
+        mix.wire_mode, mix.wire_frac = "packed", 0.05
+        return mix
+
+    k_b = max(round(0.05 * PACK_BLOCK), 1)
+    tree = {"b": jnp.zeros((4, 123)), "w": jnp.zeros((4, 42))}
+    eng = CommRound(compressor=comp, mixer=packed_mixer())
+    # the executor pads each leaf separately: 2 windows, not ceil(165/2048)=1
+    assert eng.wire_bytes(tree) == 4 * 2 * k_b * 8
+    # the scalar-d overload keeps gossip_wire_bytes's single-buffer model
+    assert eng.wire_bytes(165, n_agents=4) == 4 * 1 * k_b * 8
+
+    # model-sharded layout: local() runs per shard, each pads its own window
+    mesh = SimpleNamespace(shape={"data": 4, "model": 2})
+    eng2 = CommRound(compressor=comp, mixer=packed_mixer(), mesh=mesh,
+                     leaf_specs={"b": P("data", None),
+                                 "w": P("data", "model")},
+                     agent_axes=("data",))
+    assert eng2.wire_bytes(tree) == 4 * 3 * k_b * 8  # w: 2 shards, b: 1
+
+
+def test_ring_weights_n2_single_band():
+    """n=2 ring: both shifts deliver the same agent; the executor must fold
+    the whole neighbor weight into one band (regression: w_self*x + 2*w01*nb
+    double-counted the neighbor and the circulant check hid it by
+    overwriting ref[0,1])."""
+    from repro.core.gossip import _ring_weights
+    w2 = np.array([[0.5, 0.5], [0.5, 0.5]])
+    w_self, w_prev, w_next = _ring_weights(w2)
+    assert (w_self, w_prev, w_next) == (0.5, 0.5, 0.0)
+    # row sum of the executed update is w_self + w_prev + w_next == 1
+    assert w_self + w_prev + w_next == pytest.approx(1.0)
+    # the accumulate-style check is honest: asymmetric 2x2 is not a ring band
+    with pytest.raises(ValueError):
+        _ring_weights(np.array([[0.6, 0.4], [0.3, 0.7]]))
+    with pytest.raises(ValueError):
+        _ring_weights(np.array([[1.0]]))  # n=1: no ring
 
 
 def test_compress_stacked_per_agent_rows():

@@ -128,10 +128,36 @@ def test_gossip_wire_accounting():
     ring = gossip_wire_bytes("ring", n, d)
     packed = gossip_wire_bytes("packed", n, d, frac=0.05)
     assert dense == n * d * 4
-    assert ring == 2 * d * 4                         # n-independent
-    assert packed == pytest.approx(n * 0.05 * d * 8)
+    assert ring == 2 * d * 4                         # n-independent for n>2
+    # n=2 ring has one neighbor: a single shift crosses the wire
+    assert gossip_wire_bytes("ring", 2, d) == d * 4
+    # packed follows the executor's block format, ~n*frac*d*8 up to padding
+    assert packed == pytest.approx(n * 0.05 * d * 8, rel=0.01)
     # at rho=0.05, n=16: packed (n*rho*2x) beats ring (2x dense payload)
     assert packed < ring < dense
+
+
+def test_packed_wire_bytes_match_executor_payload():
+    """gossip_wire_bytes('packed') must equal the bytes of the actual
+    (values, int32 indices) payload make_packed_mixer all-gathers: k_b =
+    max(round(frac*PACK_BLOCK), 1) pairs per PACK_BLOCK-padded window per
+    agent -- not max(frac*d, 1) pairs (which under-reported for small or
+    badly padded buffers)."""
+    from repro.core.gossip import PACK_BLOCK
+
+    n = 4
+    for d, frac in ((10, 0.05), (123, 0.25), (PACK_BLOCK, 0.05),
+                    (5000, 0.1), (1_000_000, 0.05)):
+        # the executor's pack stage, verbatim: pad to windows, top-k each
+        flat = jnp.arange(1.0, d + 1.0, dtype=jnp.float32)
+        rows = jnp.pad(flat, (0, (-d) % PACK_BLOCK)).reshape(-1, PACK_BLOCK)
+        k_b = max(int(round(frac * PACK_BLOCK)), 1)
+        vals, idx = jax.lax.top_k(jnp.abs(rows), k_b)
+        payload = n * (vals.size * 4 + idx.size * 4)  # f32 vals + int32 idx
+        assert gossip_wire_bytes("packed", n, d, frac=frac) == payload
+    # a 10-element buffer still ships one full window's k_b pairs
+    assert gossip_wire_bytes("packed", n, 10, frac=0.05) == \
+        n * max(round(0.05 * PACK_BLOCK), 1) * 8
 
 
 def test_decode_window_rules():

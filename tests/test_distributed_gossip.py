@@ -59,6 +59,24 @@ SCRIPT = textwrap.dedent("""
                                    atol=1e-5)
     print("packed-ok")
 
+    # n=2 ring: both ppermute shifts deliver the same agent; the executor
+    # must apply the neighbor once (regression: w_self*x + 2*w01*neighbor)
+    mesh2 = jax.make_mesh((2,), ("data",))
+    top2 = make_topology("ring", 2, weights="metropolis")
+    tree2 = {"a": jax.random.normal(key, (2, 5, 3)),
+             "b": jax.random.normal(key, (2, 7))}
+    specs2 = {"a": P("data", None, None), "b": P("data", None)}
+    sh2 = {k: NamedSharding(mesh2, specs2[k]) for k in specs2}
+    tree2_sharded = {k: jax.device_put(tree2[k], sh2[k]) for k in tree2}
+    dense2 = make_dense_mixer(top2.w)(tree2)
+    ring2 = make_ring_mixer(top2.w, mesh2, ("data",), leaf_specs=specs2)
+    out2 = jax.jit(ring2)(tree2_sharded)
+    for k in tree2:
+        np.testing.assert_allclose(np.asarray(out2[k]),
+                                   np.asarray(dense2[k]), rtol=1e-6,
+                                   atol=1e-7)
+    print("ring2-ok")
+
     # multi-pod ring seam: agent grid ('pod','data') on a (2,2,2) mesh
     mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
     top4 = make_topology("ring", 4, weights="metropolis")
@@ -83,5 +101,5 @@ def test_distributed_gossip_equivalence():
                          env={**__import__("os").environ,
                               "PYTHONPATH": "src"})
     assert res.returncode == 0, res.stderr[-3000:]
-    for marker in ("ring-ok", "packed-ok", "multipod-ring-ok"):
+    for marker in ("ring-ok", "packed-ok", "ring2-ok", "multipod-ring-ok"):
         assert marker in res.stdout, (marker, res.stdout, res.stderr[-2000:])
