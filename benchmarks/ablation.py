@@ -24,11 +24,8 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.api import build
-from repro.core import average_params
-from repro.data import a9a_like, agent_batch_iterator, shard_to_agents
+from repro.data import a9a_like, minibatch_source, shard_to_agents
 from benchmarks import common as C
 
 RHO = 0.05
@@ -50,17 +47,16 @@ def run_ablation(steps=400, seed=0):
 
     results = {}
 
-    def track(name, states_iter):
-        """states_iter yields (t, x-bar, metrics); metrics carries the
-        uniform wire_bytes/round so MB-to-target needs no per-algorithm
+    def track(name, curve):
+        """curve rows are (t, |grad(x-bar)|, wire_bytes); wire_bytes is the
+        uniform per-round metric so MB-to-target needs no per-algorithm
         accounting here."""
         rounds_to_target = None
         final = None
         bytes_per_round = None
-        for t, p_avg, m in states_iter:
-            g = gnorm(p_avg)
+        for t, g, wire in curve:
             final = g
-            bytes_per_round = float(m["wire_bytes"])
+            bytes_per_round = wire
             if rounds_to_target is None and g <= TARGET:
                 rounds_to_target = t
         mb = (None if rounds_to_target is None else
@@ -80,20 +76,18 @@ def run_ablation(steps=400, seed=0):
         "dsgd": base.replace(algo="dsgd", tau=None),
     }
 
-    def algo_iter(spec):
-        algo = build(spec, loss_fn, topology=top)
-        state = algo.init(params0)
-        step = jax.jit(algo.step)
-        it = agent_batch_iterator(xs, ys, batch=4, seed=seed)
-        key = jax.random.PRNGKey(seed)
-        for t in range(steps):
-            key, k = jax.random.split(key)
-            state, m = step(state, next(it), k)
-            if t % 10 == 0 or t == steps - 1:
-                yield t, average_params(state.x), m
+    source = minibatch_source(xs, ys, batch=4)
+
+    def cb(p_avg, m):
+        return (gnorm(p_avg), m["wire_bytes"])
 
     for name, spec in specs.items():
-        track(name, algo_iter(spec))
+        # chunked runtime: one scan-fused dispatch per 10-round sample
+        # window, host sync only at the sample points (benchmarks.common)
+        _, curve = C.run_algorithm(spec, loss_fn, params0, source, steps,
+                                   topology=top, eval_every=10, eval_cb=cb,
+                                   seed=seed)
+        track(name, curve)
     return results
 
 

@@ -1,0 +1,176 @@
+"""Dispatch-overhead benchmark: per-step Python loop vs scan-fused chunks.
+
+The comm-round *interior* is covered by bench_comm_round.py; this measures
+what the chunked runtime (repro.launch.runtime) removes *between* rounds --
+one jit dispatch, one host sync and one state round-trip per round.  On the
+dispatch-bound smoke task (the paper's Section-5.1 logreg protocol, where a
+round's compute is tens of microseconds) the Python-loop overhead dominates,
+so steps/s scales with the chunk size until the scan body does.
+
+Rows: ``train_loop/<task>/<mode>,us_per_step,steps_per_s=...``; the table
+lands in EXPERIMENTS.md (SPerf-6) and artifacts/bench/train_loop.json.
+Each chunked mode also asserts its runner compiled exactly ONE executable
+(the chunk offset is a traced scalar, so every chunk reuses the program).
+
+    PYTHONPATH=src python benchmarks/bench_train_loop.py            # full
+    PYTHONPATH=src python benchmarks/bench_train_loop.py --smoke    # CI
+    PYTHONPATH=src python benchmarks/bench_train_loop.py --task lm
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import ExperimentSpec, build
+from repro.data import (a9a_like, agent_batch_iterator, minibatch_source,
+                        shard_to_agents)
+from repro.launch.runtime import make_runner
+
+CHUNKS = (1, 8, 32)
+
+# the paper's Section-5 protocol (kept standalone so this file runs as a
+# plain script, like bench_comm_round.py: `python benchmarks/bench_...py`)
+N_AGENTS = 10
+PAPER_SPEC = ExperimentSpec(n_agents=N_AGENTS, topology="erdos_renyi",
+                            topology_weights="best_constant", topology_p=0.8,
+                            topology_seed=1)
+
+
+def _logreg_loss(params, batch):
+    f, l = batch
+    f = jnp.atleast_2d(f)
+    l = jnp.atleast_1d(l)
+    logits = f @ params["w"] + params["b"]
+    nll = jnp.mean(jnp.log1p(jnp.exp(-(2 * l - 1) * logits)))
+    return nll + 0.2 * jnp.sum(params["w"] ** 2 / (1 + params["w"] ** 2))
+
+
+def _logreg_problem():
+    x, y = a9a_like(12000, 123, seed=0)
+    xs, ys = shard_to_agents(x, y, N_AGENTS)
+    spec = PAPER_SPEC.replace(algo="porter-gc", compressor="top_k",
+                              frac=0.05, eta=0.05, tau=1.0)
+    params0 = {"w": jnp.zeros(123), "b": jnp.zeros(())}
+    # legacy batches: the pre-runtime benchmarks drew from a host-side
+    # numpy iterator and shipped every batch through the dispatch
+    it = agent_batch_iterator(xs, ys, batch=4, seed=0)
+    return (spec, _logreg_loss, params0, minibatch_source(xs, ys, batch=4),
+            lambda kb: next(it))
+
+
+def _lm_problem():
+    from repro.configs import get_smoke
+    from repro.data import batch_source, token_batch
+    from repro.models import build_model
+    cfg = get_smoke("tinyllama-1.1b")
+    import dataclasses
+    cfg = dataclasses.replace(cfg, remat=False)
+    bundle = build_model(cfg)
+    spec = ExperimentSpec(algo="porter-gc", n_agents=4, topology="ring",
+                          compressor="top_k", frac=0.05, eta=3e-2, tau=1.0)
+    params0, _ = bundle.init(jax.random.PRNGKey(0))
+    # legacy batches: the pre-runtime train driver synthesized tokens with
+    # an eager device op per round
+    legacy = lambda kb: {"tokens": token_batch(kb, 4, 2, 64, cfg.vocab)}
+    return spec, bundle.loss, params0, batch_source(cfg, 4, 2, 64), legacy
+
+
+def _per_step(algo, legacy_batch, params0, steps):
+    """The historical loop: per-round batch synthesis outside the compiled
+    step, one dispatch + one host sync per round."""
+    state = algo.init(params0)
+    step = jax.jit(algo.step)
+    key = jax.random.PRNGKey(0)
+
+    def run():
+        nonlocal state, key
+        for t in range(steps):
+            key, kb, ks = jax.random.split(key, 3)
+            state, m = step(state, legacy_batch(kb), ks)
+            float(m["loss"])  # the per-round host sync being measured
+        return state
+
+    run()  # warmup (compile)
+    t0 = time.perf_counter()
+    jax.block_until_ready(run())
+    return (time.perf_counter() - t0) / steps
+
+
+def _chunked(algo, source, params0, steps, chunk):
+    runner = make_runner(algo, source, chunk)
+    state = algo.init(params0)
+    key = jax.random.PRNGKey(0)
+
+    def run(state, key, start):
+        for t in range(start, start + steps, chunk):
+            state, key, metrics = runner(state, key, t)
+            float(metrics["loss"][-1])  # one sync per chunk
+        return state, key
+
+    state, key = run(state, key, 0)  # warmup (compile)
+    t0 = time.perf_counter()
+    state, key = run(state, key, steps)
+    jax.block_until_ready(state)
+    dt = (time.perf_counter() - t0) / steps
+    n_exec = runner.cache_size()
+    assert n_exec in (None, 1), \
+        f"chunk={chunk} compiled {n_exec} executables (expected 1)"
+    return dt
+
+
+def bench(task: str, steps: int):
+    spec, loss_fn, params0, source, legacy = (
+        _logreg_problem() if task == "logreg" else _lm_problem())
+    algo = build(spec, loss_fn)
+    rows = []
+    us = _per_step(algo, legacy, params0, steps) * 1e6
+    rows.append(("per_step", us, 1e6 / us))
+    for chunk in CHUNKS:
+        if chunk > steps:
+            continue
+        us = _chunked(algo, source, params0, steps, chunk) * 1e6
+        rows.append((f"chunk{chunk}", us, 1e6 / us))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--task", default="logreg", choices=["logreg", "lm"])
+    ap.add_argument("--steps", type=int, default=None,
+                    help="measured rounds (default 256, or 32 with --smoke)")
+    ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    args = ap.parse_args()
+    steps = args.steps or (32 if args.smoke else 256)
+    # every mode must run the same horizon: round steps up to a common
+    # multiple of the chunk sizes
+    lcm = math.lcm(*CHUNKS)
+    steps = max(steps + (-steps) % lcm, lcm)
+
+    rows = bench(args.task, steps)
+    print("name,us_per_step,derived")
+    out = []
+    base = rows[0][2]
+    for mode, us, sps in rows:
+        print(f"train_loop/{args.task}/{mode},{us:.1f},"
+              f"steps_per_s={sps:.1f};speedup_vs_per_step={sps/base:.2f}x")
+        out.append({"task": args.task, "mode": mode, "us_per_step": us,
+                    "steps_per_s": sps, "speedup": sps / base})
+    art = Path("artifacts/bench")
+    art.mkdir(parents=True, exist_ok=True)
+    (art / "train_loop.json").write_text(json.dumps(out, indent=2))
+    # acceptance: scan fusion must beat the dispatch-bound per-step loop
+    chunk8 = next(r for r in out if r["mode"] == "chunk8")
+    assert chunk8["speedup"] > 1.0, \
+        f"chunk=8 slower than per-step loop ({chunk8['speedup']:.2f}x)"
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -17,6 +17,8 @@ import numpy as np
 
 from repro.api import ExperimentSpec, build, resolve_topology
 from repro.core import average_params, calibrate_sigma
+from repro.launch.runtime import make_runner
+from repro.models import mlp_init, mlp_loss as _shared_mlp_loss
 
 N_AGENTS = 10
 
@@ -59,26 +61,13 @@ def logreg_loss(lam=0.2):
 
 
 def mlp_loss():
-    """Paper 5.2: 784 -> 64 sigmoid -> 10 softmax cross-entropy."""
-    def loss_fn(params, batch):
-        f, l = batch
-        f = jnp.atleast_2d(f)
-        l = jnp.atleast_1d(l)
-        h = jax.nn.sigmoid(f @ params["w1"] + params["c1"])
-        logits = h @ params["w2"] + params["c2"]
-        lse = jax.scipy.special.logsumexp(logits, axis=-1)
-        gold = jnp.take_along_axis(logits, l[:, None], axis=-1)[:, 0]
-        return jnp.mean(lse - gold)
-    return loss_fn
+    """Paper 5.2 MLP loss (shared definition: repro.models.paper)."""
+    return _shared_mlp_loss()
 
 
 def mlp_params0(key=None):
-    key = key or jax.random.PRNGKey(0)
-    k1, k2 = jax.random.split(key)
-    return {"w1": 0.05 * jax.random.normal(k1, (784, 64)),
-            "c1": jnp.zeros(64),
-            "w2": 0.05 * jax.random.normal(k2, (64, 10)),
-            "c2": jnp.zeros(10)}
+    """Paper 5.2 MLP init (shared definition: repro.models.paper)."""
+    return mlp_init(key)
 
 
 def accuracy_fn(kind):
@@ -94,13 +83,23 @@ def accuracy_fn(kind):
     return acc
 
 
-def run_algorithm(spec, loss_fn, params0, it, steps, *, topology=None,
+def run_algorithm(spec, loss_fn, params0, source, steps, *, topology=None,
                   eval_every=25, eval_cb=None, eval_point=None, seed=0):
-    """Build ``spec`` through the facade and run it for ``steps`` rounds.
+    """Build ``spec`` through the facade and run it for ``steps`` rounds
+    through the chunked runtime (repro.launch.runtime).
 
-    eval_cb(point, loss) -> tuple is sampled every ``eval_every`` rounds;
-    ``eval_point`` maps the state to the evaluation iterate (defaults to the
-    average replica for agent-stacked states, the server model otherwise).
+    source: a BatchSource ``(key, step) -> agent-stacked batch`` (e.g.
+    ``repro.data.minibatch_source``); batches are synthesized inside the
+    compiled chunk, and the run is cut into scan-fused chunks whose
+    boundaries land exactly on the historical sample grid
+    {0, eval_every, 2*eval_every, ..., steps-1}, so metrics stay on device
+    and the host syncs only at curve sample points.
+
+    eval_cb(point, metrics) -> tuple is sampled at each grid point, where
+    ``metrics`` is the host dict of that round's metrics (loss,
+    wire_bytes, ...); ``eval_point`` maps the state to the evaluation
+    iterate (defaults to the average replica for agent-stacked states, the
+    server model otherwise).
     """
     algo = build(spec, loss_fn, topology=topology)
     if eval_point is None:
@@ -108,40 +107,51 @@ def run_algorithm(spec, loss_fn, params0, it, steps, *, topology=None,
                       if algo.info.decentralized else (lambda s: s.x))
     state = algo.init(params0, n_agents=(topology.n if topology is not None
                                          else None))
-    step = jax.jit(algo.step)
     key = jax.random.PRNGKey(seed)
+    if eval_cb:
+        # chunk ends one past each sample step: the boundary state/metrics
+        # are exactly what the per-step loop sampled at t
+        ends = sorted({t + 1 for t in range(0, steps, eval_every)} | {steps})
+    else:
+        ends = [steps]
     curve = []
-    for t in range(steps):
-        key, k = jax.random.split(key)
-        state, m = step(state, next(it), k)
-        if eval_cb and (t % eval_every == 0 or t == steps - 1):
-            curve.append((t,) + eval_cb(eval_point(state), float(m["loss"])))
+    runners, t = {}, 0
+    for end in ends:
+        size = end - t
+        runner = runners.get(size)
+        if runner is None:
+            runner = runners[size] = make_runner(algo, source, size)
+        state, key, metrics = runner(state, key, t)
+        t = end
+        if eval_cb:
+            m = {k: float(v[-1]) for k, v in metrics.items()}
+            curve.append((t - 1,) + eval_cb(eval_point(state), m))
     return state, curve
 
 
-def run_porter(loss_fn, params0, it, top, steps, eta, variant="dp",
+def run_porter(loss_fn, params0, source, top, steps, eta, variant="dp",
                sigma_p=0.0, frac=0.05, comp_name="random_k", tau=1.0,
                eval_every=25, eval_cb=None, seed=0):
     spec = PAPER_SPEC.replace(algo=f"porter-{variant}" if variant != "beer"
                               else "beer", n_agents=top.n, eta=eta,
                               sigma_p=sigma_p, frac=frac,
                               compressor=comp_name, tau=tau)
-    return run_algorithm(spec, loss_fn, params0, it, steps, topology=top,
+    return run_algorithm(spec, loss_fn, params0, source, steps, topology=top,
                          eval_every=eval_every, eval_cb=eval_cb, seed=seed)
 
 
-def run_soteria(loss_fn, params0, it, steps, eta, sigma_p=0.0, frac=0.05,
+def run_soteria(loss_fn, params0, source, steps, eta, sigma_p=0.0, frac=0.05,
                 tau=1.0, eval_every=25, eval_cb=None, seed=0):
     spec = PAPER_SPEC.replace(algo="soteriafl", eta=eta, sigma_p=sigma_p,
                               frac=frac, compressor="random_k", tau=tau,
                               alpha_shift=0.5)
-    return run_algorithm(spec, loss_fn, params0, it, steps,
+    return run_algorithm(spec, loss_fn, params0, source, steps,
                          eval_every=eval_every, eval_cb=eval_cb, seed=seed)
 
 
-def run_dsgd_dp(loss_fn, params0, it, top, steps, eta, sigma_p=0.0, tau=1.0,
+def run_dsgd_dp(loss_fn, params0, source, top, steps, eta, sigma_p=0.0, tau=1.0,
                 eval_every=25, eval_cb=None, seed=0):
     spec = PAPER_SPEC.replace(algo="dsgd", n_agents=top.n, eta=eta,
                               sigma_p=sigma_p, tau=tau, dp=True)
-    return run_algorithm(spec, loss_fn, params0, it, steps, topology=top,
+    return run_algorithm(spec, loss_fn, params0, source, steps, topology=top,
                          eval_every=eval_every, eval_cb=eval_cb, seed=seed)

@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.core import (calibrate_sigma, ldp_epsilon, phi_m, smooth_clip,
                         piecewise_clip)
-from repro.data import a9a_like, agent_batch_iterator, mnist_like, \
+from repro.data import a9a_like, minibatch_source, mnist_like, \
     shard_to_agents
 from benchmarks import common as C
 
@@ -97,8 +97,8 @@ def bench_fig2_logreg(steps=600):
                 loss_fn, params0, it, top, steps, eta=eta, sigma_p=sigma,
                 eval_cb=cb)),
         ]:
-            it = agent_batch_iterator(xs, ys, batch=1, seed=0)
-            cb = lambda p, l: (l, acc(p, xe, ye))
+            it = minibatch_source(xs, ys, batch=1)
+            cb = lambda p, m: (m["loss"], acc(p, xe, ye))
             t0 = time.perf_counter()
             _, curve = runner(it, cb)
             us = (time.perf_counter() - t0) / steps * 1e6
@@ -135,8 +135,8 @@ def bench_fig3_mnist(steps=300):
                 loss_fn, params0, it, steps, eta=eta, sigma_p=sigma,
                 eval_cb=cb)),
         ]:
-            it = agent_batch_iterator(xs, ys, batch=1, seed=0)
-            cb = lambda p, l: (l, acc(p, xe, ye))
+            it = minibatch_source(xs, ys, batch=1)
+            cb = lambda p, m: (m["loss"], acc(p, xe, ye))
             t0 = time.perf_counter()
             _, curve = runner(it, cb)
             us = (time.perf_counter() - t0) / steps * 1e6
@@ -177,13 +177,13 @@ def bench_table1():
     params0 = {"w": jnp.zeros(123), "b": jnp.zeros(())}
     steps = 400
     sigma = calibrate_sigma(1.0, steps, xs.shape[1], eps, delta)
-    it = agent_batch_iterator(xs, ys, batch=1, seed=0)
+    it = minibatch_source(xs, ys, batch=1)
     hit = {"round": None}
 
-    def cb(p, l):
-        if hit["round"] is None and l <= 0.70:
+    def cb(p, m):
+        if hit["round"] is None and m["loss"] <= 0.70:
             hit["round"] = True
-        return (l,)
+        return (m["loss"],)
 
     t0 = time.perf_counter()
     _, curve = C.run_porter(loss_fn, params0, it, top, steps, eta=0.04,
@@ -230,14 +230,14 @@ def bench_scaling(steps=60):
     out = {"rho": {}, "alpha": {}}
     top = C.paper_topology()
     for rho in (1.0, 0.25, 0.05):
-        it = agent_batch_iterator(xs, ys, batch=2, seed=0)
+        it = minibatch_source(xs, ys, batch=2)
         st, _ = C.run_porter(loss_fn, params0, it, top, steps, eta=0.05,
                              variant="gc", frac=rho, comp_name="top_k")
         out["rho"][rho] = {"consensus": float(consensus_error(st.x)),
                            "grad": grad_norm(average_params(st.x))}
     for kind in ("complete", "erdos_renyi", "ring"):
         t = C.topology(kind)
-        it = agent_batch_iterator(xs, ys, batch=2, seed=0)
+        it = minibatch_source(xs, ys, batch=2)
         st, _ = C.run_porter(loss_fn, params0, it, t, steps, eta=0.05,
                              variant="gc", frac=0.05, comp_name="top_k")
         out["alpha"][f"{kind}(a={t.alpha:.2f})"] = {

@@ -8,32 +8,20 @@ On the badly-scaled MLP this typically reaches a given loss in fewer rounds.
 """
 
 import jax
-import jax.numpy as jnp
 
 from repro.api import ExperimentSpec, build
-from repro.data import agent_batch_iterator, mnist_like, shard_to_agents
+from repro.data import minibatch_source, mnist_like, shard_to_agents
+from repro.launch.runtime import run_chunked
+from repro.models import mlp_init, mlp_loss
 
 N, STEPS = 8, 200
 
 x, y = mnist_like(8000, seed=0)
 xs, ys = shard_to_agents(x, y, N)
 
-
-def loss_fn(params, batch):
-    f, l = batch
-    f, l = jnp.atleast_2d(f), jnp.atleast_1d(l)
-    h = jax.nn.sigmoid(f @ params["w1"] + params["c1"])
-    logits = h @ params["w2"] + params["c2"]
-    lse = jax.scipy.special.logsumexp(logits, axis=-1)
-    gold = jnp.take_along_axis(logits, l[:, None], axis=-1)[:, 0]
-    return jnp.mean(lse - gold)
-
-
-k1, k2 = jax.random.split(jax.random.PRNGKey(0))
-params0 = {"w1": 0.05 * jax.random.normal(k1, (784, 64)),
-           "c1": jnp.zeros(64),
-           "w2": 0.05 * jax.random.normal(k2, (64, 10)),
-           "c2": jnp.zeros(10)}
+loss_fn = mlp_loss()            # the shared Section-5.2 MLP definition
+params0 = mlp_init(jax.random.PRNGKey(0))
+source = minibatch_source(xs, ys, batch=8)
 
 base = ExperimentSpec(n_agents=N, topology="exponential",
                       compressor="top_k", frac=0.05, tau=5.0)
@@ -44,16 +32,15 @@ for name, spec in {
     "porter_adam": base.replace(algo="porter-adam", eta=0.02),
 }.items():
     algo = build(spec, loss_fn)
-    state = algo.init(params0)
-    step = jax.jit(algo.step)
-    it = agent_batch_iterator(xs, ys, batch=8, seed=0)
-    key = jax.random.PRNGKey(0)
     curve = []
-    for t in range(STEPS):
-        key, k = jax.random.split(key)
-        state, m = step(state, next(it), k)
-        if t % 20 == 0 or t == STEPS - 1:
-            curve.append((t, float(m["loss"])))
+
+    def sample(t0, t1, st, m):  # 20-round chunks: sync once per sample
+        curve.append((t0, float(m["loss"][0])))
+        if t1 == STEPS:
+            curve.append((t1 - 1, float(m["loss"][-1])))
+
+    run_chunked(algo, source, algo.init(params0), jax.random.PRNGKey(0),
+                STEPS, chunk=20, on_chunk=sample)
     runs[name] = curve
 
 print(f"{'round':>8s} {'porter_gc':>12s} {'porter_adam':>12s}")

@@ -10,7 +10,8 @@ import jax.numpy as jnp
 
 from repro.api import ExperimentSpec, build
 from repro.core import average_params, calibrate_sigma, phi_m
-from repro.data import a9a_like, agent_batch_iterator, shard_to_agents
+from repro.data import a9a_like, minibatch_source, shard_to_agents
+from repro.launch.runtime import make_runner
 
 N, D, STEPS = 10, 123, 250
 
@@ -38,13 +39,10 @@ def run_sweep(variant, rho, sigma_p):
         sigma_p=sigma_p)
     algo = build(spec, loss_fn)
     state = algo.init({"w": jnp.zeros(D), "b": jnp.zeros(())})
-    step = jax.jit(algo.step)
-    it = agent_batch_iterator(xs, ys, batch=1 if variant == "dp" else 4,
-                              seed=0)
-    key = jax.random.PRNGKey(0)
-    for _ in range(STEPS):
-        key, k = jax.random.split(key)
-        state, _ = step(state, next(it), k)
+    source = minibatch_source(xs, ys, batch=1 if variant == "dp" else 4)
+    # the whole sweep point is ONE scan-fused dispatch (chunk = STEPS)
+    runner = make_runner(algo, source, STEPS)
+    state, _, _ = runner(state, jax.random.PRNGKey(0), 0)
     g = jax.grad(loss_fn)(average_params(state.x),
                           (xs.reshape(-1, D), ys.reshape(-1)))
     gn = float(jnp.sqrt(sum(jnp.sum(v ** 2)

@@ -20,11 +20,14 @@ import numpy as np
 from repro.api import ExperimentSpec, build
 from repro.configs import get_config, get_smoke
 from repro.core import calibrate_sigma, ldp_epsilon
-from repro.data import token_batch
+from repro.data import batch_source
+from repro.launch.runtime import run_chunked
 from repro.models import build_model
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--steps", type=int, default=60)
+ap.add_argument("--chunk", type=int, default=20,
+                help="comm rounds scan-fused per dispatch")
 ap.add_argument("--agents", type=int, default=4)
 ap.add_argument("--batch", type=int, default=2)
 ap.add_argument("--seq", type=int, default=64)
@@ -59,23 +62,28 @@ spec = ExperimentSpec(algo="porter-dp", n_agents=args.agents,
                       eta=5e-2, tau=tau, sigma_p=sigma_p)
 algo = build(spec, bundle.loss)
 state = algo.init(params)
-step = jax.jit(algo.step)
+source = batch_source(cfg, args.agents, args.batch, args.seq)
 
-key = jax.random.PRNGKey(1)
 t0 = time.time()
-first = last = None
-for t in range(args.steps):
-    key, kb, ks = jax.random.split(key, 3)
-    batch = {"tokens": token_batch(kb, args.agents, args.batch, args.seq,
-                                   cfg.vocab)}
-    state, m = step(state, batch, ks)
-    loss = float(m["loss"])
-    first = loss if first is None else first
-    last = loss
-    if t % 20 == 0 or t == args.steps - 1:
-        print(f"step {t:4d}  loss {loss:.4f}  "
-              f"consensus {float(m['consensus_x']):.2e}  "
-              f"({time.time()-t0:.1f}s)")
+span = {"first": None, "last": None}
+
+
+def report(ts, te, st, m):
+    # one host sync per chunk; batches were synthesized on device
+    loss = jax.device_get(m["loss"])
+    if span["first"] is None:
+        span["first"] = float(loss[0])
+    span["last"] = float(loss[-1])
+    for i, t in enumerate(range(ts, te)):
+        if t % 20 == 0 or t == args.steps - 1:
+            print(f"step {t:4d}  loss {float(loss[i]):.4f}  "
+                  f"consensus {float(m['consensus_x'][i]):.2e}  "
+                  f"({time.time()-t0:.1f}s)")
+
+
+run_chunked(algo, source, state, jax.random.PRNGKey(1), args.steps,
+            chunk=args.chunk, on_chunk=report)
+first, last = span["first"], span["last"]
 
 print(f"\nloss {first:.3f} -> {last:.3f}; every gradient an agent ever "
       f"shared was clipped to tau={tau} and perturbed: the run is "

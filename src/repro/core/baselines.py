@@ -173,7 +173,10 @@ class DpSgdState(NamedTuple):
 
 
 def dpsgd_init(params) -> DpSgdState:
-    return DpSgdState(x=params, step=jnp.zeros((), jnp.int32))
+    # copy: the state must own its buffers -- the chunked runtime donates
+    # them, which would otherwise delete the caller's params mid-harness
+    return DpSgdState(x=_tree(jnp.array, params),
+                      step=jnp.zeros((), jnp.int32))
 
 
 def dpsgd_step(eta: float, loss_fn: LossFn, state: DpSgdState, batch, key,
@@ -205,8 +208,9 @@ def soteria_init(params, n_agents: int) -> SoteriaState:
     zeros_stacked = _tree(
         lambda p: jnp.zeros((n_agents,) + p.shape, jnp.float32), params)
     zeros = _tree(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
-    return SoteriaState(x=params, h=zeros_stacked, h_bar=zeros,
-                        step=jnp.zeros((), jnp.int32))
+    # copy x: the state must own its buffers (donation-safe, see dpsgd_init)
+    return SoteriaState(x=_tree(jnp.array, params), h=zeros_stacked,
+                        h_bar=zeros, step=jnp.zeros((), jnp.int32))
 
 
 def soteria_step(eta: float, alpha_shift: float, loss_fn: LossFn,

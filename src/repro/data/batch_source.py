@@ -1,0 +1,83 @@
+"""On-device batch sources: pure ``(key, step) -> batch`` synthesis.
+
+A :class:`~repro.launch.runtime.BatchSource` is the chunked runtime's data
+contract -- a pure, jit-traceable function of a PRNG key and the absolute
+round index.  Because the source runs *inside* the compiled program, the
+scan-fused chunk runner synthesizes every round's batch on device with
+zero host round trips (the old per-step loops built batches host-side and
+shipped them through each dispatch).
+
+* :func:`batch_source` -- family-aware synthetic streams for the model-zoo
+  configs (tokens / vision-language / encoder-decoder); this is the logic
+  that used to live in ``repro.launch.train.make_train_batch``.
+* :func:`minibatch_source` -- iid uniform per-agent minibatches from an
+  agent-sharded dataset held on device (paper Section 5 line 4: "Draw the
+  local mini-batch of size b uniformly at random"), the on-device
+  replacement for :func:`repro.data.agent_batch_iterator`.
+
+Both ignore ``step`` -- their streams are iid in the key -- but take it so
+deterministic sources (epoch schedules, curricula) fit the same protocol.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .synthetic import token_batch
+
+__all__ = ["batch_source", "minibatch_source"]
+
+
+def batch_source(cfg, n_agents: int, batch: int, seq: int):
+    """Family-aware synthetic BatchSource for a model-zoo config.
+
+    Returns agent-stacked batches with the same layout the train driver
+    always fed ``bundle.loss``: ``tokens (n_agents, b, s)`` int32, plus
+    ``patches`` / ``frames`` float32 for the vlm / encdec families.
+    """
+    if cfg.family == "vlm":
+        def source(key, step):
+            del step
+            k1, k2 = jax.random.split(key)
+            return {"tokens": token_batch(k1, n_agents, batch,
+                                          seq - cfg.n_prefix, cfg.vocab),
+                    "patches": jax.random.normal(
+                        k2, (n_agents, batch, cfg.n_prefix,
+                             cfg.frontend_dim))}
+    elif cfg.family == "encdec":
+        def source(key, step):
+            del step
+            k1, k2 = jax.random.split(key)
+            return {"frames": jax.random.normal(
+                        k1, (n_agents, batch, seq, cfg.frontend_dim)),
+                    "tokens": token_batch(k2, n_agents, batch, seq,
+                                          cfg.vocab)}
+    else:
+        def source(key, step):
+            del step
+            return {"tokens": token_batch(key, n_agents, batch, seq,
+                                          cfg.vocab)}
+    return source
+
+
+def minibatch_source(xs, ys, batch: int):
+    """Uniform iid per-agent minibatches from an agent-sharded dataset.
+
+    xs / ys: ``(n_agents, m, ...)`` arrays (e.g. from
+    :func:`repro.data.shard_to_agents`); they are moved to device once at
+    construction.  Each call draws ``batch`` indices uniformly per agent
+    and gathers ``(n_agents, batch, ...)`` feature/label stacks entirely
+    on device.
+    """
+    xs = jnp.asarray(xs)
+    ys = jnp.asarray(ys)
+    n_agents, m = xs.shape[0], xs.shape[1]
+
+    def source(key, step):
+        del step
+        idx = jax.random.randint(key, (n_agents, batch), 0, m)
+        take = jax.vmap(lambda data, i: jnp.take(data, i, axis=0))
+        return take(xs, idx), take(ys, idx)
+
+    return source

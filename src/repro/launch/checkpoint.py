@@ -10,13 +10,20 @@ key-paths so restore is structure-checked; device arrays are pulled to host
 as numpy.  Per-agent sharded save on real pods would stream shard-wise; the
 manifest format already records per-leaf shapes/dtypes to support that.
 
-    save_state(dir, state, step=10)
+    save_state(dir, state, step=10, extra={"rounds_executed": 10})
     state = restore_state(dir, like=state)           # latest
     state = restore_state(dir, like=state, step=10)
+    manifest = read_manifest(dir)                    # latest manifest dict
 
 ``like`` supplies both the structure and the NamedTuple class to
 reconstruct, so the same two functions round-trip every algorithm the
 registry knows about (tests/test_checkpoint.py).
+
+``extra`` is free-form JSON metadata recorded in the manifest; the train
+driver uses it for cumulative privacy accounting across resumes
+(``rounds_executed``, ``sigma_p``, ...): the accountant must advance by
+rounds actually *run*, not by the ``--steps`` target, and sigma must stay
+at the value the already-spent rounds were calibrated with.
 """
 
 from __future__ import annotations
@@ -28,7 +35,7 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-__all__ = ["save_state", "restore_state", "latest_step"]
+__all__ = ["save_state", "restore_state", "latest_step", "read_manifest"]
 
 
 def _flatten(tree):
@@ -70,12 +77,14 @@ def _state_step(state) -> int:
     raise AttributeError(f"{type(state).__name__} carries no step counter")
 
 
-def save_state(ckpt_dir: str, state: Any, step: Optional[int] = None) -> str:
+def save_state(ckpt_dir: str, state: Any, step: Optional[int] = None,
+               extra: Optional[dict] = None) -> str:
     step = _state_step(state) if step is None else step
     d = Path(ckpt_dir) / f"step_{step:08d}"
     d.mkdir(parents=True, exist_ok=True)
     manifest = {"step": step, "state_cls": type(state).__name__,
-                "fields": list(_state_fields(state)), "buffers": {}}
+                "fields": list(_state_fields(state)),
+                "extra": dict(extra) if extra else {}, "buffers": {}}
     for name in _state_fields(state):
         flat = _flatten(getattr(state, name))
         np.savez(d / f"{name}.npz", **flat)
@@ -93,6 +102,15 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
         return None
     steps = sorted(int(p.name.split("_")[1]) for p in d.glob("step_*"))
     return steps[-1] if steps else None
+
+
+def read_manifest(ckpt_dir: str, step: Optional[int] = None) -> dict:
+    """The manifest dict of the checkpoint at ``step`` (default latest)."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    return json.loads((d / "manifest.json").read_text())
 
 
 def _restore_field(d: Path, name: str, ref):

@@ -72,6 +72,11 @@ PERF_LADDERS = [
     ("arctic-480b", "train_4k", False,
      dict(local_compress=True, gossip="ring", comm_backend="pallas"),
      "lc_ring_pallas"),
+    # SPerf-6: the scan-fused chunk runner -- 8 comm rounds in one
+    # executable (donated state, on-device batch synthesis) vs the
+    # per-round lc_ring rung above
+    ("rwkv6-7b", "train_4k", False,
+     dict(local_compress=True, gossip="ring", chunk=8), "lc_ring_chunk8"),
 ]
 
 

@@ -8,9 +8,20 @@ devices exist -- the CPU container trains reduced configs; on a TPU pod the
 same driver shards over the production mesh (the step builder is shared
 with the dry-run).
 
+Training runs through the chunked runtime (``repro.launch.runtime``):
+``--chunk N`` scan-fuses N comm rounds into one compiled dispatch with
+donated state and on-device batch synthesis (``repro.data.batch_source``),
+so the host syncs once per chunk instead of once per round.  Logging,
+checkpointing and divergence gating happen at chunk boundaries; the
+trajectory is chunking-invariant (same key stream per round), so ``--chunk
+8`` reproduces ``--chunk 1``.  Checkpoints record cumulative executed
+rounds and the calibrated sigma in their manifest, so a ``--resume`` run
+advances the privacy accountant only by rounds actually spent and never
+re-calibrates noise mid-stream.
+
 Examples (CPU, ~100M-scale and smoke-scale):
     PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
-        --smoke --steps 50 --batch 8 --seq 128
+        --smoke --steps 50 --batch 8 --seq 128 --chunk 8
     PYTHONPATH=src python -m repro.launch.train --smoke --algo choco
     PYTHONPATH=src python -m repro.launch.train --arch rwkv6-7b --smoke \
         --algo porter-dp --epsilon 0.1 --steps 30
@@ -25,30 +36,74 @@ import time
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.api import (VARIANT_TO_ALGO, ExperimentSpec, algorithm_info,
                        build, list_algorithms)
 from repro.configs import get_config, get_smoke
-from repro.core import calibrate_sigma, ldp_epsilon
-from repro.data import token_batch
+from repro.core import MomentsAccountant, calibrate_sigma, ldp_epsilon
+from repro.data import batch_source
+from repro.launch.runtime import run_chunked
 from repro.models import build_model
 
 
-def make_train_batch(cfg, key, n_agents, b, s):
-    if cfg.family == "vlm":
-        k1, k2 = jax.random.split(key)
-        return {"tokens": token_batch(k1, n_agents, b, s - cfg.n_prefix,
-                                      cfg.vocab),
-                "patches": jax.random.normal(
-                    k2, (n_agents, b, cfg.n_prefix, cfg.frontend_dim))}
-    if cfg.family == "encdec":
-        k1, k2 = jax.random.split(key)
-        return {"frames": jax.random.normal(
-                    k1, (n_agents, b, s, cfg.frontend_dim)),
-                "tokens": token_batch(k2, n_agents, b, s, cfg.vocab)}
-    return {"tokens": token_batch(key, n_agents, b, s, cfg.vocab)}
+def resolve_privacy(info, args, start: int, manifest_extra: dict):
+    """(sigma_p, accountant, rounds_prev) honoring rounds already spent.
+
+    Fresh DP run: Theorem-1 calibration of sigma for the ``--steps``
+    horizon.  Resume: sigma comes from the checkpoint manifest (the rounds
+    already executed were perturbed with *that* sigma -- re-calibrating as
+    if no rounds were spent would silently mis-state the guarantee), and
+    the moments accountant is advanced by the manifest's cumulative
+    ``rounds_executed`` before a single new round runs.
+    """
+    rounds_prev = int(manifest_extra.get("rounds_executed", start))
+    if not info.dp:
+        return 0.0, None, rounds_prev
+    sigma_saved = manifest_extra.get("sigma_p")
+    if start > 0 and sigma_saved:
+        # the accountant describes the mechanism that actually ran: the
+        # manifest's tau / local_samples govern it, and changing them on
+        # resume would mix rounds clipped/noised under different regimes
+        # -- refuse rather than silently mis-state the guarantee
+        for knob, arg_val in (("tau", args.tau),
+                              ("local_samples", args.local_samples)):
+            saved = manifest_extra.get(knob)
+            if saved is not None and saved != arg_val:
+                raise ValueError(
+                    f"--resume with --{knob.replace('_', '-')}={arg_val} "
+                    f"but the checkpoint's {rounds_prev} rounds ran with "
+                    f"{knob}={saved}; resume with the recorded value (the "
+                    "noise was calibrated to it)")
+        sigma_p = float(sigma_saved)
+        acct = MomentsAccountant(q=1.0 / args.local_samples,
+                                 noise_multiplier=sigma_p / args.tau)
+        acct.step(rounds_prev)
+        print(f"[privacy] resumed: sigma_p={sigma_p:.4g} from the manifest; "
+              f"{rounds_prev} rounds already spent, accountant eps so far="
+              f"{acct.epsilon(args.delta):.4g}")
+    else:
+        if start > 0:
+            # a DP checkpoint without sigma_p metadata predates the
+            # accounting manifest: the spent rounds' noise scale is
+            # unknown, so any eps we print would be fiction -- refuse
+            # instead of silently re-calibrating over them
+            raise ValueError(
+                f"--resume of a DP run, but the checkpoint manifest "
+                f"records no sigma_p for the {rounds_prev} rounds already "
+                "spent (pre-runtime checkpoint?); restart fresh or re-save "
+                "the checkpoint with privacy metadata")
+        sigma_p = calibrate_sigma(args.tau, args.steps, args.local_samples,
+                                  args.epsilon, args.delta)
+        acct = MomentsAccountant(q=1.0 / args.local_samples,
+                                 noise_multiplier=sigma_p / args.tau)
+        acct.step(rounds_prev)
+        eps_plan = ldp_epsilon(args.tau, sigma_p, args.steps,
+                               args.local_samples, args.delta)
+        print(f"[privacy] sigma_p={sigma_p:.4g} for "
+              f"({args.epsilon},{args.delta})-LDP over {args.steps} steps; "
+              f"accountant eps={eps_plan:.4g}")
+    return sigma_p, acct, rounds_prev
 
 
 def main(argv=None):
@@ -62,6 +117,10 @@ def main(argv=None):
     ap.add_argument("--variant", default=None, choices=["gc", "dp", "beer"],
                     help="deprecated alias for --algo porter-<variant>")
     ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--chunk", type=int, default=1,
+                    help="comm rounds scan-fused per dispatch (donated "
+                         "state, on-device batches); logging/checkpoint/"
+                         "divergence gating happen at chunk boundaries")
     ap.add_argument("--agents", type=int, default=4)
     ap.add_argument("--batch", type=int, default=4, help="per-agent batch")
     ap.add_argument("--seq", type=int, default=64)
@@ -84,6 +143,8 @@ def main(argv=None):
 
     if args.algo and args.variant:
         ap.error("--algo and --variant are mutually exclusive")
+    if args.chunk < 1:
+        ap.error("--chunk must be >= 1")
     algo_name = (args.algo or
                  (VARIANT_TO_ALGO[args.variant] if args.variant
                   else "porter-gc"))
@@ -93,15 +154,17 @@ def main(argv=None):
     cfg = dataclasses.replace(cfg, remat=False)
     bundle = build_model(cfg)
 
-    sigma_p = 0.0
-    if info.dp:
-        sigma_p = calibrate_sigma(args.tau, args.steps, args.local_samples,
-                                  args.epsilon, args.delta)
-        eps_acct = ldp_epsilon(args.tau, sigma_p, args.steps,
-                               args.local_samples, args.delta)
-        print(f"[privacy] sigma_p={sigma_p:.4g} for "
-              f"({args.epsilon},{args.delta})-LDP over {args.steps} steps; "
-              f"accountant eps={eps_acct:.4g}")
+    # probe the checkpoint before calibrating: resume must keep the sigma
+    # the spent rounds were perturbed with, and the accountant must start
+    # from the manifest's cumulative round count
+    start, manifest_extra = 0, {}
+    if args.resume and args.ckpt_dir:
+        from repro.launch.checkpoint import latest_step, read_manifest
+        if latest_step(args.ckpt_dir) is not None:
+            start = int(latest_step(args.ckpt_dir))
+            manifest_extra = read_manifest(args.ckpt_dir).get("extra", {})
+    sigma_p, acct, rounds_prev = resolve_privacy(info, args, start,
+                                                 manifest_extra)
 
     spec = ExperimentSpec(algo=algo_name, n_agents=args.agents,
                           topology=args.topology,
@@ -116,52 +179,83 @@ def main(argv=None):
                 if algo.topology is not None else "server/client")
     print(f"[model] {cfg.name}: {n_params/1e6:.2f}M params, "
           f"{args.agents} agents ({top_note}), "
-          f"{args.compressor}(rho={args.frac}) algo={algo_name}")
+          f"{args.compressor}(rho={args.frac}) algo={algo_name} "
+          f"chunk={args.chunk}")
 
     state = algo.init(params)
-    start = 0
-    if args.resume and args.ckpt_dir:
-        from repro.launch.checkpoint import latest_step, restore_state
-        if latest_step(args.ckpt_dir) is not None:
-            state = restore_state(args.ckpt_dir, like=state)
-            start = int(latest_step(args.ckpt_dir))
-            print(f"[ckpt] resumed from step {start}")
-            if start >= args.steps:
-                print(f"[done] checkpoint already at step {start} >= "
-                      f"--steps {args.steps}; nothing to train")
-                if args.out:  # downstream readers still expect the file
-                    Path(args.out).parent.mkdir(parents=True, exist_ok=True)
-                    Path(args.out).write_text(json.dumps([]))
-                return 0
-    step = jax.jit(algo.step)
+    if start > 0:
+        from repro.launch.checkpoint import restore_state
+        state = restore_state(args.ckpt_dir, like=state)
+        print(f"[ckpt] resumed from step {start}")
+        if start >= args.steps:
+            print(f"[done] checkpoint already at step {start} >= "
+                  f"--steps {args.steps}; nothing to train")
+            if args.out:  # downstream readers still expect the file
+                Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+                Path(args.out).write_text(json.dumps([]))
+            return 0
 
-    key = jax.random.PRNGKey(1)
+    source = batch_source(cfg, args.agents, args.batch, args.seq)
     history = []
+    run = {"t": start, "diverged": False}
     t0 = time.time()
-    for t in range(start, args.steps):
-        key, kb, ks = jax.random.split(key, 3)
-        batch = make_train_batch(cfg, kb, args.agents, args.batch, args.seq)
-        state, metrics = step(state, batch, ks)
-        if t % args.log_every == 0 or t == args.steps - 1:
-            m = {k: float(v) for k, v in metrics.items()}
-            m["step"] = t
-            m["wall_s"] = round(time.time() - t0, 2)
-            history.append(m)
-            extra = "".join(
-                f"  {label} {m[k]:.3e}" for k, label in
-                (("consensus_x", "consensus_x"), ("v_norm", "|v|"))
-                if k in m)
-            print(f"  step {t:5d}  loss {m['loss']:.4f}{extra}  "
-                  f"wire {m['wire_bytes']/1e6:.3f}MB/round  ({m['wall_s']}s)")
-        if args.ckpt_dir and (t + 1) % args.ckpt_every == 0:
+
+    def ckpt_extra(t_end: int) -> dict:
+        extra = {"rounds_executed": rounds_prev + (t_end - start)}
+        if info.dp:
+            extra.update(sigma_p=sigma_p, tau=args.tau,
+                         epsilon=args.epsilon, delta=args.delta,
+                         local_samples=args.local_samples)
+        return extra
+
+    def on_chunk(t_start, t_end, st, metrics):
+        # one host sync per chunk: the stacked metrics come down together
+        m_host = jax.device_get(metrics)
+        wall = round(time.time() - t0, 2)
+        for i, t in enumerate(range(t_start, t_end)):
+            if t % args.log_every == 0 or t == args.steps - 1:
+                m = {k: float(v[i]) for k, v in m_host.items()}
+                m["step"] = t
+                m["wall_s"] = wall
+                history.append(m)
+                extra = "".join(
+                    f"  {label} {m[k]:.3e}" for k, label in
+                    (("consensus_x", "consensus_x"), ("v_norm", "|v|"))
+                    if k in m)
+                print(f"  step {t:5d}  loss {m['loss']:.4f}{extra}  "
+                      f"wire {m['wire_bytes']/1e6:.3f}MB/round  "
+                      f"({m['wall_s']}s)")
+        run["t"] = t_end
+        if not np.isfinite(m_host["loss"][-1]):
+            # gate BEFORE checkpointing: the last good checkpoint must
+            # survive so --resume can recover from it
+            run["diverged"] = True
+            print(f"[diverged] non-finite loss at step {t_end - 1}; "
+                  "stopping")
+            return False
+        if args.ckpt_dir and \
+                t_end // args.ckpt_every > t_start // args.ckpt_every:
             from repro.launch.checkpoint import save_state
-            save_state(args.ckpt_dir, state, step=t + 1)
-    first, last = history[0]["loss"], history[-1]["loss"]
-    print(f"[done] loss {first:.4f} -> {last:.4f} in {args.steps} steps "
-          f"({time.time()-t0:.1f}s)")
-    if args.out:
+            save_state(args.ckpt_dir, st, step=t_end,
+                       extra=ckpt_extra(t_end))
+
+    run_chunked(algo, source, state, jax.random.PRNGKey(1), args.steps,
+                chunk=args.chunk, start=start, on_chunk=on_chunk)
+
+    executed = run["t"] - start
+    if acct is not None:
+        acct.step(executed)
+        print(f"[privacy] executed {executed} rounds this run "
+              f"({rounds_prev + executed} cumulative); accountant "
+              f"eps={acct.epsilon(args.delta):.4g} at delta={args.delta:g}")
+    if args.out:  # written even on divergence: downstream readers expect it
         Path(args.out).parent.mkdir(parents=True, exist_ok=True)
         Path(args.out).write_text(json.dumps(history, indent=2))
+    if run["diverged"] or not history:
+        return 1
+    first, last = history[0]["loss"], history[-1]["loss"]
+    print(f"[done] loss {first:.4f} -> {last:.4f} in {executed} steps "
+          f"({time.time()-t0:.1f}s)")
     # Exit gate: fail on divergence, not on noise.  The smoke task is random
     # tokens (loss sits at its entropy floor and fluctuates), and DP runs
     # are perturbation-dominated, so require descent *or* staying within a

@@ -1,5 +1,8 @@
-"""Model zoo: composable architecture definitions over repro.nn."""
+"""Model zoo: composable architecture definitions over repro.nn, plus the
+paper's Section-5 experiment models."""
 from .blocks import ModelConfig
 from .model import ModelBundle, build_model
+from .paper import mlp_init, mlp_loss
 
-__all__ = ["ModelConfig", "ModelBundle", "build_model"]
+__all__ = ["ModelConfig", "ModelBundle", "build_model", "mlp_init",
+           "mlp_loss"]

@@ -1,0 +1,44 @@
+"""The paper's Section-5.2 experiment model: 784 -> 64 sigmoid -> 10
+softmax cross-entropy, one shared definition.
+
+The init and loss used to be copy-pasted between ``benchmarks/common.py``
+and ``examples/porter_adam_comparison.py``; both now import from here
+(dimensions from :mod:`repro.configs.paper_mnist`).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_mnist import CLASSES, HIDDEN, INPUT_DIM
+
+__all__ = ["mlp_init", "mlp_loss"]
+
+
+def mlp_init(key=None, scale: float = 0.05):
+    """Initial parameters of the Section-5.2 MLP (zero biases, Gaussian
+    weights scaled by ``scale``)."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    k1, k2 = jax.random.split(key)
+    return {"w1": scale * jax.random.normal(k1, (INPUT_DIM, HIDDEN)),
+            "c1": jnp.zeros(HIDDEN),
+            "w2": scale * jax.random.normal(k2, (HIDDEN, CLASSES)),
+            "c2": jnp.zeros(CLASSES)}
+
+
+def mlp_loss():
+    """Per-agent loss ``(params, (features, labels)) -> scalar`` of the
+    Section-5.2 MLP (softmax cross-entropy)."""
+
+    def loss_fn(params, batch):
+        f, l = batch
+        f = jnp.atleast_2d(f)
+        l = jnp.atleast_1d(l)
+        h = jax.nn.sigmoid(f @ params["w1"] + params["c1"])
+        logits = h @ params["w2"] + params["c2"]
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l[:, None], axis=-1)[:, 0]
+        return jnp.mean(lse - gold)
+
+    return loss_fn
