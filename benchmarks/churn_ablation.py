@@ -1,0 +1,161 @@
+"""Churn ablation: convergence vs agent-churn rate on a time-varying graph.
+
+PORTER's rates are parameterized by the network's spectral gap; a static
+benchmark probes that trade-off at a single point.  This ablation sweeps the
+*churn rate* of a dropout :class:`repro.core.mixing.TopologySchedule` (each
+round every agent is offline independently with probability ``rate``; the
+round's survivors re-derive Metropolis weights) on the paper's Section-5.1
+logreg protocol, and reports convergence against the schedule's joint
+spectral gap -- the connectivity axis the paper's theory predicts and the
+static harness could not measure.
+
+All contenders run through the registry's uniform metrics schema (``loss``,
+``consensus_x``, ``wire_bytes`` -- see repro.core.registry), so the
+loss/consensus trajectories and the wire accounting are directly comparable
+with benchmarks/ablation.py's static rows.  Training runs through the
+scan-fused chunked runtime; like bench_train_loop.py, every chunk size must
+compile exactly ONE executable -- the schedule table is indexed by a traced
+round counter, so time variation adds zero recompiles (asserted below).
+
+Rows: ``churn/<rate>,final_loss,...``; artifacts land in
+artifacts/bench/churn_ablation.json (EXPERIMENTS.md section "Churn").
+
+    PYTHONPATH=src python benchmarks/churn_ablation.py            # full
+    PYTHONPATH=src python benchmarks/churn_ablation.py --smoke    # CI
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+if __package__ in (None, ""):  # `python benchmarks/churn_ablation.py`
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import numpy as np
+
+from repro.api import build
+from repro.data import a9a_like, minibatch_source, shard_to_agents
+from repro.launch.runtime import make_runner
+from benchmarks import common as C
+
+RATES = (0.0, 0.1, 0.3, 0.5)
+PERIOD = 8
+CHUNK = 8
+
+
+def _run(spec, loss_fn, params0, source, steps, chunk=CHUNK):
+    """Train ``spec`` for ``steps`` rounds; return per-round uniform metrics.
+
+    Asserts one executable per chunk size, exactly as bench_train_loop.py
+    does for the static path: a churn schedule must not cost recompiles.
+    """
+    algo = build(spec, loss_fn)
+    state = algo.init(params0)
+    key = jax.random.PRNGKey(0)
+    runners, t, per_round = {}, 0, []
+    while t < steps:
+        size = min(chunk, steps - t)
+        runner = runners.get(size)
+        if runner is None:
+            runner = runners[size] = make_runner(algo, source, size)
+        state, key, metrics = runner(state, key, t)
+        t += size
+        per_round.append({k: np.asarray(v) for k, v in metrics.items()})
+    for size, runner in runners.items():
+        n_exec = runner.cache_size()
+        assert n_exec in (None, 1), (
+            f"chunk={size} compiled {n_exec} executables under the "
+            "schedule (expected 1: W_t is a traced gather)")
+    stacked = {k: np.concatenate([m[k] for m in per_round])
+               for k in per_round[0]}
+    return algo, stacked
+
+
+def run_ablation(steps=400, chunk=CHUNK):
+    x, y = a9a_like(12000, 123, seed=0)
+    xs, ys = shard_to_agents(x, y, C.N_AGENTS)
+    loss_fn = C.logreg_loss()
+    params0 = {"w": np.zeros(123, np.float32), "b": np.zeros((), np.float32)}
+    source = minibatch_source(xs, ys, batch=4)
+
+    # the Section-5.1 protocol on Metropolis weights (churn schedules
+    # re-derive Metropolis on each round's pruned graph; best_constant has
+    # no closed form on a disconnected round)
+    base = C.PAPER_SPEC.replace(algo="porter-gc", topology_weights="metropolis",
+                                compressor="top_k", frac=0.05, eta=0.05,
+                                tau=1.0)
+
+    results, rows = {}, []
+    for rate in RATES:
+        spec = (base if rate == 0.0 else base.replace(
+            topology_schedule=(f"dropout:rate={rate},period={PERIOD},"
+                               f"base=erdos_renyi")))
+        algo, m = _run(spec, loss_fn, params0, source, steps, chunk)
+        q = max(len(m["loss"]) // 4, 1)
+        sched = algo.schedule
+        rec = {
+            "rate": rate,
+            "schedule": spec.topology_schedule,
+            "period": 1 if sched is None else sched.period,
+            "window": PERIOD,
+            # the connectivity axis: how much a PERIOD-round window mixes
+            # (static row raised to the same window so the bases match)
+            "joint_spectral_gap": (
+                1.0 - algo.topology.alpha ** PERIOD if sched is None
+                else sched.joint_spectral_gap),
+            "per_round_alpha": (algo.topology.alpha if sched is None
+                                else sched.alpha),
+            # per-round spectral-gap trajectory over one period (a churn
+            # round with offline agents may have gap 0 -- the window saves
+            # it; plotted against the loss curve in EXPERIMENTS.md)
+            "spectral_gap_trajectory": (
+                [algo.topology.spectral_gap] if sched is None
+                else [1.0 - a for a in sched.alphas]),
+            "gamma": algo.gamma,
+            # uniform schema: per-round means over the tail quarter
+            "final_loss": float(np.mean(m["loss"][-q:])),
+            "final_consensus_x": float(np.mean(m["consensus_x"][-q:])),
+            "wire_mb_per_round": float(m["wire_bytes"][-1] / 1e6),
+            "wire_mb_total": float(np.sum(m["wire_bytes"]) / 1e6),
+            "loss_curve": m["loss"][:: max(steps // 50, 1)].tolist(),
+            "consensus_curve":
+                m["consensus_x"][:: max(steps // 50, 1)].tolist(),
+        }
+        results[f"rate_{rate}"] = rec
+        rows.append(rec)
+        print(f"churn/{rate},final_loss={rec['final_loss']:.4f},"
+              f"consensus={rec['final_consensus_x']:.3e},"
+              f"joint_gap={rec['joint_spectral_gap']:.3f},"
+              f"gamma={rec['gamma']:.4g},"
+              f"wire_total={rec['wire_mb_total']:.3f}MB")
+
+    # sanity on the axis itself: more churn can only shrink the window's
+    # joint gap (fewer links survive each round)
+    gaps = [r["joint_spectral_gap"] for r in rows]
+    assert all(g > 0.0 for g in gaps), gaps
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=None,
+                    help="rounds per rate (default 400, or 32 with --smoke)")
+    ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    args = ap.parse_args()
+    steps = args.steps or (32 if args.smoke else 400)
+
+    results = run_ablation(steps=steps)
+    art = Path("artifacts/bench")
+    art.mkdir(parents=True, exist_ok=True)
+    (art / "churn_ablation.json").write_text(json.dumps(results, indent=2))
+    print(f"wrote artifacts/bench/churn_ablation.json "
+          f"({len(results)} rates x {steps} rounds)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -25,7 +25,10 @@ Module map:
       .gossip       dense / ring / packed wire executors + byte accounting
       .compression  rho-compressors (Definition 3)
       .clipping     smooth / piecewise clipping (Definition 2)
-      .mixing       topologies and mixing matrices (Definition 1)
+      .mixing       topologies and mixing matrices (Definition 1), plus
+                    time-varying TopologySchedule generators (churn,
+                    stragglers, graph rotation, ER resampling) with
+                    window-connectivity validation and joint spectral gaps
       .privacy      LDP calibration and accounting (Theorem 1)
     kernels     Pallas TPU kernels (+ flatten: pytree <-> tile planes)
     launch      mesh builder, sharded step builders, train/serve drivers

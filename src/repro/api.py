@@ -24,7 +24,12 @@ comm-round engine, and the paper's consensus-stepsize derivation
     gamma = gamma_scale * (1 - alpha) * rho        (default scale 1/2)
 
 with ``alpha`` the mixing rate of the resolved topology and ``rho`` the
-resolved compressor's contraction factor.  Launch-level hooks (mesh,
+resolved compressor's contraction factor.  A ``topology_schedule`` spec
+string swaps the static graph for a time-varying
+:class:`repro.core.mixing.TopologySchedule` (churn, stragglers, graph
+rotation, per-round ER resampling); ``alpha`` then becomes the schedule's
+per-round geometric mixing rate, and the gossip executors index the
+schedule table by the state's step counter inside the compiled program.  Launch-level hooks (mesh,
 agent axes, shard-local compression, sharded leaf specs) are keyword
 arguments of :func:`build` -- they are runtime objects, not experiment
 declarations, so they stay out of the spec.
@@ -58,8 +63,9 @@ from repro.core import baselines as BL
 from repro.core.beer import beer_config
 from repro.core.comm_round import CommRound
 from repro.core.compression import Compressor, make_compressor
+from repro.core import mixing as MX
 from repro.core.gossip import MixFn, make_mixer
-from repro.core.mixing import Topology, make_topology
+from repro.core.mixing import Topology, TopologySchedule, make_topology
 from repro.core.porter import (PorterConfig, PorterState, porter_init,
                                porter_step)
 from repro.core.porter_adam import (PorterAdamState, porter_adam_init,
@@ -74,6 +80,7 @@ __all__ = [
     "build",
     "build_engine",
     "resolve_topology",
+    "resolve_schedule",
     "resolve_compressor",
     "resolve_gamma",
     "Algorithm",
@@ -112,6 +119,22 @@ class ExperimentSpec:
     topology_weights: str = "metropolis"
     topology_p: float = 0.8          # erdos_renyi edge probability
     topology_seed: int = 0
+    # time-varying topology (None = the static graph above).  A generator
+    # spec string, resolved by resolve_schedule into a
+    # repro.core.mixing.TopologySchedule whose (period, n, n) table the
+    # gossip executors index with the traced round counter:
+    #   "static"                              period-1 wrapper (parity tests)
+    #   "rotate:ring+star+complete"           one graph kind per round
+    #   "rotate:ring/metropolis+ring/lazy"    per-round weight schemes
+    #   "rotate:ring+star,weights=lazy"       bare kinds + key=value knobs
+    #   "erdos_renyi:period=8,p=0.6"          fresh connected ER every round
+    #   "dropout:rate=0.2,period=8"           agent churn (offline w.p. rate)
+    #   "straggler:rate=0.3,period=8"         per-link deadline misses
+    # Unset keys default to the topology_* fields above; the consensus
+    # stepsize derivation then uses the schedule's joint spectral gap.
+    # Server/client algorithms (dp-sgd, soteriafl) have no graph and
+    # ignore it.
+    topology_schedule: Optional[str] = None
     # compression (Definition 3)
     compressor: str = "top_k"
     frac: float = 0.05               # kept fraction for the sparse family
@@ -153,6 +176,7 @@ class Resolved:
     mixer: Optional[MixFn]
     engine: Optional[CommRound]
     gamma: Optional[float]
+    schedule: Optional[TopologySchedule] = None
 
 
 # ---------------------------------------------------------------------------
@@ -165,6 +189,89 @@ def resolve_topology(spec: ExperimentSpec) -> Topology:
                          seed=spec.topology_seed)
 
 
+def _parse_schedule_kv(rest: str) -> Mapping[str, str]:
+    kv = {}
+    for item in filter(None, (s.strip() for s in rest.split(","))):
+        k, sep, v = item.partition("=")
+        if not sep:
+            raise ValueError(
+                f"bad schedule argument {item!r}: expected key=value "
+                "(e.g. 'dropout:rate=0.2,period=8')")
+        kv[k.strip()] = v.strip()
+    return kv
+
+
+def resolve_schedule(spec: ExperimentSpec,
+                     topology: Optional[Topology] = None
+                     ) -> Optional[TopologySchedule]:
+    """Parse ``spec.topology_schedule`` into a TopologySchedule (or None).
+
+    Unset generator knobs default to the spec's static-topology fields
+    (weights, p, seed, and the base graph kind for churn generators);
+    ``topology`` short-circuits the period-1 'static' wrapper so an
+    externally supplied Topology override keeps parity."""
+    if spec.topology_schedule is None:
+        return None
+    text = spec.topology_schedule
+    kind, _, rest = text.partition(":")
+    kind = kind.strip()
+    if kind == "static":
+        if rest.strip():
+            raise ValueError(f"'static' schedule takes no arguments; got "
+                             f"{text!r}")
+        top = resolve_topology(spec) if topology is None else topology
+        return MX.static_schedule(top)
+    allowed = {"rotate": {"kinds", "weights", "p", "seed"},
+               "erdos_renyi": {"p", "period", "weights", "seed"},
+               "dropout": {"rate", "period", "base", "weights", "p", "seed"},
+               "straggler": {"rate", "period", "base", "weights", "p",
+                             "seed"}}
+    if kind not in allowed:
+        raise ValueError(
+            f"unknown topology schedule kind {kind!r} in {text!r}; have "
+            "static, rotate, erdos_renyi, dropout, straggler")
+    if kind == "rotate" and rest:
+        # the kinds list may lead bare: 'rotate:ring+star,weights=lazy'
+        first, _, more = rest.partition(",")
+        if "=" not in first:
+            kv = {"kinds": first.strip(), **_parse_schedule_kv(more)}
+        else:
+            kv = dict(_parse_schedule_kv(rest))
+    else:
+        kv = dict(_parse_schedule_kv(rest))
+    # reject typo'd keys BEFORE running a generator: the churn samplers do
+    # real work (up to 1000 window-connectivity attempts)
+    unknown = set(kv) - allowed[kind]
+    if unknown:
+        raise ValueError(f"unknown {kind!r} schedule keys {sorted(unknown)} "
+                         f"in {text!r}; allowed: {sorted(allowed[kind])}")
+    if kind == "rotate":
+        kinds = [k for k in kv.pop("kinds", "").split("+") if k]
+        if not kinds:
+            raise ValueError("rotate schedule needs '+'-separated graph "
+                             "kinds, e.g. 'rotate:ring+star+complete'")
+        return MX.rotating_schedule(
+            kinds, spec.n_agents,
+            weights=kv.pop("weights", spec.topology_weights),
+            p=float(kv.pop("p", spec.topology_p)),
+            seed=int(kv.pop("seed", spec.topology_seed)))
+    if kind == "erdos_renyi":
+        return MX.erdos_renyi_schedule(
+            spec.n_agents, p=float(kv.pop("p", spec.topology_p)),
+            period=int(kv.pop("period", 8)),
+            weights=kv.pop("weights", spec.topology_weights),
+            seed=int(kv.pop("seed", spec.topology_seed)))
+    gen = (MX.dropout_schedule if kind == "dropout"
+           else MX.straggler_schedule)
+    return gen(
+        spec.n_agents, rate=float(kv.pop("rate", 0.2)),
+        period=int(kv.pop("period", 8)),
+        base=kv.pop("base", spec.topology),
+        weights=kv.pop("weights", spec.topology_weights),
+        p=float(kv.pop("p", spec.topology_p)),
+        seed=int(kv.pop("seed", spec.topology_seed)))
+
+
 def resolve_compressor(spec: ExperimentSpec) -> Compressor:
     kwargs = dict(spec.compressor_kwargs)
     if spec.compressor in _FRAC_COMPRESSORS:
@@ -173,17 +280,25 @@ def resolve_compressor(spec: ExperimentSpec) -> Compressor:
 
 
 def resolve_gamma(spec: ExperimentSpec, topology: Topology,
-                  compressor: Compressor) -> float:
-    """The paper's consensus stepsize: gamma_scale * (1 - alpha) * rho."""
+                  compressor: Compressor,
+                  schedule: Optional[TopologySchedule] = None) -> float:
+    """The paper's consensus stepsize: gamma_scale * (1 - alpha) * rho.
+
+    Under a time-varying schedule ``alpha`` is the schedule's per-round
+    geometric mixing rate (joint_alpha^(1/period)) -- an individual churn
+    round may not mix at all, but the window does, and that is the rate
+    consensus actually contracts by.  A period-1 schedule reproduces the
+    static derivation exactly."""
     if spec.gamma is not None:
         return spec.gamma
-    gamma = spec.gamma_scale * (1.0 - topology.alpha) * compressor.rho
+    alpha = topology.alpha if schedule is None else schedule.alpha
+    gamma = spec.gamma_scale * (1.0 - alpha) * compressor.rho
     if gamma <= 0.0:
         # e.g. low_rank advertises rho=0 (data-dependent contraction):
         # a zero gamma would silently disable gossip and train agents in
         # isolation, so demand an explicit choice instead
         raise ValueError(
-            f"derived gamma is 0 (alpha={topology.alpha:.4g}, "
+            f"derived gamma is 0 (alpha={alpha:.4g}, "
             f"rho={compressor.rho:.4g} for {compressor.name}); pass an "
             "explicit gamma= in the ExperimentSpec")
     return gamma
@@ -192,7 +307,8 @@ def resolve_gamma(spec: ExperimentSpec, topology: Topology,
 def build_engine(spec: ExperimentSpec, *,
                  mesh=None, agent_axes: Sequence[str] = ("data",),
                  leaf_specs=None, compress_fn=None,
-                 topology: Optional[Topology] = None) -> CommRound:
+                 topology: Optional[Topology] = None,
+                 schedule: Optional[TopologySchedule] = None) -> CommRound:
     """Comm-round engine for ``spec`` (compressor + mixer + backend).
 
     The only sanctioned way to get a :class:`CommRound` outside repro.core;
@@ -204,10 +320,17 @@ def build_engine(spec: ExperimentSpec, *,
     axes switch the fused update to per-shard planes (pack/unpack inside
     shard_map), so ``comm_backend='pallas'`` stays reshard-free on
     tensor-parallel layouts.
+
+    When the spec declares a ``topology_schedule`` (or ``schedule`` is
+    passed directly), the mixer is built from the schedule's stacked table
+    and the engine's round methods must be fed the absolute round index
+    (every registered algorithm passes its state's step counter).
     """
     top = resolve_topology(spec) if topology is None else topology
+    sched = resolve_schedule(spec, top) if schedule is None else schedule
     comp = resolve_compressor(spec)
-    mixer = make_mixer(top, spec.gossip_mode, mesh=mesh, frac=spec.frac,
+    mixer = make_mixer(sched if sched is not None else top,
+                       spec.gossip_mode, mesh=mesh, frac=spec.frac,
                        agent_axes=agent_axes, leaf_specs=leaf_specs)
     return CommRound(compressor=comp, mixer=mixer, compress_fn=compress_fn,
                      backend=spec.comm_backend, interpret=spec.interpret,
@@ -229,18 +352,21 @@ def build(spec: ExperimentSpec, loss_fn, *,
       topology fields are resolved via make_topology.
     """
     info = algorithm_info(spec.algo)
-    top = None
+    top, sched = None, None
     if info.decentralized:
         top = resolve_topology(spec) if topology is None else topology
+        sched = resolve_schedule(spec, top)
     comp, mixer, engine = None, None, None
     if info.decentralized and info.compressed:
         # the one engine-construction path, shared with microbenchmarks
         engine = build_engine(spec, mesh=mesh, agent_axes=agent_axes,
                               leaf_specs=leaf_specs,
-                              compress_fn=compress_fn, topology=top)
+                              compress_fn=compress_fn, topology=top,
+                              schedule=sched)
         comp, mixer = engine.compressor, engine.mixer
     elif info.decentralized:
-        mixer = make_mixer(top, spec.gossip_mode, mesh=mesh, frac=spec.frac,
+        mixer = make_mixer(sched if sched is not None else top,
+                           spec.gossip_mode, mesh=mesh, frac=spec.frac,
                            agent_axes=agent_axes, leaf_specs=leaf_specs)
     elif info.compressed:
         # server/client: compression without gossip
@@ -253,10 +379,10 @@ def build(spec: ExperimentSpec, loss_fn, *,
                            agent_axes=tuple(agent_axes))
     gamma = None
     if info.decentralized:
-        gamma = (resolve_gamma(spec, top, comp) if info.compressed
+        gamma = (resolve_gamma(spec, top, comp, sched) if info.compressed
                  else (1.0 if spec.gamma is None else spec.gamma))
     r = Resolved(info=info, topology=top, compressor=comp, mixer=mixer,
-                 engine=engine, gamma=gamma)
+                 engine=engine, gamma=gamma, schedule=sched)
     return get_factory(spec.algo)(spec, loss_fn, r)
 
 
@@ -282,7 +408,7 @@ def _algorithm(spec, r, *, state_cls, init, step, config=None) -> Algorithm:
                      state_cls=state_cls, init=init, step=step,
                      topology=r.topology, compressor=r.compressor,
                      mixer=r.mixer, engine=r.engine, gamma=r.gamma,
-                     config=config)
+                     config=config, schedule=r.schedule)
 
 
 # ---------------------------------------------------------------------------

@@ -4,9 +4,12 @@ Public surface:
 
     compression : rho-compressors (Definition 3) + packed wire format
     clipping    : smooth / piecewise clipping (Definition 2, Remark 1)
-    mixing      : graphs, mixing matrices, mixing rate (Definition 1)
+    mixing      : graphs, mixing matrices, mixing rate (Definition 1),
+                  time-varying TopologySchedule (churn / stragglers / ER
+                  resampling) with window-connectivity validation
     privacy     : phi_m, Theorem-1 sigma calibration, moments accountant
     gossip      : dense / ring / packed mixers over agent-stacked pytrees
+                  (static W or a schedule table indexed by a traced round)
     comm_round  : the one fused EF/gossip round primitive (CommRound) every
                   compressed algorithm is a thin client of
     registry    : the Algorithm protocol + registry every optimizer is
@@ -31,8 +34,9 @@ from . import (baselines, beer, clipping, comm_round, compression, gossip,
 from .clipping import piecewise_clip, smooth_clip, tree_clip, tree_global_norm
 from .comm_round import CommRound, resolve_engine
 from .compression import Compressor, make_compressor
-from .gossip import make_mixer
-from .mixing import Topology, make_topology, mixing_rate
+from .gossip import apply_mixer, make_mixer
+from .mixing import (Topology, TopologySchedule, make_schedule,
+                     make_topology, mixing_rate, spectral_gap)
 from .porter import (PorterConfig, PorterState, average_params,
                      consensus_error, make_porter_step, porter_init,
                      porter_step)
@@ -44,7 +48,8 @@ __all__ = [
     "baselines", "beer", "clipping", "comm_round", "compression", "gossip",
     "mixing", "porter", "privacy", "registry",
     "CommRound", "resolve_engine", "Compressor", "make_compressor",
-    "Topology", "make_topology",
+    "Topology", "TopologySchedule", "make_topology", "make_schedule",
+    "spectral_gap", "apply_mixer",
     "mixing_rate", "PorterConfig", "PorterState", "porter_init", "porter_step",
     "make_porter_step", "average_params", "consensus_error",
     "MomentsAccountant", "calibrate_sigma", "ldp_epsilon", "phi_m",

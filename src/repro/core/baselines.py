@@ -38,7 +38,7 @@ import numpy as np
 from . import clipping
 from .comm_round import CommRound, resolve_engine
 from .compression import Compressor
-from .gossip import MixFn, gossip_wire_bytes
+from .gossip import MixFn, apply_mixer, gossip_wire_bytes
 from .porter import LossFn, average_params, consensus_error
 
 __all__ = [
@@ -106,7 +106,8 @@ def dsgd_step(eta: float, gamma: float, loss_fn: LossFn, mixer: MixFn,
         return loss, g
 
     losses, g = jax.vmap(agent_grad)(state.x, batch, keys)
-    mixed = mixer(state.x)  # W X
+    # W_t X; the step counter selects the round's matrix under a schedule
+    mixed = apply_mixer(mixer, state.x, state.step)
     x = _tree(lambda x0, wx, gg: x0 + gamma * (wx - x0) - eta * gg,
               state.x, mixed, g)
     # uncompressed gossip of the full parameter buffer every round
@@ -157,7 +158,8 @@ def choco_step(eta: float, gamma: float, loss_fn: LossFn,
 
     losses, g = jax.vmap(agent_grad)(state.x, batch, keys)
     x_half = _tree(lambda x0, gg: x0 - eta * gg, state.x, g)
-    x, q, m = eng.gossip_apply(k_c, x_half, state.q, state.m, gamma)
+    x, q, m = eng.gossip_apply(k_c, x_half, state.q, state.m, gamma,
+                               t=state.step)
     return ChocoState(x=x, q=q, m=m, step=state.step + 1), {
         "loss": jnp.mean(losses), "consensus_x": consensus_error(x),
         "wire_bytes": jnp.asarray(eng.wire_bytes(state.x), jnp.float32)}

@@ -36,6 +36,15 @@ model shard), so no buffer is ever all-gathered over the model axis
 (:func:`repro.kernels.flatten.plane_apply`).  ``backend='pallas'`` is
 therefore safe on every layout the launch layer builds.
 
+Time-varying topologies: the engine's methods take the absolute round index
+``t`` and forward it to the mixer (:func:`repro.core.gossip.apply_mixer`),
+which gathers ``W_{t mod period}`` from its device-resident schedule table
+inside the compiled program.  ``W_t`` therefore enters the round as a traced
+value, and everything downstream of the mix -- including the fused ef_track
+/ ef_step / ef_gossip plane kernels -- consumes ``wc = W_t @ c`` as data,
+so the pallas path and the per-shard plane layout need no schedule plumbing
+at all.
+
 Wire accounting: :meth:`CommRound.wire_bytes` converts (gossip mode,
 compressor, n_agents, d) into per-round bytes via
 :func:`repro.core.gossip.gossip_wire_bytes` / ``Compressor.wire_bits`` so
@@ -56,7 +65,7 @@ from jax.sharding import PartitionSpec as P
 from ..kernels import flatten as FL
 from ..kernels import ops
 from .compression import Compressor
-from .gossip import PACK_BLOCK, MixFn, gossip_wire_bytes
+from .gossip import PACK_BLOCK, MixFn, apply_mixer, gossip_wire_bytes
 
 __all__ = ["CommRound", "compress_stacked", "resolve_engine"]
 
@@ -179,24 +188,29 @@ class CommRound:
             return self.compress_fn(key, delta)
         return compress_stacked(self.compressor, key, delta)
 
-    def exchange(self, key: jax.Array, y, q) -> Tuple[Any, Any]:
+    def exchange(self, key: jax.Array, y, q, t=None) -> Tuple[Any, Any]:
         """Compress the increment of ``y`` against surrogate ``q`` and mix.
 
         Returns ``(c, wc)`` with ``c = C(y - q)`` (what the agent puts on
         the wire) and ``wc = W @ c`` (what it accumulates off the wire).
+        ``t`` is the absolute round index -- required (and traced) when the
+        mixer runs a time-varying topology schedule, ignored otherwise; the
+        fused plane kernels downstream consume ``wc`` as data, so the whole
+        pallas path is schedule-agnostic.
         """
         c = self.compress(key, _tree(jnp.subtract, y, q))
-        return c, self.mixer(c)
+        return c, apply_mixer(self.mixer, c, t)
 
     # -- fused state updates ------------------------------------------------
 
-    def track(self, key, v, q, m, g, g_prev, gamma: float):
+    def track(self, key, v, q, m, g, g_prev, gamma: float, t=None):
         """PORTER Algorithm 1 lines 11-12 (gradient-estimate track).
 
         q += c; m += Wc; v' = v + gamma*(m - q) + g - g_prev.
-        Returns (v', q', m').
+        Returns (v', q', m').  ``t``: absolute round index for time-varying
+        mixers (see :meth:`exchange`).
         """
-        c, wc = self.exchange(key, v, q)
+        c, wc = self.exchange(key, v, q, t)
         if self._use_pallas():
             kw = self._kernel_kw()
             qo, mo, vo = FL.plane_apply(
@@ -209,14 +223,15 @@ class CommRound:
                    + gn - gp, v, m2, q2, g, g_prev)
         return v2, q2, m2
 
-    def step(self, key, x, q, m, v, gamma: float, eta: float):
+    def step(self, key, x, q, m, v, gamma: float, eta: float, t=None):
         """PORTER Algorithm 1 lines 13-14 (parameter step).
 
         q += c; m += Wc; x' = x + gamma*(m - q) - eta*v, cast to x.dtype.
         Returns (x', q', m').  ``v`` may be any descent direction (PORTER
         passes the tracked gradient, PORTER-Adam its preconditioned form).
+        ``t``: absolute round index for time-varying mixers.
         """
-        c, wc = self.exchange(key, x, q)
+        c, wc = self.exchange(key, x, q, t)
         if self._use_pallas():
             kw = self._kernel_kw()
             qo, mo, xo = FL.plane_apply(
@@ -230,14 +245,16 @@ class CommRound:
                    x, m2, q2, v)
         return x2, q2, m2
 
-    def gossip_apply(self, key, y, q, m, gamma: float, scale: float = 1.0):
+    def gossip_apply(self, key, y, q, m, gamma: float, scale: float = 1.0,
+                     t=None):
         """CHOCO-SGD / SoteriaFL-style round (no tracking term).
 
         q += scale*c; m += scale*Wc; y' = y + gamma*(m - q).
         Returns (y', q', m').  ``scale`` is the shift stepsize (1 for
-        CHOCO, alpha for shifted compression).
+        CHOCO, alpha for shifted compression); ``t`` the absolute round
+        index for time-varying mixers.
         """
-        c, wc = self.exchange(key, y, q)
+        c, wc = self.exchange(key, y, q, t)
         if self._use_pallas():
             kw = self._kernel_kw()
             qo, mo, yo = FL.plane_apply(

@@ -22,13 +22,25 @@ All executors compute ``W @ incr`` over the leading agent axis.  The dense
 executor is pure einsum and works both in single-device simulation and under
 pjit (XLA inserts the all-gather).  ``ring`` and ``packed`` are shard_map
 programs and require a mesh.
+
+Time-varying topologies: every factory also accepts a stacked
+``(period, n, n)`` table (a :class:`repro.core.mixing.TopologySchedule`'s
+``ws``).  The returned mixer then takes the *absolute round index* as a
+second, traced argument and gathers ``W_{t mod period}`` from a device copy
+of the table inside the compiled program -- one executable serves the whole
+schedule, and because the index is the state's own step counter the
+trajectory is chunking- and restart-invariant like the PRNG stream.  The
+ring fast path keeps its two-ppermute shift structure and only traces the
+*band weights* per round (the graph stays a ring; weights rotate), so its
+wire bytes stay 2*d regardless of the schedule.  Static mixers ignore the
+round index; :func:`apply_mixer` dispatches either way.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Optional, Sequence, Tuple
+from typing import Callable, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -37,11 +49,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 
-from .mixing import Topology
+from .mixing import Topology, TopologySchedule
 
 __all__ = [
     "MixFn",
     "PACK_BLOCK",
+    "apply_mixer",
     "make_dense_mixer",
     "make_ring_mixer",
     "make_packed_mixer",
@@ -54,7 +67,40 @@ __all__ = [
 # must agree on this, or the reported wire_bytes drift from the payload.
 PACK_BLOCK = 2048
 
-MixFn = Callable[[object], object]  # tree of (n, ...) -> tree of (n, ...)
+# tree of (n, ...) -> tree of (n, ...); time-varying mixers additionally
+# take the traced absolute round index (see apply_mixer)
+MixFn = Callable[..., object]
+
+
+def apply_mixer(mixer: MixFn, tree, t=None):
+    """Invoke ``mixer``, forwarding the round index only when it needs one.
+
+    Static mixers (and ad-hoc test doubles) keep their 1-argument call
+    shape; mixers built from a schedule are tagged ``time_varying`` and
+    require ``t`` (the algorithm steps pass their state's step counter)."""
+    if getattr(mixer, "time_varying", False):
+        if t is None:
+            raise ValueError(
+                "this mixer runs a time-varying topology schedule and needs "
+                "the absolute round index (pass t=state.step)")
+        return mixer(tree, t)
+    return mixer(tree)
+
+
+def _schedule_table(w) -> Tuple[np.ndarray, bool]:
+    """Normalize ``w`` to a numpy table; True when it is a (p, n, n) stack."""
+    w = np.asarray(w, dtype=np.float64)
+    if w.ndim == 2:
+        return w, False
+    if w.ndim == 3:
+        return w, True
+    raise ValueError(f"mixing matrix must be (n, n) or (period, n, n); got "
+                     f"shape {w.shape}")
+
+
+def _entry(table: jax.Array, t) -> jax.Array:
+    """W_t from a stacked device table, traced-index safe."""
+    return table[jnp.mod(jnp.asarray(t, jnp.int32), table.shape[0])]
 
 
 def _einsum_w(w: jax.Array, leaf: jax.Array) -> jax.Array:
@@ -63,13 +109,24 @@ def _einsum_w(w: jax.Array, leaf: jax.Array) -> jax.Array:
     return out.astype(leaf.dtype)
 
 
-def make_dense_mixer(w: np.ndarray) -> MixFn:
-    """W @ incr via einsum over the agent axis (all-gather under pjit)."""
-    w_j = jnp.asarray(w, dtype=jnp.float32)
+def make_dense_mixer(w) -> MixFn:
+    """W @ incr via einsum over the agent axis (all-gather under pjit).
 
-    def mix(tree):
-        return jax.tree_util.tree_map(lambda l: _einsum_w(w_j, l), tree)
+    ``w``: (n, n) static matrix, or a stacked (period, n, n) schedule table
+    -- the mixer then indexes it with the traced round argument."""
+    w_np, time_varying = _schedule_table(w)
+    w_j = jnp.asarray(w_np, dtype=jnp.float32)
 
+    if time_varying:
+        def mix(tree, t):
+            w_t = _entry(w_j, t)
+            return jax.tree_util.tree_map(lambda l: _einsum_w(w_t, l), tree)
+    else:
+        def mix(tree, t=None):
+            del t  # static
+            return jax.tree_util.tree_map(lambda l: _einsum_w(w_j, l), tree)
+
+    mix.time_varying = time_varying
     return mix
 
 
@@ -111,7 +168,7 @@ def _ring_weights(w: np.ndarray) -> Tuple[float, float, float]:
     return w_self, w_prev, w_next
 
 
-def make_ring_mixer(w: np.ndarray, mesh: Mesh,
+def make_ring_mixer(w, mesh: Mesh,
                     agent_axes: Sequence[str] = ("data",),
                     leaf_specs=None) -> MixFn:
     """Banded-W gossip via lax.ppermute (wire bytes: 2*d, n-independent).
@@ -119,8 +176,23 @@ def make_ring_mixer(w: np.ndarray, mesh: Mesh,
     For the multi-pod agent grid the logical agent index is
     pod * data_size + data; shifts that cross the pod boundary are patched
     with an extra ppermute over the 'pod' axis.
+
+    ``w`` may be a stacked (period, n, n) schedule table; every round must
+    then be a circulant ring band.  The *shift structure* stays static --
+    which bands are ever nonzero across the window decides which ppermutes
+    the program emits -- and only the three band weights are traced
+    (gathered per round from a (period, 3) device table), so the compiled
+    collective schedule and the 2*d wire accounting are schedule-invariant.
     """
-    w_self, w_prev, w_next = _ring_weights(w)
+    w_np, time_varying = _schedule_table(w)
+    if time_varying:
+        band_tab = np.stack([_ring_weights(wt) for wt in w_np])  # (p, 3)
+        use_prev = bool(np.any(band_tab[:, 1] != 0.0))
+        use_next = bool(np.any(band_tab[:, 2] != 0.0))
+        bands_j = jnp.asarray(band_tab, jnp.float32)
+    else:
+        w_self, w_prev, w_next = _ring_weights(w_np)
+        use_prev, use_next = bool(w_prev), bool(w_next)
     axes = tuple(agent_axes)
 
     def shift(x, direction: int, axis: str):
@@ -128,49 +200,63 @@ def make_ring_mixer(w: np.ndarray, mesh: Mesh,
         perm = [(i, (i + direction) % size) for i in range(size)]
         return jax.lax.ppermute(x, axis, perm)
 
-    def local(x):  # x: (1, ...) local agent block
+    def local(x, b_self, b_prev, b_next):  # x: (1, ...) local agent block
         # zero-weight bands send nothing (n=2 ring folds everything into
-        # w_prev; its second ppermute would be a dead wire transfer)
+        # w_prev; its second ppermute would be a dead wire transfer);
+        # use_prev/use_next are static over the whole schedule window
         if len(axes) == 1:
             ax = axes[0]
-            out = w_self * x
-            if w_prev:
-                out = out + w_prev * shift(x, +1, ax)  # agent i-1 arrives at i
-            if w_next:
-                out = out + w_next * shift(x, -1, ax)
+            out = b_self * x
+            if use_prev:
+                out = out + b_prev * shift(x, +1, ax)  # agent i-1 arrives at i
+            if use_next:
+                out = out + b_next * shift(x, -1, ax)
             return out
 
         pod_ax, data_ax = axes
         dsize = mesh.shape[data_ax]
         didx = jax.lax.axis_index(data_ax)
-        out = w_self * x
+        out = b_self * x
         # intra-pod shifted copies (wrap inside the pod is wrong at the seam);
         # seam fix: data==0 must receive pod-1's last agent; data==dsize-1
         # must receive pod+1's first agent.
-        if w_prev:
+        if use_prev:
             prev_intra = shift(x, +1, data_ax)
             prev_cross = shift(prev_intra, +1, pod_ax)
-            out = out + w_prev * jnp.where(didx == 0, prev_cross, prev_intra)
-        if w_next:
+            out = out + b_prev * jnp.where(didx == 0, prev_cross, prev_intra)
+        if use_next:
             next_intra = shift(x, -1, data_ax)
             next_cross = shift(next_intra, -1, pod_ax)
-            out = out + w_next * jnp.where(didx == dsize - 1, next_cross,
+            out = out + b_next * jnp.where(didx == dsize - 1, next_cross,
                                            next_intra)
         return out
 
-    def mix(tree):
+    def mix(tree, t=None):
         if leaf_specs is not None:
             specs = leaf_specs
         else:
             specs = jax.tree_util.tree_map(
                 lambda l: P(axes if len(axes) > 1 else axes[0],
                             *([None] * (l.ndim - 1))), tree)
+        if time_varying:
+            if t is None:
+                raise ValueError("time-varying ring mixer needs the round "
+                                 "index (pass t=state.step)")
+            b = _entry(bands_j, t)  # (3,) replicated, traced per round
+            fn = shard_map(
+                lambda tr, bb: jax.tree_util.tree_map(
+                    lambda l: local(l, bb[0], bb[1], bb[2]), tr),
+                mesh=mesh, in_specs=(specs, P()), out_specs=specs,
+                check_vma=False)
+            return fn(tree, b)
         fn = shard_map(
-            lambda t: jax.tree_util.tree_map(local, t),
+            lambda tr: jax.tree_util.tree_map(
+                lambda l: local(l, w_self, w_prev, w_next), tr),
             mesh=mesh, in_specs=(specs,), out_specs=specs,
             check_vma=False)
         return fn(tree)
 
+    mix.time_varying = time_varying
     return mix
 
 
@@ -178,7 +264,7 @@ def make_ring_mixer(w: np.ndarray, mesh: Mesh,
 # Packed top-k mixer: all-gather (values, indices) only.
 # ---------------------------------------------------------------------------
 
-def make_packed_mixer(w: np.ndarray, mesh: Mesh, frac: float,
+def make_packed_mixer(w, mesh: Mesh, frac: float,
                       agent_axes: Sequence[str] = ("data",),
                       leaf_specs=None) -> MixFn:
     """W @ incr where only top-k (values, int32 indices) cross the wire.
@@ -190,9 +276,15 @@ def make_packed_mixer(w: np.ndarray, mesh: Mesh, frac: float,
     Each leaf may additionally be sharded over the 'model' axis; packing then
     selects top-k *per model shard* (block top-k across shards), keeping the
     collective strictly within the agent axes.
+
+    ``w`` may be a stacked (period, n, n) schedule table; the round's W is
+    gathered outside the shard_map body and enters it through the same
+    replicated-argument slot the static matrix already used, so the wire
+    payload (packed pairs only) is schedule-invariant.
     """
-    w_np = np.asarray(w, dtype=np.float32)
-    n = w_np.shape[0]
+    w_np, time_varying = _schedule_table(w)
+    w_np = w_np.astype(np.float32)
+    n = w_np.shape[-1]
     axes = tuple(agent_axes)
     gather_axis = axes if len(axes) > 1 else axes[0]
 
@@ -226,17 +318,25 @@ def make_packed_mixer(w: np.ndarray, mesh: Mesh, frac: float,
         out, _ = jax.lax.scan(add_agent, out, jnp.arange(n))
         return out.reshape(-1)[:d].reshape(x.shape)
 
-    def mix(tree):
-        w_rows = jnp.asarray(w_np)  # (n, n)
+    w_j = jnp.asarray(w_np)  # (n, n) or (period, n, n)
 
-        def run(t, w_all):
+    def mix(tree, t=None):
+        if time_varying:
+            if t is None:
+                raise ValueError("time-varying packed mixer needs the round "
+                                 "index (pass t=state.step)")
+            w_rows = _entry(w_j, t)  # (n, n), traced per round
+        else:
+            w_rows = w_j
+
+        def run(tr, w_all):
             if len(axes) == 1:
                 i = jax.lax.axis_index(axes[0])
             else:
                 i = (jax.lax.axis_index(axes[0]) * mesh.shape[axes[1]]
                      + jax.lax.axis_index(axes[1]))
             row = w_all[i]
-            return jax.tree_util.tree_map(lambda l: local(l, row), t)
+            return jax.tree_util.tree_map(lambda l: local(l, row), tr)
 
         if leaf_specs is not None:
             specs = leaf_specs
@@ -249,10 +349,12 @@ def make_packed_mixer(w: np.ndarray, mesh: Mesh, frac: float,
                        check_vma=False)
         return fn(tree, w_rows)
 
+    mix.time_varying = time_varying
     return mix
 
 
-def make_mixer(topology: Topology, mode: str = "dense",
+def make_mixer(topology: Union[Topology, TopologySchedule],
+               mode: str = "dense",
                mesh: Optional[Mesh] = None, frac: Optional[float] = None,
                agent_axes: Sequence[str] = ("data",),
                leaf_specs=None) -> MixFn:
@@ -260,24 +362,39 @@ def make_mixer(topology: Topology, mode: str = "dense",
     buffers (agent axis first, model-parallel dims preserved) -- required for
     ring/packed under a mesh whose leaves are also model-sharded.
 
+    ``topology`` may be a static :class:`Topology` or a time-varying
+    :class:`TopologySchedule`; a schedule hands the executor its stacked
+    ``(period, n, n)`` table, and the mixer is tagged ``time_varying`` so
+    callers (the comm-round engine, dsgd) route the round index to it via
+    :func:`apply_mixer`.
+
     The returned MixFn is tagged with ``wire_mode`` (and ``wire_frac`` for
     packed) so the comm-round engine can account per-round wire bytes
     without being told the gossip mode twice."""
+    schedule = topology if isinstance(topology, TopologySchedule) else None
+    w = schedule.ws if schedule is not None else topology.w
     if mode == "dense":
-        mix = make_dense_mixer(topology.w)
+        mix = make_dense_mixer(w)
     elif mode == "ring":
         if mesh is None:
             raise ValueError("ring gossip needs a mesh")
-        mix = make_ring_mixer(topology.w, mesh, agent_axes, leaf_specs)
+        if schedule is not None and not schedule.is_banded_ring():
+            raise ValueError(
+                f"schedule {schedule.kind!r} has rounds that are not "
+                "circulant ring bands; the ring wire format only supports "
+                "weight-varying ring schedules -- use dense or packed "
+                "gossip for churn/resampling schedules")
+        mix = make_ring_mixer(w, mesh, agent_axes, leaf_specs)
     elif mode == "packed":
         if mesh is None or frac is None:
             raise ValueError("packed gossip needs a mesh and a top-k fraction")
-        mix = make_packed_mixer(topology.w, mesh, frac, agent_axes,
+        mix = make_packed_mixer(w, mesh, frac, agent_axes,
                                 leaf_specs)
     else:
         raise ValueError(f"unknown gossip mode {mode!r}")
     mix.wire_mode = mode
     mix.wire_frac = frac
+    mix.schedule = schedule
     return mix
 
 

@@ -17,17 +17,29 @@ are a few hundred entries and feed compile-time constants).  Weight schemes:
 
 All functions are deterministic given a seed so that experiments are
 reproducible across processes/agents.
+
+Time-varying topologies: :class:`TopologySchedule` stacks a periodic window
+of mixing matrices ``W_0 .. W_{p-1}`` (each doubly stochastic) built by a
+generator -- graph rotation, per-round Erdos-Renyi resampling, agent
+dropout (churn), or straggler link failures.  Round ``t`` of training mixes
+with ``W_{t mod p}``.  Construction validates that the *union* of the
+window's graphs is connected and reports the joint spectral quantities of
+the window product ``(W_{p-1} - J) ... (W_0 - J)`` (with ``J = 11^T/n``),
+which is what consensus actually contracts by over one period.  The
+executors in :mod:`repro.core.gossip` index the stacked table with a traced
+round index, so one compiled program serves the whole schedule.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Literal, Optional
+from typing import Literal, Optional, Sequence, Tuple
 
 import numpy as np
 
 __all__ = [
     "Topology",
+    "TopologySchedule",
     "ring_graph",
     "torus_graph",
     "erdos_renyi_graph",
@@ -38,7 +50,14 @@ __all__ = [
     "build_adjacency",
     "mixing_matrix",
     "mixing_rate",
+    "spectral_gap",
     "make_topology",
+    "static_schedule",
+    "rotating_schedule",
+    "erdos_renyi_schedule",
+    "dropout_schedule",
+    "straggler_schedule",
+    "make_schedule",
 ]
 
 GraphKind = Literal["ring", "torus", "erdos_renyi", "complete", "star",
@@ -185,6 +204,23 @@ def mixing_rate(w: np.ndarray) -> float:
     return float(np.linalg.norm(m, ord=2))
 
 
+def spectral_gap(w: np.ndarray) -> float:
+    """1 - alpha: the gap PORTER's rates are parameterized by (Theorems 2-4).
+
+    For the symmetric mixing matrices built here this equals
+    ``1 - max |lambda_i(W - J)|`` (tests/test_topology_schedule.py pins the
+    agreement against dense ``numpy.linalg.eigvals``)."""
+    return 1.0 - mixing_rate(w)
+
+
+def _w_is_banded_ring(w: np.ndarray) -> bool:
+    n = w.shape[0]
+    off = w.copy()
+    np.fill_diagonal(off, 0.0)
+    allowed = ring_graph(n) > 0
+    return bool(np.all((np.abs(off) < 1e-12) | allowed))
+
+
 @dataclasses.dataclass(frozen=True)
 class Topology:
     """A communication graph with its mixing matrix and spectral summary."""
@@ -201,11 +237,7 @@ class Topology:
 
     def is_banded_ring(self) -> bool:
         """True when W only couples ring neighbours (enables ppermute gossip)."""
-        n = self.n
-        off = self.w.copy()
-        np.fill_diagonal(off, 0.0)
-        allowed = ring_graph(n) > 0
-        return bool(np.all((np.abs(off) < 1e-12) | allowed))
+        return _w_is_banded_ring(self.w)
 
 
 def make_topology(kind: GraphKind, n: int, weights: WeightKind = "metropolis",
@@ -216,3 +248,240 @@ def make_topology(kind: GraphKind, n: int, weights: WeightKind = "metropolis",
     assert np.allclose(w.sum(0), 1.0, atol=1e-9) and np.allclose(w.sum(1), 1.0,
                                                                  atol=1e-9)
     return Topology(kind=kind, n=n, adjacency=adj, w=w, alpha=mixing_rate(w))
+
+
+# ---------------------------------------------------------------------------
+# Time-varying topologies: periodic schedules of mixing matrices
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TopologySchedule:
+    """A periodic window of mixing matrices; round t mixes with W_{t mod p}.
+
+    ``ws`` is the stacked ``(period, n, n)`` table of doubly stochastic
+    matrices (host-side float64; the gossip executors push an f32 copy to
+    device and index it with a traced round counter).  ``alphas`` are the
+    per-round mixing rates -- an individual round of a churn schedule may
+    not mix at all (alpha_t = 1 when the round's graph is disconnected);
+    what the construction guarantees instead is that the *window* mixes:
+    the union graph is connected and ``joint_alpha < 1``.
+    """
+
+    kind: str
+    n: int
+    ws: np.ndarray            # (period, n, n)
+    adjacencies: np.ndarray   # (period, n, n), binary
+    alphas: Tuple[float, ...]
+    joint_alpha: float        # || (W_{p-1}-J) ... (W_0-J) ||_op
+
+    @property
+    def period(self) -> int:
+        return self.ws.shape[0]
+
+    @property
+    def alpha(self) -> float:
+        """Per-round geometric mixing rate: joint_alpha^(1/period).
+
+        This is the schedule's stand-in for Definition 1's alpha in the
+        paper's ``gamma = scale * (1 - alpha) * rho`` derivation; a
+        period-1 schedule reproduces the static topology's alpha exactly.
+        """
+        if self.period == 1:
+            return self.alphas[0]
+        return float(self.joint_alpha ** (1.0 / self.period))
+
+    @property
+    def spectral_gap(self) -> float:
+        return 1.0 - self.alpha
+
+    @property
+    def joint_spectral_gap(self) -> float:
+        return 1.0 - self.joint_alpha
+
+    def window_union(self) -> np.ndarray:
+        """Binary adjacency of the union graph over one period."""
+        return (self.adjacencies.sum(axis=0) > 0).astype(np.float64)
+
+    def is_banded_ring(self) -> bool:
+        """True when every round's W only couples ring neighbours (the
+        ppermute fast path then stays valid with traced band weights)."""
+        return all(_w_is_banded_ring(w) for w in self.ws)
+
+    def at(self, t: int) -> np.ndarray:
+        """Host-side W_t (numpy) for round ``t``."""
+        return self.ws[int(t) % self.period]
+
+
+def _finalize_schedule(kind: str, n: int, ws, adjs) -> TopologySchedule:
+    """Validate the window and compute its joint spectral summary."""
+    ws = np.stack([np.asarray(w, np.float64) for w in ws])
+    adjs = np.stack([np.asarray(a, np.float64) for a in adjs])
+    if ws.ndim != 3 or ws.shape[1] != n or ws.shape[2] != n:
+        raise ValueError(f"schedule table must be (period, {n}, {n}); got "
+                         f"{ws.shape}")
+    for t, w in enumerate(ws):
+        if not (np.allclose(w.sum(0), 1.0, atol=1e-9)
+                and np.allclose(w.sum(1), 1.0, atol=1e-9)):
+            raise ValueError(f"schedule round {t} is not doubly stochastic "
+                             "(Definition 1)")
+    union = (adjs.sum(axis=0) > 0).astype(np.float64)
+    if not _is_connected(union):
+        raise ValueError(
+            f"{kind!r} schedule: the union graph over the {ws.shape[0]}-round "
+            "window is disconnected -- some agent never talks to the rest, "
+            "so no amount of rounds reaches consensus.  Lower the churn "
+            "rate, lengthen the period, or densify the base graph.")
+    j = np.ones((n, n)) / n
+    b = np.eye(n)
+    for w in ws:
+        b = (w - j) @ b
+    joint = float(np.linalg.norm(b, ord=2))
+    if joint >= 1.0 - 1e-12:
+        raise ValueError(
+            f"{kind!r} schedule does not mix over its window "
+            f"(joint alpha = {joint:.6f} >= 1); the paper's consensus "
+            "stepsize would degenerate to 0")
+    return TopologySchedule(kind=kind, n=n, ws=ws, adjacencies=adjs,
+                            alphas=tuple(mixing_rate(w) for w in ws),
+                            joint_alpha=joint)
+
+
+def static_schedule(topology: Topology) -> TopologySchedule:
+    """Period-1 schedule: the static topology viewed through the
+    time-varying engine (tests pin trajectory parity against the baked
+    path)."""
+    sched = _finalize_schedule(f"static:{topology.kind}", topology.n,
+                               [topology.w], [topology.adjacency])
+    # keep alpha bit-identical to the static path (same mixing_rate call,
+    # but make the equality structural rather than numerical luck)
+    return dataclasses.replace(sched, alphas=(topology.alpha,))
+
+
+def rotating_schedule(kinds: Sequence[str], n: int,
+                      weights: WeightKind = "metropolis", p: float = 0.8,
+                      seed: int = 0) -> TopologySchedule:
+    """Rotate through a list of graphs, one per round.
+
+    Each entry is a graph kind, optionally with its own weight scheme as
+    ``kind/weights`` (e.g. ``ring/lazy``) -- rotating weight schemes on a
+    fixed ring keeps every round banded, which the ring wire format's
+    traced-band fast path exploits.
+    """
+    if not kinds:
+        raise ValueError("rotating schedule needs at least one graph kind")
+    ws, adjs = [], []
+    for entry in kinds:
+        kind, _, wk = str(entry).partition("/")
+        adj = build_adjacency(kind, n, p=p, seed=seed)
+        ws.append(mixing_matrix(adj, wk or weights))
+        adjs.append(adj)
+    return _finalize_schedule(f"rotate:{'+'.join(map(str, kinds))}", n, ws,
+                              adjs)
+
+
+def erdos_renyi_schedule(n: int, p: float = 0.8, period: int = 8,
+                         weights: WeightKind = "metropolis",
+                         seed: int = 0) -> TopologySchedule:
+    """Fresh connected ER(p) graph every round (per-round resampling)."""
+    if period < 1:
+        raise ValueError(f"period must be >= 1, got {period}")
+    ws, adjs = [], []
+    for t in range(period):
+        adj = erdos_renyi_graph(n, p, seed=seed * 10007 + t)
+        ws.append(mixing_matrix(adj, weights))
+        adjs.append(adj)
+    return _finalize_schedule(f"erdos_renyi:p={p}", n, ws, adjs)
+
+
+def _churn_weights(weights: WeightKind) -> WeightKind:
+    if weights == "best_constant":
+        raise ValueError(
+            "churn schedules cannot use best_constant weights: a round with "
+            "dropped agents/links has a disconnected Laplacian (lambda_2 = "
+            "0), so the closed form divides by zero -- use metropolis or "
+            "lazy")
+    return weights
+
+
+def _pruned_rounds(kind: str, n: int, base_adj: np.ndarray, period: int,
+                   weights: WeightKind, seed: int, prune_one):
+    """Sample a window of pruned copies of ``base_adj`` until the union is
+    connected; ``prune_one(rng, adj) -> adj_t`` drops agents or links."""
+    rng = np.random.default_rng(seed)
+    for _ in range(1000):
+        adjs = [prune_one(rng, base_adj) for _ in range(period)]
+        if _is_connected((np.sum(adjs, axis=0) > 0).astype(np.float64)):
+            ws = [mixing_matrix(a, weights) for a in adjs]
+            return _finalize_schedule(kind, n, ws, adjs)
+    raise RuntimeError(
+        f"could not sample a window-connected {kind!r} schedule in 1000 "
+        "tries; the churn rate is too high for this period/base graph")
+
+
+def dropout_schedule(n: int, rate: float = 0.2, period: int = 8,
+                     base: GraphKind = "ring",
+                     weights: WeightKind = "metropolis", p: float = 0.8,
+                     seed: int = 0) -> TopologySchedule:
+    """Agent churn: each round every agent is offline independently with
+    probability ``rate``.  An offline agent keeps only its self-loop (its
+    row of W is e_i -- it neither sends nor receives this round), and the
+    survivors re-derive Metropolis weights on the pruned graph, so every
+    round stays doubly stochastic."""
+    if not 0.0 <= rate < 1.0:
+        raise ValueError(f"dropout rate must be in [0, 1), got {rate}")
+    base_adj = build_adjacency(base, n, p=p, seed=seed)
+
+    def prune(rng, adj):
+        active = rng.random(n) >= rate
+        a = adj * active[:, None] * active[None, :]
+        return a
+
+    return _pruned_rounds(f"dropout:rate={rate},base={base}", n, base_adj,
+                          period, _churn_weights(weights), seed, prune)
+
+
+def straggler_schedule(n: int, rate: float = 0.2, period: int = 8,
+                       base: GraphKind = "ring",
+                       weights: WeightKind = "metropolis", p: float = 0.8,
+                       seed: int = 0) -> TopologySchedule:
+    """Straggler delay masks: each *link* of the base graph independently
+    misses the round's deadline with probability ``rate`` (the slow
+    neighbour's increment simply doesn't arrive; the drop is symmetric so
+    W_t stays doubly stochastic)."""
+    if not 0.0 <= rate < 1.0:
+        raise ValueError(f"straggler rate must be in [0, 1), got {rate}")
+    base_adj = build_adjacency(base, n, p=p, seed=seed)
+
+    def prune(rng, adj):
+        keep = np.triu(rng.random((n, n)) >= rate, 1)
+        keep = keep + keep.T
+        return adj * keep
+
+    return _pruned_rounds(f"straggler:rate={rate},base={base}", n, base_adj,
+                          period, _churn_weights(weights), seed, prune)
+
+
+_SCHEDULE_GENERATORS = {
+    "rotate": rotating_schedule,
+    "erdos_renyi": erdos_renyi_schedule,
+    "dropout": dropout_schedule,
+    "straggler": straggler_schedule,
+}
+
+
+def make_schedule(kind: str, n: int, **kwargs) -> TopologySchedule:
+    """Generator dispatch (mirrors :func:`build_adjacency` for graphs).
+
+    ``kind='static'`` expects ``topology=`` (a built :class:`Topology`);
+    the other generators take their own keyword knobs -- see each
+    generator's signature.
+    """
+    if kind == "static":
+        top = kwargs.pop("topology", None)
+        if top is None or kwargs:
+            raise ValueError("static schedule needs exactly topology=<Topology>")
+        return static_schedule(top)
+    if kind not in _SCHEDULE_GENERATORS:
+        raise ValueError(f"unknown schedule kind {kind!r}; have "
+                         f"{['static'] + sorted(_SCHEDULE_GENERATORS)}")
+    return _SCHEDULE_GENERATORS[kind](n=n, **kwargs)

@@ -177,10 +177,13 @@ def porter_step(
     g = jax.tree_util.tree_map(lambda l: l.astype(cfg.grad_dtype), g)
 
     # ---- comm rounds: track (lines 11-12) + step (lines 13-14) ------------
+    # the state's own step counter is the absolute round index: it advances
+    # inside the scan, survives checkpoints, and selects W_t when the mixer
+    # runs a time-varying topology schedule (static mixers ignore it)
     v, q_v, m_v = eng.track(k_cv, state.v, state.q_v, state.m_v, g,
-                            state.g_prev, cfg.gamma)
+                            state.g_prev, cfg.gamma, t=state.step)
     x, q_x, m_x = eng.step(k_cx, state.x, state.q_x, state.m_x, v,
-                           cfg.gamma, cfg.eta)
+                           cfg.gamma, cfg.eta, t=state.step)
 
     new_state = PorterState(x=x, v=v, q_x=q_x, q_v=q_v, g_prev=g,
                             m_x=m_x, m_v=m_v, step=state.step + 1)

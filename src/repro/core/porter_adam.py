@@ -82,7 +82,7 @@ def porter_adam_step(
     g = jax.tree_util.tree_map(lambda l: l.astype(cfg.grad_dtype), g)
 
     v, q_v, m_v = eng.track(k_cv, st.v, st.q_v, st.m_v, g, st.g_prev,
-                            cfg.gamma)
+                            cfg.gamma, t=st.step)
 
     # local Adam moments on the tracked gradient
     step_no = (st.step + 1).astype(jnp.float32)
@@ -97,7 +97,7 @@ def porter_adam_step(
 
     # parameter round: Algorithm 1 lines 13-14 with the preconditioned update
     x, q_x, m_x = eng.step(k_cx, st.x, st.q_x, st.m_x, update,
-                           cfg.gamma, cfg.eta)
+                           cfg.gamma, cfg.eta, t=st.step)
 
     new_base = PorterState(x=x, v=v, q_x=q_x, q_v=q_v, g_prev=g, m_x=m_x,
                            m_v=m_v, step=st.step + 1)

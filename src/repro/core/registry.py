@@ -84,6 +84,7 @@ class Algorithm:
     engine: Optional[Any] = None    # repro.core.comm_round.CommRound
     gamma: Optional[float] = None
     config: Optional[Any] = None    # e.g. the PorterConfig actually used
+    schedule: Optional[Any] = None  # repro.core.mixing.TopologySchedule
 
 
 # name -> (info, factory(spec, loss_fn, resolved) -> Algorithm)

@@ -15,6 +15,13 @@ and per-leaf dtypes are restored on the way out (the planes themselves are
 always f32, the kernels' accumulation dtype).  tests/test_comm_round.py pins
 this for odd, non-tile-aligned shapes.
 
+Time-varying topologies need no plumbing here: the comm-round engine mixes
+in the pytree domain *before* packing, so under a
+:class:`repro.core.mixing.TopologySchedule` the round's ``wc = W_t @ c``
+arrives at :func:`plane_apply` as ordinary data -- the plane layout, the
+kernel grids and the per-shard program are all schedule-invariant (one
+executable per chunk size, exactly as with a static graph).
+
 Per-shard planes: a single global plane concatenates leaves with *different*
 model-parallel PartitionSpecs, which XLA SPMD can only realize by
 all-gathering every buffer over the model axis on pack and resharding again

@@ -140,8 +140,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, variant: str,
             compressor: str = "block_top_k", remat: bool = True,
             local_compress: bool = False, buffer_dtype="f32",
             q_chunk=None, capacity: float = None, cache_dtype="bf16",
-            topology: str = "ring", comm_backend: str = "auto",
-            chunk: int = None):
+            topology: str = "ring", topology_schedule: str = None,
+            comm_backend: str = "auto", chunk: int = None):
     shape = SH.SHAPES[shape_name]
     cfg = get_config(arch)
     if capacity is not None:
@@ -160,9 +160,13 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, variant: str,
                 cfg, mesh, shape, variant=variant, gossip_mode=gossip,
                 compressor_name=compressor, remat=remat,
                 local_compress=local_compress,
-                topology_kind=topology, comm_backend=comm_backend,
+                topology_kind=topology,
+                topology_schedule=topology_schedule,
+                comm_backend=comm_backend,
                 buffer_dtype=jnp.bfloat16 if buffer_dtype == "bf16"
                 else jnp.float32)
+            if topology_schedule:
+                rec["topology_schedule"] = topology_schedule
             params_shapes = setup.state_shapes.x
             if chunk:
                 # scan-fused chunk runner: one executable covering `chunk`
@@ -296,6 +300,12 @@ def main():
     ap.add_argument("--topology", default="ring",
                     help="agent graph for train shapes (ring, exponential, "
                          "hypercube, erdos_renyi, complete, torus)")
+    ap.add_argument("--topology-schedule", default=None,
+                    help="time-varying topology spec for train shapes "
+                         "(e.g. 'dropout:rate=0.2,period=8'); the W_t "
+                         "table is a traced gather, so the lowered "
+                         "program is schedule-periodic-free (one "
+                         "executable)")
     ap.add_argument("--comm-backend", default="auto",
                     choices=["auto", "ref", "pallas"],
                     help="comm-round engine backend (pallas packs per-shard "
@@ -328,7 +338,9 @@ def main():
                 local_compress=args.local_compress,
                 buffer_dtype=args.buffer_dtype, q_chunk=args.q_chunk,
                 capacity=args.capacity, cache_dtype=args.cache_dtype,
-                topology=args.topology, comm_backend=args.comm_backend,
+                topology=args.topology,
+                topology_schedule=args.topology_schedule,
+                comm_backend=args.comm_backend,
                 chunk=args.chunk))
     n_ok = sum(r["ok"] for r in results)
     print(f"\n{n_ok}/{len(results)} combinations lowered+compiled OK")

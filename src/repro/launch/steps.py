@@ -122,6 +122,7 @@ def build_train_step(
     compressor_name: str = "block_top_k",
     frac: float = 0.05,
     topology_kind: str = "ring",
+    topology_schedule: Optional[str] = None,
     tau: float = 1.0,
     sigma_p: float = 0.0,
     buffer_dtype=jnp.float32,
@@ -136,6 +137,11 @@ def build_train_step(
     hyper-parameter choices: gamma = (1-alpha) * rho / 2, eta from O(1/L)
     heuristics (configurable by the caller for real runs; the dry-run only
     needs a lowerable program).
+
+    topology_schedule: optional time-varying topology spec string (see
+    ``repro.api.ExperimentSpec.topology_schedule``); the schedule table is
+    indexed by the state's step counter inside the compiled program, so the
+    chunked runner still lowers one executable per chunk size.
 
     comm_backend: backend of the comm-round engine -- 'auto' runs the fused
     ef_track/ef_step Pallas kernels on TPU and the jnp reference elsewhere;
@@ -154,6 +160,7 @@ def build_train_step(
     spec = api.ExperimentSpec(
         algo=api.VARIANT_TO_ALGO[variant],
         n_agents=n, topology=topology_kind, topology_weights="metropolis",
+        topology_schedule=topology_schedule,
         compressor=compressor_name, frac=frac, gossip_mode=gossip_mode,
         comm_backend=comm_backend, eta=1e-3, tau=tau, sigma_p=sigma_p,
         buffer_dtype=buffer_dtype)

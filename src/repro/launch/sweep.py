@@ -77,6 +77,19 @@ PERF_LADDERS = [
     # per-round lc_ring rung above
     ("rwkv6-7b", "train_4k", False,
      dict(local_compress=True, gossip="ring", chunk=8), "lc_ring_chunk8"),
+    # Churn: time-varying topology schedules through the same chunked
+    # program -- the W_t table is a traced gather, so these lower the same
+    # single executable as their static rungs.  The ring rung rotates band
+    # weights (the shift structure stays static); the dropout rung models
+    # agent churn on the 16-agent data axis.
+    ("rwkv6-7b", "train_4k", False,
+     dict(local_compress=True, gossip="ring",
+          topology_schedule="rotate:ring/metropolis+ring/lazy", chunk=8),
+     "lc_ring_sched_chunk8"),
+    ("rwkv6-7b", "train_4k", False,
+     dict(local_compress=True,
+          topology_schedule="dropout:rate=0.1,period=8", chunk=8),
+     "lc_churn_chunk8"),
 ]
 
 

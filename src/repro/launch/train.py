@@ -125,6 +125,13 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4, help="per-agent batch")
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--topology", default="ring")
+    ap.add_argument("--topology-schedule", default=None,
+                    help="time-varying topology generator spec (e.g. "
+                         "'dropout:rate=0.2,period=8', "
+                         "'rotate:ring+star+complete', "
+                         "'erdos_renyi:period=8'); round t mixes with "
+                         "W_{t mod period}, indexed inside the compiled "
+                         "chunk by the state's step counter")
     ap.add_argument("--compressor", default="top_k")
     ap.add_argument("--frac", type=float, default=0.05)
     ap.add_argument("--eta", type=float, default=3e-2)
@@ -166,8 +173,20 @@ def main(argv=None):
     sigma_p, acct, rounds_prev = resolve_privacy(info, args, start,
                                                  manifest_extra)
 
+    # a schedule is part of the trajectory: round t's W_t is indexed by the
+    # restored step counter, so resuming under a *different* schedule would
+    # silently splice two topologies into one run -- refuse, like tau
+    saved_sched = manifest_extra.get("topology_schedule")
+    if start > 0 and saved_sched != args.topology_schedule:
+        raise ValueError(
+            f"--resume with --topology-schedule={args.topology_schedule!r} "
+            f"but the checkpoint's {rounds_prev} rounds ran with "
+            f"{saved_sched!r}; resume with the recorded schedule (the step "
+            "counter continues its period mid-window)")
+
     spec = ExperimentSpec(algo=algo_name, n_agents=args.agents,
                           topology=args.topology,
+                          topology_schedule=args.topology_schedule,
                           compressor=args.compressor, frac=args.frac,
                           eta=args.eta, tau=args.tau, sigma_p=sigma_p)
     algo = build(spec, bundle.loss)
@@ -175,8 +194,15 @@ def main(argv=None):
     params, _ = bundle.init(jax.random.PRNGKey(0))
     n_params = sum(int(np.prod(p.shape))
                    for p in jax.tree_util.tree_leaves(params))
-    top_note = (f"{args.topology}, alpha={algo.topology.alpha:.3f}"
-                if algo.topology is not None else "server/client")
+    if algo.schedule is not None:
+        s = algo.schedule
+        top_note = (f"{s.kind}, period={s.period}, "
+                    f"joint gap={s.joint_spectral_gap:.3f}, "
+                    f"per-round alpha={s.alpha:.3f}")
+    elif algo.topology is not None:
+        top_note = f"{args.topology}, alpha={algo.topology.alpha:.3f}"
+    else:
+        top_note = "server/client"
     print(f"[model] {cfg.name}: {n_params/1e6:.2f}M params, "
           f"{args.agents} agents ({top_note}), "
           f"{args.compressor}(rho={args.frac}) algo={algo_name} "
@@ -202,6 +228,8 @@ def main(argv=None):
 
     def ckpt_extra(t_end: int) -> dict:
         extra = {"rounds_executed": rounds_prev + (t_end - start)}
+        if args.topology_schedule is not None:
+            extra["topology_schedule"] = args.topology_schedule
         if info.dp:
             extra.update(sigma_p=sigma_p, tau=args.tau,
                          epsilon=args.epsilon, delta=args.delta,

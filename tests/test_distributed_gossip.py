@@ -92,6 +92,38 @@ SCRIPT = textwrap.dedent("""
                                    np.asarray(dense[k]), rtol=1e-5,
                                    atol=1e-6)
     print("multipod-ring-ok")
+
+    # time-varying ring: a weight-rotating banded schedule keeps the
+    # two-ppermute structure and only traces the band weights -- each
+    # round must match the dense product with that round's W_t
+    from repro.core.mixing import rotating_schedule
+    sched = rotating_schedule(["ring/metropolis", "ring/lazy"], 4)
+    ring_t = make_ring_mixer(sched.ws, mesh, ("data",), leaf_specs=specs)
+    assert ring_t.time_varying
+    jit_ring_t = jax.jit(ring_t)
+    for t in range(3):
+        want = make_dense_mixer(sched.ws[t % 2])(tree)
+        got = jit_ring_t(tree_sharded, jnp.asarray(t, jnp.int32))
+        for k in tree:
+            np.testing.assert_allclose(np.asarray(got[k]),
+                                       np.asarray(want[k]), rtol=1e-5,
+                                       atol=1e-6)
+    print("ring-schedule-ok")
+
+    # time-varying packed: the round's W enters the shard_map through the
+    # same replicated slot; payload stays (values, indices) only
+    packed_t = make_packed_mixer(sched.ws, mesh, frac=0.25,
+                                 agent_axes=("data",), leaf_specs=specs)
+    jit_packed_t = jax.jit(packed_t)
+    for t in range(3):
+        want = make_dense_mixer(sched.ws[t % 2])(
+            jax.tree_util.tree_map(np.asarray, sparse))
+        got = jit_packed_t(sparse, jnp.asarray(t, jnp.int32))
+        for k in tree:
+            np.testing.assert_allclose(np.asarray(got[k]),
+                                       np.asarray(want[k]), rtol=1e-4,
+                                       atol=1e-5)
+    print("packed-schedule-ok")
 """)
 
 
@@ -101,5 +133,6 @@ def test_distributed_gossip_equivalence():
                          env={**__import__("os").environ,
                               "PYTHONPATH": "src"})
     assert res.returncode == 0, res.stderr[-3000:]
-    for marker in ("ring-ok", "packed-ok", "ring2-ok", "multipod-ring-ok"):
+    for marker in ("ring-ok", "packed-ok", "ring2-ok", "multipod-ring-ok",
+                   "ring-schedule-ok", "packed-schedule-ok"):
         assert marker in res.stdout, (marker, res.stdout, res.stderr[-2000:])

@@ -1,0 +1,389 @@
+"""Time-varying topology engine (repro.core.mixing.TopologySchedule).
+
+* Mixing regressions: ``mixing_rate``/``spectral_gap`` agree with dense
+  ``numpy.linalg.eigvals`` for every graph kind, and every
+  ``mixing_matrix`` output is doubly stochastic (star/hypercube included).
+* Schedule construction: every generator emits doubly stochastic rounds,
+  window-union connectivity is enforced, churn rounds isolate offline
+  agents as identity rows.
+* Engine: the executors index the schedule table by the traced round; the
+  comm-round engine mixes with W_t.
+* Parity (acceptance): a period-1 schedule reproduces the static
+  trajectory for ALL registered algorithms (atol 1e-5); resume mid-period
+  continues the schedule via the checkpointed step counter (manifest
+  round-trip); a churn schedule trains under chunking with a single
+  executable per chunk size.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (ExperimentSpec, build, build_engine, list_algorithms,
+                       resolve_schedule)
+from repro.core import mixing as MX
+from repro.core.gossip import apply_mixer, make_dense_mixer, make_mixer
+from repro.data import minibatch_source
+from repro.launch.runtime import make_runner
+
+N, D, M, B = 4, 16, 32, 3
+
+ALL_KINDS = ["ring", "torus", "erdos_renyi", "complete", "star",
+             "exponential", "hypercube"]
+
+
+# ---------------------------------------------------------------------------
+# mixing regressions (static path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+@pytest.mark.parametrize("weights", ["metropolis", "best_constant", "lazy"])
+def test_mixing_matrix_doubly_stochastic_all_kinds(kind, weights):
+    """Definition 1 for every (graph, weight) pair -- star and hypercube
+    had no coverage before this file."""
+    n = 8  # power of two: hypercube-compatible
+    top = MX.make_topology(kind, n, weights=weights, seed=2)
+    np.testing.assert_allclose(top.w.sum(0), 1.0, atol=1e-9)
+    np.testing.assert_allclose(top.w.sum(1), 1.0, atol=1e-9)
+    off = ~np.eye(n, dtype=bool)
+    assert np.all(np.abs(top.w[(top.adjacency == 0) & off]) < 1e-12)
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+@pytest.mark.parametrize("weights", ["metropolis", "best_constant"])
+def test_mixing_rate_matches_dense_eigvals(kind, weights):
+    """alpha = ||W - J||_op must equal max |eig(W - J)| from dense numpy
+    eigvals (W is symmetric for every weight scheme built here)."""
+    top = MX.make_topology(kind, 8, weights=weights, seed=2)
+    assert np.allclose(top.w, top.w.T, atol=1e-12)
+    j = np.ones((8, 8)) / 8
+    lam = np.max(np.abs(np.linalg.eigvals(top.w - j)))
+    np.testing.assert_allclose(MX.mixing_rate(top.w), lam, atol=1e-9)
+    np.testing.assert_allclose(MX.spectral_gap(top.w), 1.0 - lam, atol=1e-9)
+    np.testing.assert_allclose(top.spectral_gap, 1.0 - top.alpha, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# schedule construction
+# ---------------------------------------------------------------------------
+
+def _schedules():
+    return [
+        MX.static_schedule(MX.make_topology("ring", 6)),
+        MX.rotating_schedule(["ring", "star", "complete"], 6),
+        MX.rotating_schedule(["ring/metropolis", "ring/lazy"], 6),
+        MX.erdos_renyi_schedule(6, p=0.7, period=4, seed=1),
+        MX.dropout_schedule(6, rate=0.3, period=6, base="ring", seed=0),
+        MX.straggler_schedule(6, rate=0.4, period=6, base="erdos_renyi",
+                              p=0.7, seed=2),
+    ]
+
+
+@pytest.mark.parametrize("idx", range(6))
+def test_schedule_rounds_doubly_stochastic(idx):
+    sched = _schedules()[idx]
+    assert sched.ws.shape == (sched.period, sched.n, sched.n)
+    for t, w in enumerate(sched.ws):
+        np.testing.assert_allclose(w.sum(0), 1.0, atol=1e-9, err_msg=str(t))
+        np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-9, err_msg=str(t))
+        off = ~np.eye(sched.n, dtype=bool)
+        assert np.all(
+            np.abs(w[(sched.adjacencies[t] == 0) & off]) < 1e-12)
+    # the window mixes even when individual rounds do not
+    assert 0.0 <= sched.joint_alpha < 1.0
+    assert sched.joint_spectral_gap > 0.0
+    assert len(sched.alphas) == sched.period
+
+
+def test_static_schedule_alpha_exact():
+    top = MX.make_topology("erdos_renyi", 8, seed=3)
+    sched = MX.static_schedule(top)
+    assert sched.period == 1
+    assert sched.alpha == top.alpha          # bit-exact, not just close
+    assert sched.spectral_gap == top.spectral_gap
+    np.testing.assert_array_equal(sched.ws[0], top.w)
+
+
+def test_joint_alpha_submultiplicative():
+    sched = MX.rotating_schedule(["ring", "complete", "star"], 8)
+    assert sched.joint_alpha <= np.prod(sched.alphas) + 1e-9
+
+
+def test_dropout_offline_agents_are_identity_rows():
+    sched = MX.dropout_schedule(8, rate=0.4, period=6, base="ring", seed=0)
+    isolated = [(t, i) for t in range(sched.period) for i in range(8)
+                if sched.adjacencies[t][i].sum() == 0]
+    assert isolated, "seed 0 at rate 0.4 must drop someone"
+    for t, i in isolated:
+        np.testing.assert_array_equal(sched.ws[t][i], np.eye(8)[i])
+        np.testing.assert_array_equal(sched.ws[t][:, i], np.eye(8)[i])
+
+
+def test_window_union_connectivity_enforced():
+    # an agent that never talks within the window cannot reach consensus:
+    # at rate 0.98 some agent is offline in every round of a short window
+    # for (deterministically seeded) certain
+    with pytest.raises(RuntimeError, match="window-connected"):
+        MX.dropout_schedule(6, rate=0.98, period=1, seed=0)
+
+
+def test_ring_schedule_stays_banded():
+    sched = MX.rotating_schedule(["ring/metropolis", "ring/lazy"], 6)
+    assert sched.is_banded_ring()
+    er = MX.erdos_renyi_schedule(6, p=0.9, period=3, seed=4)
+    assert not er.is_banded_ring()
+    with pytest.raises(ValueError, match="ring"):
+        make_mixer(er, "ring", mesh=object())
+    # a pruned ring keeps the band but loses the circulant structure the
+    # two-ppermute executor needs; the band-weight extraction rejects it
+    churn = MX.dropout_schedule(6, rate=0.3, period=6, base="ring", seed=0)
+    assert churn.is_banded_ring()
+    with pytest.raises(ValueError, match="circulant"):
+        make_mixer(churn, "ring", mesh=object())
+
+
+def test_churn_rejects_best_constant_weights():
+    with pytest.raises(ValueError, match="best_constant"):
+        MX.dropout_schedule(6, rate=0.2, weights="best_constant")
+
+
+def test_schedule_spec_parsing():
+    spec = ExperimentSpec(n_agents=6, topology="ring")
+    assert resolve_schedule(spec) is None
+    s = resolve_schedule(spec.replace(topology_schedule="static"))
+    assert s.period == 1
+    s = resolve_schedule(
+        spec.replace(topology_schedule="rotate:ring+star+complete"))
+    assert s.period == 3
+    # bare kinds compose with key=value knobs
+    s = resolve_schedule(
+        spec.replace(topology_schedule="rotate:ring+star,weights=lazy"))
+    assert s.period == 2
+    assert np.diag(s.ws[0]).min() >= 0.5 - 1e-12  # lazy: W = (I + W_m)/2
+    s = resolve_schedule(
+        spec.replace(topology_schedule="rotate:kinds=ring+star,seed=3"))
+    assert s.period == 2
+    s = resolve_schedule(
+        spec.replace(topology_schedule="erdos_renyi:period=3,p=0.7"))
+    assert s.period == 3
+    s = resolve_schedule(
+        spec.replace(topology_schedule="dropout:rate=0.3,period=5"))
+    assert s.period == 5 and "rate=0.3" in s.kind
+    s = resolve_schedule(
+        spec.replace(topology_schedule="straggler:rate=0.2,period=4,"
+                                       "base=complete"))
+    assert s.period == 4 and "base=complete" in s.kind
+    with pytest.raises(ValueError, match="unknown topology schedule"):
+        resolve_schedule(spec.replace(topology_schedule="warp:speed=9"))
+    with pytest.raises(ValueError, match="unknown 'dropout' schedule keys"):
+        resolve_schedule(spec.replace(topology_schedule="dropout:rte=0.3"))
+    with pytest.raises(ValueError, match="key=value"):
+        resolve_schedule(spec.replace(topology_schedule="dropout:0.3"))
+
+
+# ---------------------------------------------------------------------------
+# executors index the table by the traced round
+# ---------------------------------------------------------------------------
+
+def test_dense_mixer_schedule_indexing():
+    sched = MX.rotating_schedule(["complete", "ring"], 6)
+    mixer = make_dense_mixer(sched.ws)
+    assert mixer.time_varying
+    tree = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(6, 5)),
+                             jnp.float32)}
+    for t in range(5):
+        want = sched.ws[t % 2].astype(np.float32) @ np.asarray(tree["w"])
+        got = apply_mixer(mixer, tree, jnp.asarray(t, jnp.int32))["w"]
+        np.testing.assert_allclose(np.asarray(got), want, atol=1e-5,
+                                   rtol=1e-5)
+    # a jitted traced index hits the same entries (the in-program gather)
+    jitted = jax.jit(lambda tr, t: mixer(tr, t))
+    got = jitted(tree, jnp.asarray(3, jnp.int32))["w"]
+    np.testing.assert_allclose(np.asarray(got),
+                               sched.ws[1].astype(np.float32)
+                               @ np.asarray(tree["w"]),
+                               atol=1e-5, rtol=1e-5)
+    with pytest.raises(ValueError, match="round index"):
+        apply_mixer(mixer, tree, None)
+    # static mixers ignore the index entirely
+    static = make_dense_mixer(sched.ws[0])
+    assert not static.time_varying
+    np.testing.assert_allclose(
+        np.asarray(apply_mixer(static, tree, 3)["w"]),
+        np.asarray(apply_mixer(static, tree)["w"]))
+
+
+def test_engine_exchange_mixes_with_round_matrix():
+    sched = MX.rotating_schedule(["complete", "ring"], N)
+    spec = ExperimentSpec(algo="porter-gc", n_agents=N, compressor="identity",
+                          topology_schedule="rotate:complete+ring", gamma=0.1)
+    eng = build_engine(spec, schedule=sched)
+    y = {"w": jnp.asarray(np.random.default_rng(1).normal(size=(N, 7)),
+                          jnp.float32)}
+    q = {"w": jnp.zeros((N, 7), jnp.float32)}
+    for t in (0, 1, 2, 7):
+        c, wc = eng.exchange(jax.random.PRNGKey(0), y, q,
+                             jnp.asarray(t, jnp.int32))
+        want = sched.ws[t % 2].astype(np.float32) @ np.asarray(y["w"])
+        np.testing.assert_allclose(np.asarray(wc["w"]), want, atol=1e-5,
+                                   rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# trajectory parity + resume (the runtime-facing contract)
+# ---------------------------------------------------------------------------
+
+def _loss_fn(params, batch):
+    f, l = batch
+    f, l = jnp.atleast_2d(f), jnp.atleast_1d(l)
+    logits = f @ params["w"] + params["b"]
+    return jnp.mean(jnp.log1p(jnp.exp(-(2 * l - 1) * logits)))
+
+
+def _problem(seed=0):
+    rng = np.random.default_rng(seed)
+    w_true = rng.normal(size=D)
+    f = rng.normal(size=(N, M, D)).astype(np.float32)
+    l = (f @ w_true > 0).astype(np.float32)
+    params0 = {"w": jnp.zeros(D), "b": jnp.zeros(())}
+    return params0, minibatch_source(f, l, B)
+
+
+def _spec(name, **kw):
+    base = dict(algo=name, n_agents=N, topology="ring", compressor="top_k",
+                frac=0.25, eta=0.1, tau=5.0,
+                sigma_p=0.01 if name in ("porter-dp", "dp-sgd", "soteriafl")
+                else 0.0)
+    base.update(kw)
+    return ExperimentSpec(**base)
+
+
+def _per_step_loop(algo, source, state, key, steps, start=0):
+    """Per-step loop with the runtime's key contract (split(fold_in(k, t)))."""
+    step = jax.jit(algo.step)
+    traj = []
+    for t in range(start, start + steps):
+        kb, ks = jax.random.split(jax.random.fold_in(key, t))
+        state, m = step(state, source(kb, jnp.asarray(t, jnp.int32)), ks)
+        traj.append(m)
+    return state, traj
+
+
+@pytest.mark.parametrize("name", sorted(list_algorithms()))
+def test_period1_schedule_matches_static_trajectory(name):
+    """Acceptance: topology_schedule='static' (the period-1 wrapper through
+    the time-varying engine) is trajectory-identical to the baked static
+    path for every registered algorithm."""
+    params0, source = _problem()
+    ref = build(_spec(name), _loss_fn)
+    got = build(_spec(name, topology_schedule="static"), _loss_fn)
+    if ref.info.decentralized:
+        assert got.schedule is not None and got.schedule.period == 1
+        assert got.gamma == ref.gamma  # same alpha -> same derivation
+    ref_state, ref_traj = _per_step_loop(
+        ref, source, ref.init(params0), jax.random.PRNGKey(7), 5)
+    got_state, got_traj = _per_step_loop(
+        got, source, got.init(params0), jax.random.PRNGKey(7), 5)
+    for rm, gm in zip(ref_traj, got_traj):
+        for k in rm:
+            np.testing.assert_allclose(np.asarray(gm[k]), np.asarray(rm[k]),
+                                       atol=1e-5, rtol=1e-5,
+                                       err_msg=f"{name}: metric {k!r}")
+    for rl, gl in zip(jax.tree_util.tree_leaves(ref_state),
+                      jax.tree_util.tree_leaves(got_state)):
+        np.testing.assert_allclose(np.asarray(gl), np.asarray(rl),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_schedule_actually_changes_the_trajectory():
+    """Guard against a silently ignored round index: a rotating schedule
+    must NOT reproduce the static path."""
+    params0, source = _problem()
+    ref = build(_spec("porter-gc"), _loss_fn)
+    got = build(_spec("porter-gc",
+                      topology_schedule="rotate:ring+complete"), _loss_fn)
+    _, ref_traj = _per_step_loop(ref, source, ref.init(params0),
+                                 jax.random.PRNGKey(7), 5)
+    _, got_traj = _per_step_loop(got, source, got.init(params0),
+                                 jax.random.PRNGKey(7), 5)
+    assert not np.allclose([r["consensus_x"] for r in ref_traj],
+                           [g["consensus_x"] for g in got_traj])
+
+
+def test_resume_mid_period_continues_schedule(tmp_path):
+    """Round t's W comes from the *checkpointed* step counter, so a
+    restart mid-period picks the window up where it left off (and the
+    manifest records which schedule the rounds ran under)."""
+    from repro.launch.checkpoint import (read_manifest, restore_state,
+                                         save_state)
+
+    sched_str = "rotate:ring+complete+star"   # period 3; 4 rounds lands mid
+    params0, source = _problem()
+    spec = _spec("porter-gc", topology_schedule=sched_str)
+    algo = build(spec, _loss_fn)
+
+    ref_state, _ = _per_step_loop(algo, source, algo.init(params0),
+                                  jax.random.PRNGKey(7), 8)
+
+    runner = make_runner(algo, source, 4)
+    state, _, _ = runner(algo.init(params0), jax.random.PRNGKey(7), 0)
+    save_state(tmp_path, state, step=4,
+               extra={"topology_schedule": sched_str})
+    man = read_manifest(tmp_path)
+    assert man["extra"]["topology_schedule"] == sched_str
+    assert man["step"] == 4
+
+    # a fresh process: rebuild from the same spec, restore, continue
+    algo2 = build(spec, _loss_fn)
+    restored = restore_state(tmp_path, like=algo2.init(params0))
+    assert int(restored.step) == 4   # 4 mod 3 = 1: mid-window
+    state2, _, _ = make_runner(algo2, source, 4)(
+        restored, jax.random.PRNGKey(7), 4)
+    for rl, gl in zip(jax.tree_util.tree_leaves(ref_state),
+                      jax.tree_util.tree_leaves(state2)):
+        np.testing.assert_allclose(np.asarray(gl), np.asarray(rl),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_churn_schedule_single_executable_under_chunk():
+    """Acceptance: a churn schedule trains under the scan-fused runtime
+    with ONE executable per chunk size -- W_t is a traced gather, never a
+    recompile."""
+    params0, source = _problem()
+    spec = _spec("porter-gc",
+                 topology_schedule="dropout:rate=0.25,period=4")
+    algo = build(spec, _loss_fn)
+    runner = make_runner(algo, source, 4)
+    state = algo.init(params0)
+    key = jax.random.PRNGKey(0)
+    losses = []
+    for start in (0, 4, 8):   # crosses the period boundary twice
+        state, key, m = runner(state, key, start)
+        losses.extend(np.asarray(m["loss"]).tolist())
+    assert runner.cache_size() in (None, 1)
+    assert np.all(np.isfinite(losses))
+    assert losses[-1] < losses[0]  # the smoke problem is easy
+
+
+def test_dsgd_uncompressed_schedule_round_trip():
+    """The uncompressed baseline threads the round index through
+    apply_mixer (no engine): one gossip step with W_t must match numpy."""
+    sched = MX.rotating_schedule(["complete", "ring"], N)
+    spec = _spec("dsgd", topology_schedule="rotate:complete+ring",
+                 tau=None, eta=0.0, gamma=1.0)
+    algo = build(spec, _loss_fn)
+    params0, source = _problem()
+    state = algo.init(params0)
+    x0 = np.asarray(state.x["w"])
+    batch = source(jax.random.PRNGKey(0), jnp.asarray(0))
+    state1, _ = jax.jit(algo.step)(state, batch, jax.random.PRNGKey(1))
+    # eta=0, gamma=1: x1 = W_0 x0 exactly
+    np.testing.assert_allclose(np.asarray(state1.x["w"]),
+                               sched.ws[0].astype(np.float32) @ x0,
+                               atol=1e-5, rtol=1e-5)
+    state2, _ = jax.jit(algo.step)(state1, batch, jax.random.PRNGKey(2))
+    np.testing.assert_allclose(
+        np.asarray(state2.x["w"]),
+        sched.ws[1].astype(np.float32) @ np.asarray(state1.x["w"]),
+        atol=1e-5, rtol=1e-5)
