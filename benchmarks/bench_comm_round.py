@@ -18,10 +18,20 @@ planes path (pack/unpack inside shard_map; the layout the launch layer
 uses for tensor-parallel training).  Off-TPU this forces
 --xla_force_host_platform_device_count=8 host devices.
 
+``--achieved-bytes`` adds the bit-packed wire-format audit: engines built
+with ``wire='packed_bits'`` on a 4-agent mesh, asserting the *measured*
+shipped-buffer nbytes (``CommRound.wire_bytes``, via jax.eval_shape over
+the codec) equals the analytic layout model (``wire_bytes_model``) for the
+ring and packed collectives with both registered formats (``topk_bits``,
+``qsgd_bits``), and reporting the dense-f32-vs-packed bandwidth ratio plus
+the overlap-vs-sequential round time.  Every invocation also writes the
+perf-trajectory baseline ``BENCH_comm.json`` at the repo root.
+
 Usage:
     PYTHONPATH=src python benchmarks/bench_comm_round.py            # full
     PYTHONPATH=src python benchmarks/bench_comm_round.py --smoke    # CI
     PYTHONPATH=src python benchmarks/bench_comm_round.py --smoke --sharded
+    PYTHONPATH=src python benchmarks/bench_comm_round.py --smoke --achieved-bytes
 
 Rows: compressor,backend,us_per_round,bytes_per_round
 """
@@ -29,6 +39,7 @@ Rows: compressor,backend,us_per_round,bytes_per_round
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 from pathlib import Path
@@ -37,7 +48,7 @@ if __package__ in (None, ""):  # allow `python benchmarks/bench_comm_round.py`
     sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 # must precede the jax import: device count locks at first backend init
-if "--sharded" in sys.argv:
+if "--sharded" in sys.argv or "--achieved-bytes" in sys.argv:
     from repro._env import ensure_host_device_count
     ensure_host_device_count(8)
 
@@ -178,12 +189,156 @@ def bench_sharded(d: int, frac: float, reps: int):
     return rows
 
 
+def bench_achieved_bytes(reps: int):
+    """Bit-packed wire-format audit on a 4-agent mesh.
+
+    For every (format x collective) pair the engine is built exactly as the
+    launch layer builds it (``wire='packed_bits'`` through the api facade)
+    and three numbers are pinned:
+
+      measured   CommRound.wire_bytes      -- nbytes of the shipped buffers
+                                              (traced shapes of codec.pack)
+      model      CommRound.wire_bytes_model -- windows x layout constants
+      dense      the same collective shipping dense f32 planes
+
+    measured == model is asserted exactly (the PR-3 drift-bug class);
+    the acceptance ratios count *payload* bytes (per-window f32 scales are
+    overhead, reported separately): >= 4x for top-k frac=0.25, >= 8x for
+    qsgd with the 4-bit (s=16 signed alphabet) code words.  The buffer
+    sizes use a window-aligned d -- padding is a property of the problem
+    shape, not of the wire format, so the audit excludes it.
+
+    Also times the ring/topk engine sequential vs overlapped (both
+    exchanges issued before either fused update) and asserts the two
+    orderings are bit-exact.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core import wire_formats as WF
+
+    n = 4
+    if len(jax.devices()) < n:
+        print(f"# achieved-bytes audit skipped: needs {n} devices, have "
+              f"{len(jax.devices())} (run --achieved-bytes from the CLI so "
+              "the host-device flag is set before jax init)")
+        return None
+    mesh = jax.make_mesh((n,), ("data",))
+    windows = 8
+    d = windows * WF.PACK_BLOCK                     # window-aligned
+    specs = {"w": P("data", None)}
+    sh = NamedSharding(mesh, specs["w"])
+    key = jax.random.PRNGKey(0)
+
+    def tree(k):
+        return {"w": jax.device_put(jax.random.normal(k, (n, d)), sh)}
+
+    y, q, m, g, gp = (tree(k) for k in jax.random.split(key, 5))
+    gamma, eta = 0.1, 0.05
+    interpret = None if jax.default_backend() == "tpu" else True
+    base = ExperimentSpec(n_agents=n, topology="ring",
+                          topology_weights="metropolis", wire="packed_bits",
+                          comm_backend="ref", interpret=interpret)
+    cases = [
+        ("topk_bits", "ring",
+         dict(compressor="block_top_k", frac=0.25, gossip_mode="ring")),
+        ("topk_bits", "packed",
+         dict(compressor="block_top_k", frac=0.25, gossip_mode="packed")),
+        ("qsgd_bits", "ring",
+         dict(compressor="qsgd", compressor_kwargs={"levels": 7},
+              gossip_mode="ring")),
+        ("qsgd_bits", "packed",
+         dict(compressor="qsgd", compressor_kwargs={"levels": 7},
+              gossip_mode="packed")),
+    ]
+    print(f"# achieved-bytes audit: n_agents={n} d={d} "
+          f"(window-aligned, {windows} windows)")
+    print("format,mode,us_per_round,measured_bytes,model_bytes,"
+          "dense_bytes,payload_ratio,total_ratio")
+    out = {"n_agents": n, "d": d, "cases": []}
+    engines = {}
+    for fmt, mode, kw in cases:
+        eng = build_engine(base.replace(**kw), mesh=mesh, leaf_specs=specs)
+        engines[(fmt, mode)] = eng
+        measured = eng.wire_bytes(y)
+        model = eng.wire_bytes_model(y)
+        assert measured == model, \
+            f"{fmt}/{mode}: measured {measured} != model {model}"
+        codec = eng.mixer.wire_codec
+        mult = (1.0 if n == 2 else 2.0) if mode == "ring" else float(n)
+        dense = mult * d * 4.0                       # dense f32 planes
+        overhead = mult * windows * codec.overhead_bytes_per_window
+        payload_ratio = dense / (measured - overhead)
+        total_ratio = dense / measured
+
+        @jax.jit
+        def one_round(key, y, q, m, g, gp, eng=eng):
+            k1, k2 = jax.random.split(key)
+            v, q2, m2 = eng.track(k1, y, q, m, g, gp, gamma)
+            x, q3, m3 = eng.step(k2, y, q2, m2, v, gamma, eta)
+            return x, v, q3, m3
+
+        us = timed_us(one_round, key, y, q, m, g, gp, reps=reps)
+        print(f"{fmt},{mode},{us:.1f},{measured:.0f},{model:.0f},"
+              f"{dense:.0f},{payload_ratio:.3f},{total_ratio:.3f}",
+              flush=True)
+        out["cases"].append(dict(
+            format=fmt, mode=mode, us_per_round=us,
+            measured_bytes=measured, model_bytes=model, dense_bytes=dense,
+            payload_ratio=payload_ratio, total_ratio=total_ratio))
+        floor = 4.0 if fmt == "topk_bits" else 8.0
+        assert payload_ratio >= floor, \
+            f"{fmt}/{mode}: payload ratio {payload_ratio:.3f} < {floor}x"
+
+    # ---- overlap: both exchanges in flight before either fused update ----
+    # PORTER's two rounds run over *independent* buffer pairs -- (v, q_v)
+    # and (x, q_x) -- which is exactly why the reorder is bit-exact: the
+    # x-side exchange reads nothing the track update writes
+    eng = engines[("topk_bits", "ring")]
+    q_x, m_x = tree(jax.random.PRNGKey(7)), tree(jax.random.PRNGKey(8))
+
+    @jax.jit
+    def seq_round(key, y, q, m, g, gp, q_x, m_x):
+        k1, k2 = jax.random.split(key)
+        v, q2, m2 = eng.track(k1, y, q, m, g, gp, gamma)
+        x, q3, m3 = eng.step(k2, y, q_x, m_x, v, gamma, eta)
+        return x, v, q2, q3, m2, m3
+
+    @jax.jit
+    def ovl_round(key, y, q, m, g, gp, q_x, m_x):
+        k1, k2 = jax.random.split(key)
+        c_v, wc_v = eng.exchange(k1, y, q)
+        c_x, wc_x = eng.exchange(k2, y, q_x)
+        v, q2, m2 = eng.track_update(c_v, wc_v, y, q, m, g, gp, gamma)
+        x, q3, m3 = eng.step_update(c_x, wc_x, y, q_x, m_x, v, gamma, eta)
+        return x, v, q2, q3, m2, m3
+
+    a = seq_round(key, y, q, m, g, gp, q_x, m_x)
+    b = ovl_round(key, y, q, m, g, gp, q_x, m_x)
+    bitexact = all(
+        bool(jnp.all(la == lb))
+        for la, lb in zip(jax.tree_util.tree_leaves(a),
+                          jax.tree_util.tree_leaves(b)))
+    assert bitexact, "overlap ordering is not bit-exact to sequential"
+    seq_us = timed_us(seq_round, key, y, q, m, g, gp, q_x, m_x, reps=reps)
+    ovl_us = timed_us(ovl_round, key, y, q, m, g, gp, q_x, m_x, reps=reps)
+    eff = seq_us / ovl_us
+    print(f"# overlap(topk_bits/ring): seq={seq_us:.1f}us ovl={ovl_us:.1f}us "
+          f"efficiency={eff:.2f}x bitexact={bitexact} "
+          "(overlap is a latency-hiding number on TPU; CPU shows parity)")
+    out["overlap"] = dict(format="topk_bits", mode="ring", seq_us=seq_us,
+                          ovl_us=ovl_us, efficiency=eff, bitexact=bitexact)
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small sizes for CPU CI")
     ap.add_argument("--sharded", action="store_true",
                     help="add the model-sharded (per-shard planes) case")
+    ap.add_argument("--achieved-bytes", action="store_true",
+                    help="audit measured vs modeled bit-packed wire bytes "
+                         "(ring/packed x topk_bits/qsgd_bits) + overlap")
     ap.add_argument("--agents", type=int, default=None)
     ap.add_argument("--d", type=int, default=None,
                     help="per-agent parameter count")
@@ -198,9 +353,27 @@ def main(argv=None):
     n = args.agents or n
     d = args.d or d
     reps = args.reps or reps
-    bench(n, d, args.frac, reps)
+    rows = bench(n, d, args.frac, reps)
+    record = {
+        "bench": "comm_round", "device_backend": jax.default_backend(),
+        "smoke": bool(args.smoke), "n_agents": n, "d": d,
+        "frac": args.frac, "reps": reps,
+        "rounds": [dict(compressor=l, backend=b, us_per_round=us,
+                        steps_per_s=1e6 / us, bytes_per_round=w)
+                   for (l, b, us, w) in rows],
+    }
     if args.sharded:
-        bench_sharded(d, args.frac, reps)
+        srows = bench_sharded(d, args.frac, reps)
+        record["sharded"] = [
+            dict(compressor=l, backend=b, us_per_round=us,
+                 steps_per_s=1e6 / us, bytes_per_round=w)
+            for (l, b, us, w) in srows]
+    if args.achieved_bytes:
+        record["achieved_bytes"] = bench_achieved_bytes(reps)
+    # perf-trajectory baseline: future PRs diff against the checked-in copy
+    out = Path(__file__).resolve().parents[1] / "BENCH_comm.json"
+    out.write_text(json.dumps(record, indent=2) + "\n")
+    print(f"# wrote {out}")
     return 0
 
 

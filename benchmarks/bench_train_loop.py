@@ -137,7 +137,37 @@ def bench(task: str, steps: int):
             continue
         us = _chunked(algo, source, params0, steps, chunk) * 1e6
         rows.append((f"chunk{chunk}", us, 1e6 / us))
-    return rows
+    return rows, (spec, loss_fn, params0, source)
+
+
+def bench_overlap(spec, loss_fn, params0, source, steps, chunk=8):
+    """CommRound(overlap=True) vs sequential through the chunked runner.
+
+    Overlap issues both comm rounds' collectives before either fused
+    update; it is bit-exact by construction, which is asserted here over a
+    short same-key run before timing.  On CPU the efficiency is ~1.0 (XLA
+    schedules both orders alike); on TPU it is the latency-hiding number.
+    """
+    algos = {ovl: build(spec.replace(overlap=ovl), loss_fn)
+             for ovl in (False, True)}
+    finals = {}
+    for ovl, algo in algos.items():
+        state = algo.init(params0)
+        runner = make_runner(algo, source, chunk)
+        key = jax.random.PRNGKey(0)
+        for t in range(0, 2 * chunk, chunk):
+            state, key, _ = runner(state, key, t)
+        finals[ovl] = state
+    bitexact = all(
+        bool(jnp.all(a == b))
+        for a, b in zip(jax.tree_util.tree_leaves(finals[False]),
+                        jax.tree_util.tree_leaves(finals[True])))
+    assert bitexact, "overlap=True diverged from the sequential order"
+    us = {ovl: _chunked(algo, source, params0, steps, chunk) * 1e6
+          for ovl, algo in algos.items()}
+    return {"chunk": chunk, "seq_us_per_step": us[False],
+            "overlap_us_per_step": us[True],
+            "efficiency": us[False] / us[True], "bitexact": bitexact}
 
 
 def main():
@@ -153,7 +183,7 @@ def main():
     lcm = math.lcm(*CHUNKS)
     steps = max(steps + (-steps) % lcm, lcm)
 
-    rows = bench(args.task, steps)
+    rows, (spec, loss_fn, params0, source) = bench(args.task, steps)
     print("name,us_per_step,derived")
     out = []
     base = rows[0][2]
@@ -162,9 +192,21 @@ def main():
               f"steps_per_s={sps:.1f};speedup_vs_per_step={sps/base:.2f}x")
         out.append({"task": args.task, "mode": mode, "us_per_step": us,
                     "steps_per_s": sps, "speedup": sps / base})
+    ovl = bench_overlap(spec, loss_fn, params0, source, steps)
+    print(f"train_loop/{args.task}/overlap,"
+          f"{ovl['overlap_us_per_step']:.1f},"
+          f"efficiency_vs_seq={ovl['efficiency']:.2f}x;"
+          f"bitexact={ovl['bitexact']}")
     art = Path("artifacts/bench")
     art.mkdir(parents=True, exist_ok=True)
     (art / "train_loop.json").write_text(json.dumps(out, indent=2))
+    # perf-trajectory baseline: future PRs diff against the checked-in copy
+    record = {"bench": "train_loop", "task": args.task, "steps": steps,
+              "smoke": bool(args.smoke), "rows": out, "overlap": ovl}
+    root = Path(__file__).resolve().parents[1]
+    (root / "BENCH_train.json").write_text(
+        json.dumps(record, indent=2) + "\n")
+    print(f"# wrote {root / 'BENCH_train.json'}")
     # acceptance: scan fusion must beat the dispatch-bound per-step loop
     chunk8 = next(r for r in out if r["mode"] == "chunk8")
     assert chunk8["speedup"] > 1.0, \

@@ -64,6 +64,7 @@ from repro.core.beer import beer_config
 from repro.core.comm_round import CommRound
 from repro.core.compression import Compressor, make_compressor
 from repro.core import mixing as MX
+from repro.core import wire_formats
 from repro.core.gossip import MixFn, make_mixer
 from repro.core.mixing import Topology, TopologySchedule, make_topology
 from repro.core.porter import (PorterConfig, PorterState, porter_init,
@@ -82,6 +83,7 @@ __all__ = [
     "resolve_topology",
     "resolve_schedule",
     "resolve_compressor",
+    "resolve_wire_format",
     "resolve_gamma",
     "Algorithm",
     "AlgorithmInfo",
@@ -142,6 +144,15 @@ class ExperimentSpec:
         default_factory=dict)        # extras, e.g. block=, rank=, bits=
     # wire format / engine backend
     gossip_mode: str = "dense"       # 'dense' | 'ring' | 'packed'
+    # 'dense' ships the dense emulation; 'packed_bits' fuses compression
+    # with bit-packing so only compact buffers cross the wire (bf16+u16
+    # top-k segments, uint32 QSGD code words -- core.wire_formats).  Needs
+    # gossip_mode 'ring'/'packed' and a top_k/block_top_k/qsgd compressor.
+    wire: str = "dense"              # 'dense' | 'packed_bits'
+    # issue both PORTER comm rounds before either fused update, so the
+    # collectives overlap the other round's local compute; bit-exact to the
+    # sequential order (CommRound.overlap).  Single-round algos ignore it.
+    overlap: bool = False
     comm_backend: str = "auto"       # 'auto' | 'pallas' | 'ref'
     interpret: Optional[bool] = None
     # stepsizes
@@ -279,6 +290,37 @@ def resolve_compressor(spec: ExperimentSpec) -> Compressor:
     return make_compressor(spec.compressor, **kwargs)
 
 
+def resolve_wire_format(spec: ExperimentSpec):
+    """``spec.wire`` -> a :class:`repro.core.wire_formats.WireFormat` or None.
+
+    'packed_bits' registers the compressor family's bit-packed layout
+    (top_k / block_top_k -> bf16+u16 ``topk_bits``; qsgd -> uint32
+    ``qsgd_bits`` with the spec's ``levels``) and routes pack/unpack through
+    the fused Pallas kernels whenever the comm backend resolves to pallas.
+    """
+    if spec.wire == "dense":
+        return None
+    if spec.wire != "packed_bits":
+        raise ValueError(f"unknown wire format {spec.wire!r}; have "
+                         f"{wire_formats.WIRE_MODES}")
+    if spec.gossip_mode not in ("ring", "packed"):
+        raise ValueError(
+            "wire='packed_bits' needs gossip_mode 'ring' or 'packed' "
+            f"(got {spec.gossip_mode!r}); dense gossip ships the dense "
+            "emulation by definition")
+    use_pallas = (spec.comm_backend == "pallas"
+                  or (spec.comm_backend == "auto"
+                      and jax.default_backend() == "tpu"))
+    if spec.compressor == "qsgd":
+        levels = int(spec.compressor_kwargs.get("levels", 16))
+        return wire_formats.make_wire_format(
+            "qsgd", levels=levels, use_pallas=use_pallas,
+            interpret=spec.interpret)
+    return wire_formats.make_wire_format(
+        spec.compressor, frac=spec.frac, use_pallas=use_pallas,
+        interpret=spec.interpret)
+
+
 def resolve_gamma(spec: ExperimentSpec, topology: Topology,
                   compressor: Compressor,
                   schedule: Optional[TopologySchedule] = None) -> float:
@@ -329,13 +371,21 @@ def build_engine(spec: ExperimentSpec, *,
     top = resolve_topology(spec) if topology is None else topology
     sched = resolve_schedule(spec, top) if schedule is None else schedule
     comp = resolve_compressor(spec)
+    codec = resolve_wire_format(spec)
+    if codec is not None and compress_fn is not None:
+        raise ValueError(
+            "wire='packed_bits' fuses (shard-local) compression with "
+            "packing inside the codec executor; a compress_fn override "
+            "would be silently ignored -- drop it (launch.steps skips the "
+            "shard-local compressor automatically under packed_bits)")
     mixer = make_mixer(sched if sched is not None else top,
                        spec.gossip_mode, mesh=mesh, frac=spec.frac,
-                       agent_axes=agent_axes, leaf_specs=leaf_specs)
+                       agent_axes=agent_axes, leaf_specs=leaf_specs,
+                       codec=codec)
     return CommRound(compressor=comp, mixer=mixer, compress_fn=compress_fn,
                      backend=spec.comm_backend, interpret=spec.interpret,
                      mesh=mesh, leaf_specs=leaf_specs,
-                     agent_axes=tuple(agent_axes))
+                     agent_axes=tuple(agent_axes), overlap=spec.overlap)
 
 
 def build(spec: ExperimentSpec, loss_fn, *,

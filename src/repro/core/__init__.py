@@ -29,7 +29,8 @@ as thin, stable wrappers for tests and power users.
 """
 
 from . import (baselines, beer, clipping, comm_round, compression, gossip,
-               mixing, porter, privacy, registry)
+               mixing, porter, privacy, registry, wire_formats)
+
 
 from .clipping import piecewise_clip, smooth_clip, tree_clip, tree_global_norm
 from .comm_round import CommRound, resolve_engine
@@ -43,10 +44,12 @@ from .porter import (PorterConfig, PorterState, average_params,
 from .privacy import MomentsAccountant, calibrate_sigma, ldp_epsilon, phi_m
 from .registry import (Algorithm, AlgorithmInfo, algorithm_info,
                        list_algorithms, register_algorithm)
+from .wire_formats import WireFormat, make_wire_format
 
 __all__ = [
     "baselines", "beer", "clipping", "comm_round", "compression", "gossip",
-    "mixing", "porter", "privacy", "registry",
+    "mixing", "porter", "privacy", "registry", "wire_formats",
+    "WireFormat", "make_wire_format",
     "CommRound", "resolve_engine", "Compressor", "make_compressor",
     "Topology", "TopologySchedule", "make_topology", "make_schedule",
     "spectral_gap", "apply_mixer",

@@ -64,6 +64,7 @@ from jax.sharding import PartitionSpec as P
 
 from ..kernels import flatten as FL
 from ..kernels import ops
+from . import wire_formats as WF
 from .compression import Compressor
 from .gossip import PACK_BLOCK, MixFn, apply_mixer, gossip_wire_bytes
 
@@ -147,6 +148,27 @@ class CommRound:
         ``repro.api.build_engine`` plumbs them from the launch layer).  When
         ``leaf_specs`` shard a non-agent mesh axis, the pallas path packs
         per-shard planes inside ``shard_map`` instead of one global plane.
+      overlap: comm/compute overlap.  The PORTER family runs *two* comm
+        rounds per step whose exchanges are data-independent (the x-side
+        inputs ``(x, q_x)`` are untouched by the v-side update); with
+        ``overlap=True`` the algorithm steps issue both compress+collective
+        pairs *before* either fused update, so XLA's async collectives run
+        while the other round's local compute proceeds.  Every intermediate
+        value is identical to the sequential order, so the flag is bit-exact
+        by construction (tests pin this for all registered algorithms);
+        single-round algorithms ignore it.
+
+    Wire formats: when the mixer was built with a
+    :class:`repro.core.wire_formats.WireFormat` codec (``spec.wire =
+    "packed_bits"`` through the facade), :meth:`exchange` routes through
+    ``mixer.exchange`` -- compression is *fused with packing* and only
+    bit-packed buffers cross the wire; the locally applied increment is the
+    round-trip ``c = unpack(pack(y - q))``, which keeps the ``m = W q``
+    invariant exact.  :meth:`wire_bytes` then reports the **measured** nbytes
+    of the shipped buffers (shapes traced with ``jax.eval_shape`` on the
+    codec itself) and :meth:`wire_bytes_model` keeps the analytic byte model
+    as a cross-check (``bench_comm_round.py --achieved-bytes`` asserts they
+    agree).
     """
 
     compressor: Compressor
@@ -157,6 +179,7 @@ class CommRound:
     mesh: Any = None
     leaf_specs: Any = None
     agent_axes: Sequence[str] = ("data",)
+    overlap: bool = False
 
     def __post_init__(self):
         if self.backend not in ("pallas", "ref", "auto"):
@@ -197,8 +220,15 @@ class CommRound:
         mixer runs a time-varying topology schedule, ignored otherwise; the
         fused plane kernels downstream consume ``wc`` as data, so the whole
         pallas path is schedule-agnostic.
+
+        With a codec mixer (bit-packed wire format) the compression step is
+        fused into the executor: pack once, apply the round-tripped
+        increment locally, ship only the packed buffers.
         """
-        c = self.compress(key, _tree(jnp.subtract, y, q))
+        delta = _tree(jnp.subtract, y, q)
+        if getattr(self.mixer, "wire_codec", None) is not None:
+            return self.mixer.exchange(key, delta, t)
+        c = self.compress(key, delta)
         return c, apply_mixer(self.mixer, c, t)
 
     # -- fused state updates ------------------------------------------------
@@ -211,6 +241,14 @@ class CommRound:
         mixers (see :meth:`exchange`).
         """
         c, wc = self.exchange(key, v, q, t)
+        return self.track_update(c, wc, v, q, m, g, g_prev, gamma)
+
+    def track_update(self, c, wc, v, q, m, g, g_prev, gamma: float):
+        """The fused second half of :meth:`track` (no communication).
+
+        Exposed separately so overlap mode can issue several exchanges
+        before running any update (see the ``overlap`` attribute).
+        """
         if self._use_pallas():
             kw = self._kernel_kw()
             qo, mo, vo = FL.plane_apply(
@@ -232,6 +270,10 @@ class CommRound:
         ``t``: absolute round index for time-varying mixers.
         """
         c, wc = self.exchange(key, x, q, t)
+        return self.step_update(c, wc, x, q, m, v, gamma, eta)
+
+    def step_update(self, c, wc, x, q, m, v, gamma: float, eta: float):
+        """The fused second half of :meth:`step` (no communication)."""
         if self._use_pallas():
             kw = self._kernel_kw()
             qo, mo, xo = FL.plane_apply(
@@ -337,6 +379,9 @@ class CommRound:
         gossip mode (as benchmarks/ablation.py does); cross-mode numbers
         follow each wire format's own link accounting.
         """
+        codec = getattr(self.mixer, "wire_codec", None)
+        if codec is not None:
+            return self._codec_bytes(tree_or_d, n_agents, measured=True)
         tree = None
         if n_agents is None:
             tree = tree_or_d
@@ -355,3 +400,50 @@ class CommRound:
                 return float(n_agents) * windows * k_b * 8.0
             return gossip_wire_bytes(mode, n_agents, d, frac=frac)
         return n_agents * self.compressor.wire_bits(d) / 8.0
+
+    def wire_bytes_model(self, tree_or_d,
+                         n_agents: Optional[int] = None) -> float:
+        """The *analytic* byte model for the same round (cross-check).
+
+        For codec (bit-packed) mixers this is the layout arithmetic of
+        :class:`repro.core.wire_formats.WireFormat` -- windows times
+        (payload + overhead) bytes per window -- whereas
+        :meth:`wire_bytes` measures the shipped buffers' nbytes from their
+        traced shapes; ``bench_comm_round.py --achieved-bytes`` asserts the
+        two agree exactly.  For every other mixer the model *is* the
+        accounting, so this returns the same value as :meth:`wire_bytes`.
+        """
+        if getattr(self.mixer, "wire_codec", None) is not None:
+            return self._codec_bytes(tree_or_d, n_agents, measured=False)
+        return self.wire_bytes(tree_or_d, n_agents)
+
+    def _codec_bytes(self, tree_or_d, n_agents: Optional[int],
+                     measured: bool) -> float:
+        """Collective bytes under a codec mixer, measured or modeled.
+
+        Windows are counted per (leaf x model shard) exactly like
+        :meth:`_packed_windows` (each shard pads and packs separately);
+        per-window bytes come either from ``jax.eval_shape`` over the codec
+        itself (measured -- cannot drift from the executor) or from the
+        registered layout constants (model).  'ring' ships each agent's
+        buffers to its live neighbors (one shift at n=2 by band folding,
+        else two); 'packed' all-gathers every agent's buffers.
+        """
+        codec = self.mixer.wire_codec
+        if n_agents is None:
+            tree = tree_or_d
+            n_agents = jax.tree_util.tree_leaves(tree)[0].shape[0]
+            windows = self._packed_windows(tree, n_agents)
+        else:
+            windows = codec.windows(int(tree_or_d))
+        if measured:
+            per_window = float(WF.measured_pack_nbytes(codec, PACK_BLOCK))
+        else:
+            per_window = float(codec.payload_bytes_per_window
+                               + codec.overhead_bytes_per_window)
+        per_agent = windows * per_window
+        mode = getattr(self.mixer, "wire_mode", "packed")
+        if mode == "ring":
+            shifts = 1.0 if n_agents == 2 else 2.0
+            return shifts * per_agent
+        return float(n_agents) * per_agent

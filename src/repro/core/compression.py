@@ -21,9 +21,23 @@ compressor over an agent-stacked pytree, giving every (agent, leaf) pair an
 independent PRNG stream.
 
 Dense emulation vs. wire format: the functions here return *dense* arrays (the
-zeros are materialized) which is what the convergence math sees.  The packed
-wire format that actually shrinks collective bytes lives in
-:mod:`repro.core.gossip` (``packed_topk`` mode).
+zeros are materialized) which is what the convergence math sees.  The
+bit-packed layouts that actually shrink collective bytes are registered in
+:mod:`repro.core.wire_formats` -- one shared constants module (PACK_BLOCK,
+``topk_bits`` for the top-k family, ``qsgd_bits`` for qsgd) consumed by the
+codec gossip executors (:mod:`repro.core.gossip`), the fused pallas kernels
+(:mod:`repro.kernels.wire_pack`), and the byte accounting
+(:meth:`repro.core.comm_round.CommRound.wire_bytes`), so the three cannot
+drift.  Select them with ``ExperimentSpec(wire="packed_bits")``.
+
+bf16 payload note (Definition 3): the ``topk_bits`` wire format ships kept
+values as bf16, so the shipped operator is C'(x) = bf16(C(x)) rather than
+C(x).  Rounding each kept value multiplies it by (1 + eps) with
+|eps| <= 2^-8, hence ||C'(x) - x||^2 <= (1 - rho') ||x||^2 with
+rho' >= rho * (1 - 2^-8)^2 ~ rho * 0.992 -- still a valid (slightly
+smaller) Definition-3 constant; gamma derived from the registry's rho is
+conservative by < 1%.  ``qsgd_bits`` code words are exact (the per-window
+f32 scale carries all rounding), so its rho is unchanged.
 """
 
 from __future__ import annotations

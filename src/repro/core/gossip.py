@@ -49,7 +49,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 
+from . import wire_formats as WF
 from .mixing import Topology, TopologySchedule
+# packed wire format selection window: single source of truth is
+# wire_formats.PACK_BLOCK (the executors, the kernels, and the byte model
+# all import it from there, so none can drift -- the PR-3 bug class).
+from .wire_formats import PACK_BLOCK
 
 __all__ = [
     "MixFn",
@@ -58,14 +63,11 @@ __all__ = [
     "make_dense_mixer",
     "make_ring_mixer",
     "make_packed_mixer",
+    "make_ring_codec_mixer",
+    "make_packed_codec_mixer",
     "make_mixer",
     "gossip_wire_bytes",
 ]
-
-# packed wire format selection window; matches kernels/block_topk.py.  Both
-# the executor (make_packed_mixer) and the byte model (gossip_wire_bytes)
-# must agree on this, or the reported wire_bytes drift from the payload.
-PACK_BLOCK = 2048
 
 # tree of (n, ...) -> tree of (n, ...); time-varying mixers additionally
 # take the traced absolute round index (see apply_mixer)
@@ -353,11 +355,222 @@ def make_packed_mixer(w, mesh: Mesh, frac: float,
     return mix
 
 
+# ---------------------------------------------------------------------------
+# Codec-aware executors: only bit-packed buffers ever cross the wire.
+#
+# Unlike the mixers above (dense increment in, mixed increment out), a codec
+# executor *fuses compression with packing*: it takes the raw increment
+# ``delta = y - q``, packs it per PACK_BLOCK window into the wire buffers of
+# a :class:`repro.core.wire_formats.WireFormat`, ships only those buffers
+# (ppermute for ring, all-gather for packed), and unpacks on the receiver.
+# It returns BOTH ``c = unpack(pack(delta))`` (the locally round-tripped
+# increment every agent accumulates into its surrogate q) and ``wc = W c``
+# -- the two must come from the *same* packed buffers or the ``m = W q``
+# invariant breaks, which is why the codec path replaces the engine's
+# separate compress step rather than composing with it.  Drive these
+# through ``mix.exchange(key, tree, t)`` (CommRound does); the plain call
+# raises.
+# ---------------------------------------------------------------------------
+
+def _codec_mix_error(*a, **k):
+    raise ValueError(
+        "codec gossip executors fuse compression with packing and return "
+        "(c, wc); call mix.exchange(key, tree, t) -- the CommRound engine "
+        "does this -- instead of mixing a pre-compressed tree")
+
+
+def _agent_index(mesh: Mesh, axes: Tuple[str, ...]):
+    if len(axes) == 1:
+        return jax.lax.axis_index(axes[0])
+    return (jax.lax.axis_index(axes[0]) * mesh.shape[axes[1]]
+            + jax.lax.axis_index(axes[1]))
+
+
+def _pack_local(codec: WF.WireFormat, key, x):
+    """Pack one (1, ...) local block: returns (bufs, c_rows, d)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    rows = WF.to_windows(flat)
+    bufs = codec.pack(key, rows)
+    return bufs, codec.unpack(*bufs), flat.shape[0]
+
+
+def make_ring_codec_mixer(w, mesh: Mesh, codec: WF.WireFormat,
+                          agent_axes: Sequence[str] = ("data",),
+                          leaf_specs=None) -> MixFn:
+    """Banded-W gossip that ppermutes *packed* buffers (bf16+u16 segments or
+    uint32 code words) instead of dense f32 planes.  Keeps the two-shift
+    structure, the n=2 band folding, the multi-pod seam patch, and the
+    traced (period, 3) band table of :func:`make_ring_mixer`; the receiver
+    unpacks each neighbor's buffers before applying its band weight."""
+    w_np, time_varying = _schedule_table(w)
+    if time_varying:
+        band_tab = np.stack([_ring_weights(wt) for wt in w_np])  # (p, 3)
+        use_prev = bool(np.any(band_tab[:, 1] != 0.0))
+        use_next = bool(np.any(band_tab[:, 2] != 0.0))
+        bands_j = jnp.asarray(band_tab, jnp.float32)
+    else:
+        w_self, w_prev, w_next = _ring_weights(w_np)
+        use_prev, use_next = bool(w_prev), bool(w_next)
+    axes = tuple(agent_axes)
+
+    def shift_bufs(bufs, direction: int, axis: str):
+        size = mesh.shape[axis]
+        perm = [(i, (i + direction) % size) for i in range(size)]
+        return tuple(jax.lax.ppermute(b, axis, perm) for b in bufs)
+
+    def local(x, b_self, b_prev, b_next, key):
+        bufs, c_rows, d = _pack_local(codec, key, x)
+        out = b_self * c_rows
+        if len(axes) == 1:
+            ax = axes[0]
+            if use_prev:
+                out = out + b_prev * codec.unpack(
+                    *shift_bufs(bufs, +1, ax))   # agent i-1 arrives at i
+            if use_next:
+                out = out + b_next * codec.unpack(*shift_bufs(bufs, -1, ax))
+        else:
+            pod_ax, data_ax = axes
+            dsize = mesh.shape[data_ax]
+            didx = jax.lax.axis_index(data_ax)
+            # seam fix as in make_ring_mixer, applied per wire buffer (all
+            # agents' buffers share shapes, so the select is element-free)
+            if use_prev:
+                intra = shift_bufs(bufs, +1, data_ax)
+                cross = shift_bufs(intra, +1, pod_ax)
+                sel = tuple(jnp.where(didx == 0, c, i_)
+                            for c, i_ in zip(cross, intra))
+                out = out + b_prev * codec.unpack(*sel)
+            if use_next:
+                intra = shift_bufs(bufs, -1, data_ax)
+                cross = shift_bufs(intra, -1, pod_ax)
+                sel = tuple(jnp.where(didx == dsize - 1, c, i_)
+                            for c, i_ in zip(cross, intra))
+                out = out + b_next * codec.unpack(*sel)
+        to_leaf = lambda rows: WF.from_windows(rows, d, x.shape
+                                               ).astype(x.dtype)
+        return to_leaf(c_rows), to_leaf(out)
+
+    def exchange(key, tree, t=None):
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        keys = jax.random.split(key, len(leaves))
+        if leaf_specs is not None:
+            specs = leaf_specs
+        else:
+            specs = jax.tree_util.tree_map(
+                lambda l: P(axes if len(axes) > 1 else axes[0],
+                            *([None] * (l.ndim - 1))), tree)
+        spec_leaves = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda s: isinstance(s, P))
+
+        if time_varying:
+            if t is None:
+                raise ValueError("time-varying ring codec mixer needs the "
+                                 "round index (pass t=state.step)")
+            b = _entry(bands_j, t)
+        else:
+            b = jnp.asarray([w_self, w_prev, w_next], jnp.float32)
+
+        def run(lvs, ks, bb):
+            i = _agent_index(mesh, axes)
+            outs = [local(l, bb[0], bb[1], bb[2],
+                          jax.random.fold_in(ks[j], i))
+                    for j, l in enumerate(lvs)]
+            return [o[0] for o in outs], [o[1] for o in outs]
+
+        fn = shard_map(run, mesh=mesh,
+                       in_specs=(spec_leaves, P(), P()),
+                       out_specs=(spec_leaves, spec_leaves),
+                       check_vma=False)
+        cs, wcs = fn(leaves, keys, b)
+        return treedef.unflatten(cs), treedef.unflatten(wcs)
+
+    def mix(*a, **k):                      # fresh object per factory call
+        _codec_mix_error()
+
+    mix.exchange = exchange
+    mix.time_varying = time_varying
+    mix.wire_codec = codec
+    return mix
+
+
+def make_packed_codec_mixer(w, mesh: Mesh, codec: WF.WireFormat,
+                            agent_axes: Sequence[str] = ("data",),
+                            leaf_specs=None) -> MixFn:
+    """All-gather gossip over *packed* buffers: every agent ships its
+    bit-packed windows, the receiver unpacks each sender's buffers and
+    accumulates ``sum_j w_ij unpack(bufs_j)`` in a scan.  Per-shard planes
+    (model-sharded leaves pack per shard) and the traced-``W_t`` schedule
+    slot of :func:`make_packed_mixer` are preserved."""
+    w_np, time_varying = _schedule_table(w)
+    w_np = w_np.astype(np.float32)
+    n = w_np.shape[-1]
+    axes = tuple(agent_axes)
+    gather_axis = axes if len(axes) > 1 else axes[0]
+    w_j = jnp.asarray(w_np)
+
+    def local(x, w_col, key):
+        bufs, c_rows, d = _pack_local(codec, key, x)
+        all_bufs = tuple(
+            jax.lax.all_gather(b, gather_axis).reshape(n, *b.shape)
+            for b in bufs)
+
+        def add_agent(o, j):
+            return o + w_col[j] * codec.unpack(*[ab[j] for ab in all_bufs]
+                                               ), None
+
+        out, _ = jax.lax.scan(add_agent, jnp.zeros_like(c_rows),
+                              jnp.arange(n))
+        to_leaf = lambda rows: WF.from_windows(rows, d, x.shape
+                                               ).astype(x.dtype)
+        return to_leaf(c_rows), to_leaf(out)
+
+    def exchange(key, tree, t=None):
+        if time_varying:
+            if t is None:
+                raise ValueError("time-varying packed codec mixer needs the "
+                                 "round index (pass t=state.step)")
+            w_rows = _entry(w_j, t)
+        else:
+            w_rows = w_j
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        keys = jax.random.split(key, len(leaves))
+        if leaf_specs is not None:
+            specs = leaf_specs
+        else:
+            specs = jax.tree_util.tree_map(
+                lambda l: P(axes if len(axes) > 1 else axes[0],
+                            *([None] * (l.ndim - 1))), tree)
+        spec_leaves = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda s: isinstance(s, P))
+
+        def run(lvs, w_all, ks):
+            i = _agent_index(mesh, axes)
+            row = w_all[i]
+            outs = [local(l, row, jax.random.fold_in(ks[j], i))
+                    for j, l in enumerate(lvs)]
+            return [o[0] for o in outs], [o[1] for o in outs]
+
+        fn = shard_map(run, mesh=mesh,
+                       in_specs=(spec_leaves, P(), P()),
+                       out_specs=(spec_leaves, spec_leaves),
+                       check_vma=False)
+        cs, wcs = fn(leaves, w_rows, keys)
+        return treedef.unflatten(cs), treedef.unflatten(wcs)
+
+    def mix(*a, **k):
+        _codec_mix_error()
+
+    mix.exchange = exchange
+    mix.time_varying = time_varying
+    mix.wire_codec = codec
+    return mix
+
+
 def make_mixer(topology: Union[Topology, TopologySchedule],
                mode: str = "dense",
                mesh: Optional[Mesh] = None, frac: Optional[float] = None,
                agent_axes: Sequence[str] = ("data",),
-               leaf_specs=None) -> MixFn:
+               leaf_specs=None, codec: Optional[WF.WireFormat] = None) -> MixFn:
     """leaf_specs: optional pytree of PartitionSpecs matching the gossiped
     buffers (agent axis first, model-parallel dims preserved) -- required for
     ring/packed under a mesh whose leaves are also model-sharded.
@@ -370,10 +583,21 @@ def make_mixer(topology: Union[Topology, TopologySchedule],
 
     The returned MixFn is tagged with ``wire_mode`` (and ``wire_frac`` for
     packed) so the comm-round engine can account per-round wire bytes
-    without being told the gossip mode twice."""
+    without being told the gossip mode twice.
+
+    ``codec``: optional :class:`repro.core.wire_formats.WireFormat`; with a
+    codec the ring / packed executor becomes the bit-packed variant (only
+    packed buffers cross the wire; drive it via ``mix.exchange``).  Dense
+    gossip has no codec form -- its whole point is shipping the dense
+    emulation the convergence math sees."""
     schedule = topology if isinstance(topology, TopologySchedule) else None
     w = schedule.ws if schedule is not None else topology.w
     if mode == "dense":
+        if codec is not None:
+            raise ValueError(
+                "dense gossip ships the dense emulation by definition; "
+                "bit-packed wire formats need gossip mode 'ring' or "
+                "'packed'")
         mix = make_dense_mixer(w)
     elif mode == "ring":
         if mesh is None:
@@ -384,12 +608,23 @@ def make_mixer(topology: Union[Topology, TopologySchedule],
                 "circulant ring bands; the ring wire format only supports "
                 "weight-varying ring schedules -- use dense or packed "
                 "gossip for churn/resampling schedules")
-        mix = make_ring_mixer(w, mesh, agent_axes, leaf_specs)
+        if codec is not None:
+            mix = make_ring_codec_mixer(w, mesh, codec, agent_axes,
+                                        leaf_specs)
+        else:
+            mix = make_ring_mixer(w, mesh, agent_axes, leaf_specs)
     elif mode == "packed":
-        if mesh is None or frac is None:
-            raise ValueError("packed gossip needs a mesh and a top-k fraction")
-        mix = make_packed_mixer(w, mesh, frac, agent_axes,
-                                leaf_specs)
+        if codec is not None:
+            if mesh is None:
+                raise ValueError("packed gossip needs a mesh")
+            mix = make_packed_codec_mixer(w, mesh, codec, agent_axes,
+                                          leaf_specs)
+        else:
+            if mesh is None or frac is None:
+                raise ValueError(
+                    "packed gossip needs a mesh and a top-k fraction")
+            mix = make_packed_mixer(w, mesh, frac, agent_axes,
+                                    leaf_specs)
     else:
         raise ValueError(f"unknown gossip mode {mode!r}")
     mix.wire_mode = mode
@@ -409,6 +644,11 @@ def gossip_wire_bytes(mode: str, n_agents: int, d_params: int,
     ``max(frac*d, 1)``.  The distinction matters for small or badly padded
     buffers (a 10-element leaf still ships one full window's k_b pairs) and
     is what the wire-bytes tests pin against the executor's payload.
+
+    Codec executors (bit-packed wire formats) are accounted by
+    :func:`repro.core.wire_formats.codec_collective_bytes` against the same
+    ring/packed link conventions; :meth:`CommRound.wire_bytes` reports the
+    *measured* packed-buffer nbytes and keeps this model as the cross-check.
     """
     if mode == "dense":
         return float(n_agents) * d_params * dtype_bytes

@@ -180,10 +180,23 @@ def porter_step(
     # the state's own step counter is the absolute round index: it advances
     # inside the scan, survives checkpoints, and selects W_t when the mixer
     # runs a time-varying topology schedule (static mixers ignore it)
-    v, q_v, m_v = eng.track(k_cv, state.v, state.q_v, state.m_v, g,
-                            state.g_prev, cfg.gamma, t=state.step)
-    x, q_x, m_x = eng.step(k_cx, state.x, state.q_x, state.m_x, v,
-                           cfg.gamma, cfg.eta, t=state.step)
+    if eng.overlap:
+        # comm/compute overlap: the x-side exchange reads only (x, q_x),
+        # which the v-side update never touches, so both compress+collective
+        # pairs are issued before either fused update -- the collectives
+        # run while the other round's local compute proceeds, and every
+        # value equals the sequential order's (bit-exact by construction)
+        c_v, wc_v = eng.exchange(k_cv, state.v, state.q_v, t=state.step)
+        c_x, wc_x = eng.exchange(k_cx, state.x, state.q_x, t=state.step)
+        v, q_v, m_v = eng.track_update(c_v, wc_v, state.v, state.q_v,
+                                       state.m_v, g, state.g_prev, cfg.gamma)
+        x, q_x, m_x = eng.step_update(c_x, wc_x, state.x, state.q_x,
+                                      state.m_x, v, cfg.gamma, cfg.eta)
+    else:
+        v, q_v, m_v = eng.track(k_cv, state.v, state.q_v, state.m_v, g,
+                                state.g_prev, cfg.gamma, t=state.step)
+        x, q_x, m_x = eng.step(k_cx, state.x, state.q_x, state.m_x, v,
+                               cfg.gamma, cfg.eta, t=state.step)
 
     new_state = PorterState(x=x, v=v, q_x=q_x, q_v=q_v, g_prev=g,
                             m_x=m_x, m_v=m_v, step=state.step + 1)

@@ -81,8 +81,18 @@ def porter_adam_step(
     losses, g = jax.vmap(grad_fn)(st.x, batch, agent_keys)
     g = jax.tree_util.tree_map(lambda l: l.astype(cfg.grad_dtype), g)
 
-    v, q_v, m_v = eng.track(k_cv, st.v, st.q_v, st.m_v, g, st.g_prev,
-                            cfg.gamma, t=st.step)
+    if eng.overlap:
+        # the x-side exchange reads only (st.x, st.q_x) -- independent of
+        # the track update AND the Adam moments -- so both collectives are
+        # in flight before the local moment math runs (see CommRound.overlap)
+        c_v, wc_v = eng.exchange(k_cv, st.v, st.q_v, t=st.step)
+        c_x, wc_x = eng.exchange(k_cx, st.x, st.q_x, t=st.step)
+        v, q_v, m_v = eng.track_update(c_v, wc_v, st.v, st.q_v, st.m_v, g,
+                                       st.g_prev, cfg.gamma)
+    else:
+        c_x = wc_x = None
+        v, q_v, m_v = eng.track(k_cv, st.v, st.q_v, st.m_v, g, st.g_prev,
+                                cfg.gamma, t=st.step)
 
     # local Adam moments on the tracked gradient
     step_no = (st.step + 1).astype(jnp.float32)
@@ -96,8 +106,12 @@ def porter_adam_step(
         lambda mm, ss: (mm / bc1) / (jnp.sqrt(ss / bc2) + adam_eps), m, s)
 
     # parameter round: Algorithm 1 lines 13-14 with the preconditioned update
-    x, q_x, m_x = eng.step(k_cx, st.x, st.q_x, st.m_x, update,
-                           cfg.gamma, cfg.eta, t=st.step)
+    if eng.overlap:
+        x, q_x, m_x = eng.step_update(c_x, wc_x, st.x, st.q_x, st.m_x,
+                                      update, cfg.gamma, cfg.eta)
+    else:
+        x, q_x, m_x = eng.step(k_cx, st.x, st.q_x, st.m_x, update,
+                               cfg.gamma, cfg.eta, t=st.step)
 
     new_base = PorterState(x=x, v=v, q_x=q_x, q_v=q_v, g_prev=g, m_x=m_x,
                            m_v=m_v, step=st.step + 1)

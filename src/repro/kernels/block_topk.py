@@ -6,6 +6,12 @@ for each BLOCK-sized window, find the k-th largest |x| by *bisection on the
 value range* -- log2-many compare+count sweeps, each a fully vectorized VPU
 pass over the block -- then zero everything below the threshold.
 
+The bisection routine itself lives in :mod:`repro.core.wire_formats`
+(:func:`bisect_threshold`) so that this dense-emulation kernel and the
+bit-packed wire kernels (:mod:`repro.kernels.wire_pack`) select with one
+shared pass -- selection and packing cannot drift.  BLOCK likewise aliases
+``wire_formats.PACK_BLOCK``, the single source of truth for the window.
+
 Block-local top-k is itself a valid rho = k/BLOCK compressor (Definition 3):
 per-block error <= (1 - rho) * per-block energy, and energies add.  It also
 matches the packed wire format (gossip 'packed' mode) which ships fixed-size
@@ -27,29 +33,17 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-BLOCK = 2048          # elements per selection window (16 x 128 lanes)
-N_ITERS = 24          # bisection iterations (f32 has 24 mantissa bits)
+from repro.core.wire_formats import (PACK_BLOCK, N_BISECT_ITERS,
+                                     bisect_threshold)
+
+BLOCK = PACK_BLOCK    # elements per selection window (16 x 128 lanes)
+N_ITERS = N_BISECT_ITERS
 
 
 def _block_topk_kernel(x_ref, k_ref, o_ref):
     x = x_ref[...].astype(jnp.float32)          # (1, BLOCK)
     a = jnp.abs(x)
-    k = k_ref[0]
-
-    hi = jnp.max(a)
-    lo = jnp.zeros_like(hi)
-
-    def body(_, carry):
-        lo, hi = carry
-        mid = 0.5 * (lo + hi)
-        cnt = jnp.sum((a >= mid).astype(jnp.int32))
-        # too few kept -> threshold too high; too many -> raise it
-        return jax.lax.cond(cnt >= k,
-                            lambda: (mid, hi),
-                            lambda: (lo, mid))
-
-    lo, hi = jax.lax.fori_loop(0, N_ITERS, body, (lo, hi))
-    thresh = lo                                  # keeps >= k elements
+    thresh = bisect_threshold(a, k_ref[0])       # keeps >= k elements
     o_ref[...] = jnp.where(a >= thresh, x, 0.0).astype(o_ref.dtype)
 
 

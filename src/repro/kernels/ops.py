@@ -27,10 +27,13 @@ from . import ef_update as _ef
 from . import rwkv6_chunk as _rw
 from . import ssd_chunk as _ssd
 from . import smooth_clip as _sc
+from . import wire_pack as _wp
 from . import ref
 
 __all__ = ["smooth_clip", "block_topk", "ef_track", "ef_step", "ef_gossip",
-           "rwkv6_scan", "ssd_scan", "default_interpret"]
+           "rwkv6_scan", "ssd_scan", "default_interpret",
+           "wire_topk_pack", "wire_topk_unpack",
+           "wire_qsgd_pack", "wire_qsgd_unpack"]
 
 
 def default_interpret() -> bool:
@@ -73,6 +76,48 @@ def block_topk(x: jax.Array, frac: float,
     k = max(int(round(frac * _bt.BLOCK)), 1)
     y2d = _bt.block_topk(x2d, k, interpret=interpret)
     return y2d.reshape(-1)[:d].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def wire_topk_pack(rows: jax.Array, k: int, interpret: bool | None = None):
+    """Fused select+pack: (nb, PACK_BLOCK) -> (bf16 vals, uint16 idx).
+
+    One pass per window (bisection threshold + one-hot compaction); the
+    indices are window-local so uint16 always suffices.  This is the wire
+    payload the codec gossip executors ship (4 bytes per kept element).
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    vals, idx = _wp.topk_pack(rows, k, interpret=interpret)
+    return vals, idx.astype(jnp.uint16)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wire_topk_unpack(vals: jax.Array, idx: jax.Array,
+                     interpret: bool | None = None) -> jax.Array:
+    """Receiver side: packed segments -> dense f32 (nb, PACK_BLOCK)."""
+    interpret = default_interpret() if interpret is None else interpret
+    return _wp.topk_unpack(vals, idx.astype(jnp.int32), interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("levels", "interpret"))
+def wire_qsgd_pack(rows: jax.Array, key: jax.Array, levels: int,
+                   interpret: bool | None = None):
+    """Per-window QSGD quantize + uint32 bit-pack: (nb, PACK_BLOCK) ->
+    (uint32 words (nb, W), f32 scale (nb, 1)).  The stochastic-rounding
+    noise is drawn from ``key`` outside the kernel so the jnp reference
+    (core.wire_formats.qsgd_pack_ref) quantizes identically."""
+    interpret = default_interpret() if interpret is None else interpret
+    noise = jax.random.uniform(key, rows.shape, jnp.float32)
+    return _wp.qsgd_pack(rows.astype(jnp.float32), noise, levels,
+                         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("levels", "interpret"))
+def wire_qsgd_unpack(word: jax.Array, scale: jax.Array, levels: int,
+                     interpret: bool | None = None) -> jax.Array:
+    """Receiver side: bit-packed codes + scales -> dense f32 windows."""
+    interpret = default_interpret() if interpret is None else interpret
+    return _wp.qsgd_unpack(word, scale, levels, interpret=interpret)
 
 
 def _tile_args(arrays, tile):

@@ -1,0 +1,200 @@
+"""Pallas TPU kernels: bit-packed wire buffers for the gossip payloads.
+
+Layouts (single source of truth: :mod:`repro.core.wire_formats`):
+
+* top-k   -- per PACK_BLOCK window, selection *and* packing in one fused
+  pass: the bisection threshold from :func:`wire_formats.bisect_threshold`
+  (the same routine kernels/block_topk.py zeroes with), then compaction of
+  the k survivors into contiguous (bf16 value, index) segments.  TPUs have
+  no VMEM scatter, so compaction is a one-hot matmul: rank each survivor by
+  cumulative count (first k in index order; threshold ties beyond k drop
+  deterministically) and contract the window against the (BLOCK, k)
+  rank-indicator -- an MXU pass instead of a serial gather.
+
+* qsgd    -- per-window stochastic quantization to codes in [0, levels]
+  plus a sign bit, then shift/OR of ``32 // bits`` fields per uint32 word.
+  The uniform noise comes in as an operand (generated from the caller's
+  key) so the kernel stays deterministic given its inputs and the jnp
+  reference (wire_formats.qsgd_pack_ref) is bit-comparable.
+
+Unpack kernels invert each layout on the receiver: top-k scatters via the
+transpose one-hot matmul, qsgd shifts/masks the fields back out.  All four
+kernels run per (1, BLOCK) grid row like block_topk; index arithmetic stays
+in f32 (positions < 2048 are exactly representable) until the final cast.
+
+The jit'd public wrappers live in :mod:`repro.kernels.ops`
+(wire_topk_pack / wire_topk_unpack / wire_qsgd_pack / wire_qsgd_unpack).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.wire_formats import (PACK_BLOCK, TOPK_VALUE_DTYPE,
+                                     bisect_threshold, qsgd_bits,
+                                     qsgd_elems_per_word,
+                                     qsgd_words_per_window,
+                                     qsgd_window_omega)
+
+BLOCK = PACK_BLOCK
+
+
+# ---------------------------------------------------------------------------
+# top-k: fused select + compact
+# ---------------------------------------------------------------------------
+
+def _topk_pack_kernel(x_ref, k_ref, v_ref, i_ref, *, k: int):
+    x = x_ref[...].astype(jnp.float32)                    # (1, BLOCK)
+    a = jnp.abs(x)
+    thresh = bisect_threshold(a, k_ref[0])                # shared selection
+    keep = (a >= thresh).astype(jnp.float32)
+    rank = jnp.cumsum(keep, axis=1) - 1.0                 # (1, BLOCK)
+    sel = keep * (rank < k).astype(jnp.float32)           # first k, by index
+    # one-hot compaction: onehot[e, r] = 1 iff element e lands in slot r
+    slot = jax.lax.broadcasted_iota(jnp.float32, (BLOCK, k), 1)
+    onehot = sel.reshape(BLOCK, 1) * (rank.reshape(BLOCK, 1) == slot
+                                      ).astype(jnp.float32)
+    v_ref[...] = jnp.dot(x, onehot,
+                         preferred_element_type=jnp.float32
+                         ).astype(v_ref.dtype)            # (1, k)
+    pos = jax.lax.broadcasted_iota(jnp.float32, (BLOCK, k), 0)
+    i_ref[...] = jnp.sum(pos * onehot, axis=0,
+                         keepdims=True).astype(jnp.int32)  # (1, k)
+
+
+def topk_pack(x2d: jax.Array, k: int, interpret: bool = False):
+    """(blocks, BLOCK) -> (bf16 values (blocks, k), int32 indices).
+
+    Exactly k slots per window (bisection keeps >= k; the compaction caps
+    at the first k in index order).  Indices are window-local; the wire
+    layer narrows them to uint16 (wire_formats.TOPK_INDEX_DTYPE).
+    """
+    blocks = x2d.shape[0]
+    blk = pl.BlockSpec((1, BLOCK), lambda i: (i, 0))
+    out = pl.BlockSpec((1, k), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_topk_pack_kernel, k=k),
+        grid=(blocks,),
+        in_specs=[blk, pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=(out, out),
+        out_shape=(jax.ShapeDtypeStruct((blocks, k), TOPK_VALUE_DTYPE),
+                   jax.ShapeDtypeStruct((blocks, k), jnp.int32)),
+        interpret=interpret,
+    )(x2d, jnp.full((1,), k, jnp.int32))
+
+
+def _topk_unpack_kernel(v_ref, i_ref, o_ref, *, k: int):
+    vals = v_ref[...].astype(jnp.float32)                 # (1, k)
+    idx = i_ref[...].astype(jnp.float32)                  # (1, k)
+    # transpose one-hot scatter: dense[j] = sum_r vals[r] * [idx[r] == j]
+    cols = jax.lax.broadcasted_iota(jnp.float32, (k, BLOCK), 1)
+    onehot = (idx.reshape(k, 1) == cols).astype(jnp.float32)
+    o_ref[...] = jnp.dot(vals, onehot,
+                         preferred_element_type=jnp.float32
+                         ).astype(o_ref.dtype)            # (1, BLOCK)
+
+
+def topk_unpack(vals: jax.Array, idx: jax.Array,
+                interpret: bool = False) -> jax.Array:
+    """(values (blocks, k), int32 indices) -> dense f32 (blocks, BLOCK)."""
+    blocks, k = vals.shape
+    blk = pl.BlockSpec((1, k), lambda i: (i, 0))
+    out = pl.BlockSpec((1, BLOCK), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_topk_unpack_kernel, k=k),
+        grid=(blocks,),
+        in_specs=[blk, blk],
+        out_specs=out,
+        out_shape=jax.ShapeDtypeStruct((blocks, BLOCK), jnp.float32),
+        interpret=interpret,
+    )(vals, idx.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# qsgd: quantize + shift/OR bit-pack
+# ---------------------------------------------------------------------------
+
+def _qsgd_pack_kernel(x_ref, u_ref, w_ref, s_ref, *, levels: int):
+    bits = qsgd_bits(levels)
+    epw = qsgd_elems_per_word(levels)
+    words = qsgd_words_per_window(levels)
+    x = x_ref[...].astype(jnp.float32)                    # (1, BLOCK)
+    u = u_ref[...].astype(jnp.float32)
+    norm = jnp.sqrt(jnp.sum(x * x)) + 1e-30
+    y = jnp.abs(x) / norm * levels
+    lo = jnp.floor(y)
+    code = (lo + (u < (y - lo))).astype(jnp.uint32)       # [0, levels]
+    sign = (x < 0).astype(jnp.uint32)
+    field = code | (sign << jnp.uint32(bits - 1))         # (1, BLOCK)
+    pad = words * epw - BLOCK
+    if pad:
+        field = jnp.pad(field, ((0, 0), (0, pad)))
+    field = field.reshape(words, epw)
+    word = jnp.zeros((1, words), jnp.uint32)
+    for e in range(epw):                                  # static OR chain
+        word = word | (field[:, e].reshape(1, words)
+                       << jnp.uint32(bits * e))
+    w_ref[...] = word
+    omega = qsgd_window_omega(levels)
+    s_ref[...] = (norm / (levels * (1.0 + omega))
+                  ).astype(jnp.float32).reshape(1, 1)
+
+
+def qsgd_pack(x2d: jax.Array, noise2d: jax.Array, levels: int,
+              interpret: bool = False):
+    """(blocks, BLOCK) + uniform noise -> (uint32 words, f32 (blocks, 1)).
+
+    ``noise2d``: U[0,1) per element (the stochastic-rounding draws),
+    generated by the caller from its PRNG key so kernel and jnp reference
+    quantize identically.
+    """
+    blocks = x2d.shape[0]
+    words = qsgd_words_per_window(levels)
+    blk = pl.BlockSpec((1, BLOCK), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_qsgd_pack_kernel, levels=levels),
+        grid=(blocks,),
+        in_specs=[blk, blk],
+        out_specs=(pl.BlockSpec((1, words), lambda i: (i, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (i, 0))),
+        out_shape=(jax.ShapeDtypeStruct((blocks, words), jnp.uint32),
+                   jax.ShapeDtypeStruct((blocks, 1), jnp.float32)),
+        interpret=interpret,
+    )(x2d, noise2d)
+
+
+def _qsgd_unpack_kernel(w_ref, s_ref, o_ref, *, levels: int):
+    bits = qsgd_bits(levels)
+    epw = qsgd_elems_per_word(levels)
+    words = w_ref.shape[-1]
+    word = w_ref[...]                                     # (1, words) u32
+    scale = s_ref[0, 0]
+    mag_mask = jnp.uint32(2 ** (bits - 1) - 1)
+    field_mask = jnp.uint32(2 ** bits - 1)
+    cols = []
+    for e in range(epw):
+        f = (word >> jnp.uint32(bits * e)) & field_mask
+        code = (f & mag_mask).astype(jnp.float32)
+        sgn = 1.0 - 2.0 * (f >> jnp.uint32(bits - 1)).astype(jnp.float32)
+        cols.append(sgn * code)
+    vals = jnp.stack(cols, axis=2).reshape(1, words * epw)[:, :BLOCK]
+    o_ref[...] = (vals * scale).astype(o_ref.dtype)
+
+
+def qsgd_unpack(word: jax.Array, scale: jax.Array, levels: int,
+                interpret: bool = False) -> jax.Array:
+    """(uint32 (blocks, W), f32 (blocks, 1)) -> dense f32 (blocks, BLOCK)."""
+    blocks, words = word.shape
+    return pl.pallas_call(
+        functools.partial(_qsgd_unpack_kernel, levels=levels),
+        grid=(blocks,),
+        in_specs=[pl.BlockSpec((1, words), lambda i: (i, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((blocks, BLOCK), jnp.float32),
+        interpret=interpret,
+    )(word, scale)

@@ -141,7 +141,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, variant: str,
             local_compress: bool = False, buffer_dtype="f32",
             q_chunk=None, capacity: float = None, cache_dtype="bf16",
             topology: str = "ring", topology_schedule: str = None,
-            comm_backend: str = "auto", chunk: int = None):
+            comm_backend: str = "auto", chunk: int = None,
+            wire: str = "dense", overlap: bool = False):
     shape = SH.SHAPES[shape_name]
     cfg = get_config(arch)
     if capacity is not None:
@@ -163,10 +164,15 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, variant: str,
                 topology_kind=topology,
                 topology_schedule=topology_schedule,
                 comm_backend=comm_backend,
+                wire=wire, overlap=overlap,
                 buffer_dtype=jnp.bfloat16 if buffer_dtype == "bf16"
                 else jnp.float32)
             if topology_schedule:
                 rec["topology_schedule"] = topology_schedule
+            if wire != "dense":
+                rec["wire"] = wire
+            if overlap:
+                rec["overlap"] = True
             params_shapes = setup.state_shapes.x
             if chunk:
                 # scan-fused chunk runner: one executable covering `chunk`
@@ -310,6 +316,15 @@ def main():
                     choices=["auto", "ref", "pallas"],
                     help="comm-round engine backend (pallas packs per-shard "
                          "planes under model-sharded layouts)")
+    ap.add_argument("--wire", default="dense",
+                    choices=["dense", "packed_bits"],
+                    help="wire format for train shapes: 'packed_bits' ships "
+                         "the bit-packed buffers from core/wire_formats "
+                         "(bf16+uint16 top-k segments, uint32 QSGD words) "
+                         "instead of dense f32 planes")
+    ap.add_argument("--overlap", action="store_true",
+                    help="issue both comm rounds' collectives before either "
+                         "fused update (bit-exact comm/compute overlap)")
     ap.add_argument("--chunk", type=int, default=None,
                     help="lower the scan-fused chunk runner over N comm "
                          "rounds (train shapes; one executable, donated "
@@ -341,7 +356,7 @@ def main():
                 topology=args.topology,
                 topology_schedule=args.topology_schedule,
                 comm_backend=args.comm_backend,
-                chunk=args.chunk))
+                chunk=args.chunk, wire=args.wire, overlap=args.overlap))
     n_ok = sum(r["ok"] for r in results)
     print(f"\n{n_ok}/{len(results)} combinations lowered+compiled OK")
     return 0 if n_ok == len(results) else 1

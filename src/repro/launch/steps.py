@@ -129,6 +129,8 @@ def build_train_step(
     remat: bool = True,
     local_compress: bool = False,
     comm_backend: str = "auto",
+    wire: str = "dense",
+    overlap: bool = False,
 ) -> TrainSetup:
     """PORTER train step, sharded for ``mesh``.
 
@@ -152,6 +154,17 @@ def build_train_step(
     leaves the pallas path packs *per-shard planes* inside shard_map
     (kernels/flatten.py) -- no pack/unpack reshard, 'pallas' is safe on
     tensor-parallel layouts.
+
+    wire: 'dense' ships f32 planes; 'packed_bits' ships the bit-packed
+    buffers from ``repro.core.wire_formats`` (bf16+uint16 top-k segments or
+    uint32 QSGD words).  Under packed_bits the wire codec runs *inside*
+    shard_map, so selection is already per model shard -- it subsumes
+    ``local_compress`` and the shard-local compressor is skipped (the
+    ``lc_packed_bits`` sweep rung sets both; the engine would raise on the
+    explicit compress_fn + codec combination).
+
+    overlap: issue both comm rounds' collectives before either fused update
+    (``CommRound(overlap=True)``); bit-exact to the sequential order.
     """
     cfg = dataclasses.replace(cfg, remat=remat)
     bundle = build_model(cfg)
@@ -162,7 +175,8 @@ def build_train_step(
         n_agents=n, topology=topology_kind, topology_weights="metropolis",
         topology_schedule=topology_schedule,
         compressor=compressor_name, frac=frac, gossip_mode=gossip_mode,
-        comm_backend=comm_backend, eta=1e-3, tau=tau, sigma_p=sigma_p,
+        comm_backend=comm_backend, wire=wire, overlap=overlap,
+        eta=1e-3, tau=tau, sigma_p=sigma_p,
         buffer_dtype=buffer_dtype)
 
     # ---- abstract state & shardings ---------------------------------------
@@ -171,7 +185,10 @@ def build_train_step(
     stacked_specs = prepend_axis_specs(pspecs, ax_entry)
 
     compress_fn = None
-    if local_compress:
+    if local_compress and wire == "dense":
+        # packed_bits fuses (shard-local) selection into the wire codec;
+        # building the explicit shard-local compressor too would make
+        # api.build raise on the redundant combination.
         compress_fn = make_shard_local_compress(
             api.resolve_compressor(spec), mesh, stacked_specs)
     algo = api.build(spec, bundle.loss, mesh=mesh, agent_axes=ax,

@@ -90,6 +90,25 @@ PERF_LADDERS = [
      dict(local_compress=True,
           topology_schedule="dropout:rate=0.1,period=8", chunk=8),
      "lc_churn_chunk8"),
+    # SPerf-7: bit-packed wire formats -- the gossip collectives ship the
+    # compact (bf16 value, uint16 index) / uint32-word buffers from
+    # core/wire_formats instead of dense f32 planes.  local_compress stays
+    # set for rung-name continuity, but the codec subsumes it (selection
+    # happens per model shard inside the codec executor); the overlap rung
+    # additionally issues both comm rounds' collectives before either fused
+    # update (bit-exact to sequential).
+    ("rwkv6-7b", "train_4k", False,
+     dict(local_compress=True, gossip="packed", wire="packed_bits"),
+     "lc_packed_bits"),
+    ("rwkv6-7b", "train_4k", False,
+     dict(local_compress=True, gossip="ring", wire="packed_bits"),
+     "lc_ring_bits"),
+    ("rwkv6-7b", "train_4k", False,
+     dict(local_compress=True, gossip="ring", wire="packed_bits",
+          overlap=True), "lc_ring_bits_ovl"),
+    ("arctic-480b", "train_4k", False,
+     dict(local_compress=True, gossip="packed", wire="packed_bits"),
+     "lc_packed_bits"),
 ]
 
 
