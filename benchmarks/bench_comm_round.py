@@ -289,6 +289,54 @@ def bench_achieved_bytes(reps: int):
         assert payload_ratio >= floor, \
             f"{fmt}/{mode}: payload ratio {payload_ratio:.3f} < {floor}x"
 
+    # ---- directed push-sum: the weight scalar rides the codec wire ----
+    # dp-csgp ships one exact f32 push-sum weight per agent, bitcast into
+    # words of the codec's last wire buffer (+4 bytes per shipped buffer
+    # set).  The measured path derives those 4 bytes from the codec's pack
+    # signature (wire_formats.measured_weight_nbytes), so measured == model
+    # must hold with push_sum=True exactly as it does for the plain rounds,
+    # and the delta over the plain round is exactly the collective's
+    # shipped-copies multiplier x 4.
+    # ring executor needs circulant +-1 bands -> the skip-0 directed ring;
+    # packed ships whole tables, so it takes a genuinely asymmetric
+    # (one-way link loss) column-stochastic schedule
+    dscheds = {"ring": "directed:ring_skips",
+               "packed": "directed:one_way,rate=0.3,period=4,skip=2"}
+    dbase = base.replace(compressor="block_top_k", frac=0.25)
+    ps_rows = []
+    for mode in ("ring", "packed"):
+        eng = build_engine(dbase.replace(gossip_mode=mode,
+                                         topology_schedule=dscheds[mode]),
+                           mesh=mesh, leaf_specs=specs)
+        plain = eng.wire_bytes(y)
+        ps_meas = eng.wire_bytes(y, push_sum=True)
+        ps_model = eng.wire_bytes_model(y, push_sum=True)
+        assert ps_meas == ps_model, \
+            f"directed/{mode}: push-sum measured {ps_meas} != model {ps_model}"
+        mult = (1.0 if n == 2 else 2.0) if mode == "ring" else float(n)
+        assert ps_meas - plain == mult * 4.0, \
+            f"directed/{mode}: weight bytes {ps_meas - plain} != {mult * 4.0}"
+
+        xw = jnp.ones((n,), jnp.float32)
+        qw = jnp.zeros((n,), jnp.float32)
+
+        @jax.jit
+        def ps_round(key, y, q, xw, qw, eng=eng):
+            return eng.exchange_ps(key, y, q, xw, qw,
+                                   t=jnp.zeros((), jnp.int32))
+
+        c, wc, cw, wcw = ps_round(key, y, q, xw, qw)
+        # column-stochastic W conserves weight mass: 1^T(W cw) == 1^T cw
+        mass_in, mass_out = float(jnp.sum(cw)), float(jnp.sum(wcw))
+        assert abs(mass_in - mass_out) < 1e-4, (mode, mass_in, mass_out)
+        print(f"# directed/{mode}: push_sum bytes {ps_meas:.0f} "
+              f"(plain {plain:.0f} + weight {ps_meas - plain:.0f}), "
+              f"weight mass {mass_in:.6f} -> {mass_out:.6f}", flush=True)
+        ps_rows.append(dict(mode=mode, plain_bytes=plain,
+                            push_sum_bytes=ps_meas,
+                            weight_bytes=ps_meas - plain))
+    out["directed_push_sum"] = ps_rows
+
     # ---- overlap: both exchanges in flight before either fused update ----
     # PORTER's two rounds run over *independent* buffer pairs -- (v, q_v)
     # and (x, q_x) -- which is exactly why the reorder is bit-exact: the

@@ -1,0 +1,171 @@
+"""Directed-graph ablation: convergence vs one-way link-loss rate under
+push-sum (dp-csgp).
+
+The churn ablation (benchmarks/churn_ablation.py) models *symmetric* outages:
+an offline agent loses both directions of every link, and the surviving
+graph stays undirected, so the doubly-stochastic family still applies.  The
+common fleet failure is asymmetric -- agent i can hear j while j cannot hear
+i -- and that breaks double stochasticity outright.  This ablation sweeps
+the one-way link-loss rate of a ``directed:one_way`` schedule (each directed
+edge of the skip-2 directed ring dropped independently per round) on the
+paper's Section-5.1 logreg protocol, trained with the push-sum DP-CSGP
+registration; rate 0 is the intact directed ring (``directed:ring_skips``).
+
+All rows use the registry's uniform metrics schema (``loss``,
+``consensus_x`` -- computed on the de-biased estimates ``x/xw`` --
+``wire_bytes`` including the weight plane's bytes), so they are directly
+comparable with the churn and static ablations.  Training runs through the
+scan-fused chunked runtime and every chunk size must compile exactly ONE
+executable: the column-stochastic ``W_t`` table is indexed by a traced round
+counter exactly like the doubly-stochastic schedules, and the push-sum
+weight plane rides inside the existing collectives (asserted below).  Each
+row also reports the final weight spread ``max(xw)/min(xw)`` -- the push-sum
+health signal: it stays near 1 on balanced graphs and widens as one-way
+losses skew the stationary mass, while the *de-biased* consensus stays
+tight.
+
+Rows: ``directed/<rate>,final_loss,...``; artifacts land in
+artifacts/bench/directed_ablation.json (EXPERIMENTS.md cookbook #10).
+
+    PYTHONPATH=src python benchmarks/directed_ablation.py            # full
+    PYTHONPATH=src python benchmarks/directed_ablation.py --smoke    # CI
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+if __package__ in (None, ""):  # `python benchmarks/directed_ablation.py`
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import numpy as np
+
+from repro.api import build
+from repro.data import a9a_like, minibatch_source, shard_to_agents
+from repro.launch.runtime import make_runner
+from benchmarks import common as C
+
+RATES = (0.0, 0.1, 0.3, 0.5)
+PERIOD = 8
+SKIP = 2
+CHUNK = 8
+
+
+def _run(spec, loss_fn, params0, source, steps, chunk=CHUNK):
+    """Train ``spec`` for ``steps`` rounds; return (algo, metrics, state).
+
+    Asserts one executable per chunk size, exactly as churn_ablation.py
+    does for the doubly-stochastic schedules: directed mixing and the
+    push-sum weight plane must not cost recompiles.
+    """
+    algo = build(spec, loss_fn)
+    state = algo.init(params0)
+    key = jax.random.PRNGKey(0)
+    runners, t, per_round = {}, 0, []
+    while t < steps:
+        size = min(chunk, steps - t)
+        runner = runners.get(size)
+        if runner is None:
+            runner = runners[size] = make_runner(algo, source, size)
+        state, key, metrics = runner(state, key, t)
+        t += size
+        per_round.append({k: np.asarray(v) for k, v in metrics.items()})
+    for size, runner in runners.items():
+        n_exec = runner.cache_size()
+        assert n_exec in (None, 1), (
+            f"chunk={size} compiled {n_exec} executables under the directed "
+            "schedule (expected 1: W_t is a traced gather and the weight "
+            "plane rides the same collectives)")
+    stacked = {k: np.concatenate([m[k] for m in per_round])
+               for k in per_round[0]}
+    return algo, stacked, state
+
+
+def run_ablation(steps=400, chunk=CHUNK):
+    x, y = a9a_like(12000, 123, seed=0)
+    xs, ys = shard_to_agents(x, y, C.N_AGENTS)
+    loss_fn = C.logreg_loss()
+    params0 = {"w": np.zeros(123, np.float32), "b": np.zeros((), np.float32)}
+    source = minibatch_source(xs, ys, batch=4)
+
+    # the Section-5.1 protocol, push-sum flavor: dp-csgp clips per sample
+    # (tau=1) like PORTER-DP; sigma_p stays 0 so the sweep isolates the
+    # connectivity axis (noise would dominate the loss floor)
+    base = C.PAPER_SPEC.replace(algo="dp-csgp", compressor="top_k",
+                                frac=0.05, eta=0.05, tau=1.0, sigma_p=0.0)
+
+    results, rows = [], []
+    for rate in RATES:
+        sched = (f"directed:ring_skips,skip={SKIP}" if rate == 0.0 else
+                 f"directed:one_way,rate={rate},period={PERIOD},skip={SKIP}")
+        spec = base.replace(topology_schedule=sched)
+        algo, m, state = _run(spec, loss_fn, params0, source, steps, chunk)
+        q = max(len(m["loss"]) // 4, 1)
+        s = algo.schedule
+        xw = np.asarray(state.xw, np.float64)
+        rec = {
+            "rate": rate,
+            "schedule": sched,
+            "period": s.period,
+            "window": PERIOD,
+            "stochasticity": s.stochasticity,
+            # the connectivity axis: contraction of a PERIOD-round window
+            # (rate-0's period-1 row raised to the same window basis)
+            "joint_contraction_gap": (
+                1.0 - s.joint_alpha ** (PERIOD // s.period)
+                if s.period < PERIOD else s.joint_spectral_gap),
+            "per_round_alpha": s.alpha,
+            "contraction_trajectory": [1.0 - a for a in s.alphas],
+            "gamma": algo.gamma,
+            # push-sum health: total mass is conserved (sum == n) while the
+            # per-agent weights drift toward n*pi of the window product
+            "weight_mass": float(xw.sum()),
+            "weight_spread": float(xw.max() / xw.min()),
+            # uniform schema: per-round means over the tail quarter
+            "final_loss": float(np.mean(m["loss"][-q:])),
+            "final_consensus_x": float(np.mean(m["consensus_x"][-q:])),
+            "wire_mb_per_round": float(m["wire_bytes"][-1] / 1e6),
+            "wire_mb_total": float(np.sum(m["wire_bytes"]) / 1e6),
+            "loss_curve": m["loss"][:: max(steps // 50, 1)].tolist(),
+            "consensus_curve":
+                m["consensus_x"][:: max(steps // 50, 1)].tolist(),
+        }
+        rows.append(rec)
+        print(f"directed/{rate},final_loss={rec['final_loss']:.4f},"
+              f"consensus={rec['final_consensus_x']:.3e},"
+              f"joint_gap={rec['joint_contraction_gap']:.3f},"
+              f"wspread={rec['weight_spread']:.3f},"
+              f"gamma={rec['gamma']:.4g},"
+              f"wire_total={rec['wire_mb_total']:.3f}MB")
+
+    # sanity on the axis itself: every window still strongly connects (the
+    # generator resamples disconnected rounds), mass is exactly conserved
+    for r in rows:
+        assert r["joint_contraction_gap"] > 0.0, r
+        assert abs(r["weight_mass"] - C.N_AGENTS) < 1e-3, r
+    return {f"rate_{r['rate']}": r for r in rows}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=None,
+                    help="rounds per rate (default 400, or 32 with --smoke)")
+    ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    args = ap.parse_args()
+    steps = args.steps or (32 if args.smoke else 400)
+
+    results = run_ablation(steps=steps)
+    art = Path("artifacts/bench")
+    art.mkdir(parents=True, exist_ok=True)
+    (art / "directed_ablation.json").write_text(json.dumps(results, indent=2))
+    print(f"wrote artifacts/bench/directed_ablation.json "
+          f"({len(results)} rates x {steps} rounds)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -44,6 +44,9 @@ Registered algorithms (see :func:`repro.core.registry.list_algorithms`):
     choco        CHOCO-SGD [KSJ19], compressed gossip, no tracking
     dp-sgd       centralized DP-SGD [ACG+16] (Table 1 reference point)
     soteriafl    SoteriaFL-SGD [LZLC22], server/client shifted compression
+    dp-csgp      beyond-paper: DP compressed gossip over *directed* graphs
+                 (column-stochastic W + push-sum de-biasing, arXiv
+                 2512.13583); pair with topology_schedule="directed:..."
 
 The per-algorithm functional APIs (``porter_step``, ``choco_step``, ...)
 remain importable for tests and power users, but no call site should build
@@ -71,6 +74,7 @@ from repro.core.porter import (PorterConfig, PorterState, porter_init,
                                porter_step)
 from repro.core.porter_adam import (PorterAdamState, porter_adam_init,
                                     porter_adam_step)
+from repro.core.push_sum import DpCsgpState, dp_csgp_init, dp_csgp_step
 from repro.core.registry import (Algorithm, AlgorithmInfo, algorithm_info,
                                  get_factory, list_algorithms,
                                  register_algorithm)
@@ -97,7 +101,8 @@ _FRAC_COMPRESSORS = ("top_k", "block_top_k", "random_k")
 # legacy PorterConfig.variant spelling -> registry name (launch drivers
 # keep accepting --variant / variant= as sugar; one mapping, kept next to
 # the registrations it must stay in sync with)
-VARIANT_TO_ALGO = {"gc": "porter-gc", "dp": "porter-dp", "beer": "beer"}
+VARIANT_TO_ALGO = {"gc": "porter-gc", "dp": "porter-dp", "beer": "beer",
+                   "csgp": "dp-csgp"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -132,8 +137,13 @@ class ExperimentSpec:
     #   "erdos_renyi:period=8,p=0.6"          fresh connected ER every round
     #   "dropout:rate=0.2,period=8"           agent churn (offline w.p. rate)
     #   "straggler:rate=0.3,period=8"         per-link deadline misses
+    #   "directed:ring_skips,skip=2"          COLUMN-stochastic: directed
+    #   "directed:digraph,p=0.5,period=8"     ring w/ chords, random digraph,
+    #   "directed:one_way,rate=0.2,period=8"  one-way link loss (push-sum
+    #                                         algorithms only, e.g. dp-csgp)
     # Unset keys default to the topology_* fields above; the consensus
-    # stepsize derivation then uses the schedule's joint spectral gap.
+    # stepsize derivation then uses the schedule's joint spectral gap
+    # (joint contraction factor for the directed family).
     # Server/client algorithms (dp-sgd, soteriafl) have no graph and
     # ignore it.
     topology_schedule: Optional[str] = None
@@ -232,6 +242,8 @@ def resolve_schedule(spec: ExperimentSpec,
                              f"{text!r}")
         top = resolve_topology(spec) if topology is None else topology
         return MX.static_schedule(top)
+    if kind == "directed":
+        return _resolve_directed_schedule(spec, text, rest)
     allowed = {"rotate": {"kinds", "weights", "p", "seed"},
                "erdos_renyi": {"p", "period", "weights", "seed"},
                "dropout": {"rate", "period", "base", "weights", "p", "seed"},
@@ -240,7 +252,7 @@ def resolve_schedule(spec: ExperimentSpec,
     if kind not in allowed:
         raise ValueError(
             f"unknown topology schedule kind {kind!r} in {text!r}; have "
-            "static, rotate, erdos_renyi, dropout, straggler")
+            "static, rotate, erdos_renyi, dropout, straggler, directed")
     if kind == "rotate" and rest:
         # the kinds list may lead bare: 'rotate:ring+star,weights=lazy'
         first, _, more = rest.partition(",")
@@ -280,6 +292,56 @@ def resolve_schedule(spec: ExperimentSpec,
         base=kv.pop("base", spec.topology),
         weights=kv.pop("weights", spec.topology_weights),
         p=float(kv.pop("p", spec.topology_p)),
+        seed=int(kv.pop("seed", spec.topology_seed)))
+
+
+def _resolve_directed_schedule(spec: ExperimentSpec, text: str,
+                               rest: str) -> TopologySchedule:
+    """'directed:<subkind>,key=value,...' -> a column-stochastic schedule.
+
+    Subkinds (repro.core.mixing generators):
+      ring_skips   static directed ring, optional skip chords   {skip}
+      digraph      per-round random digraph                     {p, period,
+                                                                 seed}
+      one_way      directed churn: one-way link loss on the     {rate,
+                   ring-with-skips base                          period,
+                                                                 skip, seed}
+    The leading subkind token may be bare (no '='), mirroring the rotate
+    kinds list.  These tables are **column**-stochastic -- only push-sum
+    algorithms (dp-csgp) de-bias them correctly; the doubly-stochastic
+    family would silently drift toward the Perron vector.
+    """
+    first, _, more = rest.partition(",")
+    sub = first.strip()
+    if not sub or "=" in sub:
+        raise ValueError(
+            f"directed schedule needs a leading subkind in {text!r}, e.g. "
+            "'directed:ring_skips,skip=2'; have ring_skips, digraph, "
+            "one_way")
+    allowed = {"ring_skips": {"skip"},
+               "digraph": {"p", "period", "seed"},
+               "one_way": {"rate", "period", "skip", "seed"}}
+    if sub not in allowed:
+        raise ValueError(
+            f"unknown directed schedule subkind {sub!r} in {text!r}; have "
+            f"{sorted(allowed)}")
+    kv = dict(_parse_schedule_kv(more))
+    unknown = set(kv) - allowed[sub]
+    if unknown:
+        raise ValueError(f"unknown directed:{sub} schedule keys "
+                         f"{sorted(unknown)} in {text!r}; allowed: "
+                         f"{sorted(allowed[sub])}")
+    if sub == "ring_skips":
+        return MX.directed_ring_schedule(spec.n_agents,
+                                         skip=int(kv.pop("skip", 0)))
+    if sub == "digraph":
+        return MX.random_digraph_schedule(
+            spec.n_agents, p=float(kv.pop("p", spec.topology_p)),
+            period=int(kv.pop("period", 8)),
+            seed=int(kv.pop("seed", spec.topology_seed)))
+    return MX.directed_churn_schedule(
+        spec.n_agents, rate=float(kv.pop("rate", 0.2)),
+        period=int(kv.pop("period", 8)), skip=int(kv.pop("skip", 2)),
         seed=int(kv.pop("seed", spec.topology_seed)))
 
 
@@ -406,6 +468,14 @@ def build(spec: ExperimentSpec, loss_fn, *,
     if info.decentralized:
         top = resolve_topology(spec) if topology is None else topology
         sched = resolve_schedule(spec, top)
+        if sched is not None and sched.is_directed \
+                and spec.algo not in _PUSH_SUM_ALGOS:
+            raise ValueError(
+                f"{spec.algo} assumes doubly-stochastic mixing but "
+                f"{spec.topology_schedule!r} is column-stochastic "
+                "(directed): without push-sum de-biasing the iterates "
+                "drift toward the Perron vector -- use algo='dp-csgp' "
+                "for directed topologies")
     comp, mixer, engine = None, None, None
     if info.decentralized and info.compressed:
         # the one engine-construction path, shared with microbenchmarks
@@ -462,8 +532,13 @@ def _algorithm(spec, r, *, state_cls, init, step, config=None) -> Algorithm:
 
 
 # ---------------------------------------------------------------------------
-# the eight registered entry points
+# the nine registered entry points
 # ---------------------------------------------------------------------------
+
+# algorithms that de-bias column-stochastic (directed) mixing correctly;
+# everything else is rejected by build() when handed a directed schedule
+_PUSH_SUM_ALGOS = frozenset({"dp-csgp"})
+
 
 def _require_tau(spec: ExperimentSpec) -> float:
     """DP oracles calibrate noise to tau's sensitivity -- no clipping, no
@@ -575,6 +650,25 @@ def _build_dpsgd(spec, loss_fn, r):
         return BL.dpsgd_init(params)
 
     return _algorithm(spec, r, state_cls=BL.DpSgdState, init=init, step=step)
+
+
+@register_algorithm("dp-csgp", dp=True)
+def _build_dp_csgp(spec, loss_fn, r):
+    tau = _require_tau(spec)
+    cfg = PorterConfig(eta=spec.eta, gamma=r.gamma, tau=tau, variant="dp",
+                       clip_mode=spec.clip_mode, sigma_p=spec.sigma_p,
+                       grad_dtype=spec.buffer_dtype)
+    step = functools.partial(dp_csgp_step, cfg, loss_fn, None, None,
+                             engine=r.engine)
+    # the push-sum mirrors need the actual round-0 matrix (m = W q with a
+    # column-stochastic W has no no-mix shortcut -- see dp_csgp_init)
+    w0 = r.schedule.ws[0] if r.schedule is not None else r.topology.w
+    init = _bind_init(
+        spec, r,
+        functools.partial(dp_csgp_init, w0=w0,
+                          buffer_dtype=spec.buffer_dtype))
+    return _algorithm(spec, r, state_cls=DpCsgpState, init=init, step=step,
+                      config=cfg)
 
 
 @register_algorithm("soteriafl", dp=True, decentralized=False)

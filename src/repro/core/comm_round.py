@@ -45,6 +45,16 @@ value, and everything downstream of the mix -- including the fused ef_track
 so the pallas path and the per-shard plane layout need no schedule plumbing
 at all.
 
+Push-sum (directed graphs): :meth:`CommRound.exchange_ps` /
+:meth:`CommRound.step_ps` run the same round over a *column*-stochastic
+``W_t`` while carrying the scalar push-sum weight plane (DP-CSGP's
+de-biasing state, read points divide by it) through the **same**
+collectives the param round already issues -- an extra flat column for
+the dense/ring executors, +4 bitcast bytes on the codec buffers -- so
+directed gossip adds zero communication ops (HLO-asserted) and the weight
+increment is transported exactly (never compressed: compressing it would
+break the column-mass invariant ``1^T W = 1^T`` that push-sum relies on).
+
 Wire accounting: :meth:`CommRound.wire_bytes` converts (gossip mode,
 compressor, n_agents, d) into per-round bytes via
 :func:`repro.core.gossip.gossip_wire_bytes` / ``Compressor.wire_bits`` so
@@ -231,6 +241,36 @@ class CommRound:
         c = self.compress(key, delta)
         return c, apply_mixer(self.mixer, c, t)
 
+    def exchange_ps(self, key, y, q, yw, qw, t=None):
+        """Push-sum exchange: :meth:`exchange` plus the scalar weight plane.
+
+        ``yw``/``qw`` are the (n,) push-sum weight buffer and its surrogate.
+        Returns ``(c, wc, cw, wcw)`` where ``(c, wc)`` are the compressed
+        param increment and its mix exactly as in :meth:`exchange`, and
+        ``cw = yw - qw`` (the weight increment, **never compressed** -- the
+        column-mass invariant ``1^T W = 1^T`` breaks otherwise) with
+        ``wcw = W_t @ cw``.  The weight rides *inside* the collectives the
+        param round already issues (an extra flat column for dense/ring, +4
+        bitcast bytes on the codec buffers), so the collective count is
+        identical to :meth:`exchange` -- the HLO tests pin this.
+        """
+        delta = _tree(jnp.subtract, y, q)
+        dw = jnp.subtract(yw, qw)
+        if getattr(self.mixer, "wire_codec", None) is not None:
+            return self.mixer.exchange_ps(key, delta, dw, t)
+        push = getattr(self.mixer, "push", None)
+        if push is None:
+            raise ValueError(
+                "push-sum needs a mixer with weight-plane transport (the "
+                "dense or ring executor, or a codec executor built with "
+                "wire='packed_bits'); the plain packed all-gather mixer "
+                "ships (value, index) pairs only and has no slot for the "
+                "weight scalar -- use gossip='ring'/'dense' or a bit-packed "
+                "wire format for directed (column-stochastic) topologies")
+        c = self.compress(key, delta)
+        wc, wcw = push(c, dw, t)
+        return c, wc, dw, wcw
+
     # -- fused state updates ------------------------------------------------
 
     def track(self, key, v, q, m, g, g_prev, gamma: float, t=None):
@@ -286,6 +326,35 @@ class CommRound:
                    (x0 + gamma * (mm - qq) - eta * vv).astype(x0.dtype),
                    x, m2, q2, v)
         return x2, q2, m2
+
+    def step_ps(self, key, x, q, m, v, xw, qw, mw, gamma: float, eta: float,
+                t=None):
+        """Push-sum parameter step: :meth:`step` plus the weight recursion.
+
+        The param buffers update exactly as :meth:`step`; the (n,) weight
+        planes follow the same EF/gossip recursion with the *exact*
+        increment (``qw += cw; mw += W cw; xw' = xw + gamma*(mw - qw)``),
+        which composes to ``xw' = ((1-gamma) I + gamma W) xw`` -- still
+        column-stochastic, so the weights stay strictly positive and
+        converge to ``n * pi`` (the Perron vector).  Read points de-bias by
+        ``x / xw``.  Returns (x', q', m', xw', qw', mw').
+        """
+        c, wc, cw, wcw = self.exchange_ps(key, x, q, xw, qw, t)
+        return self.step_ps_update(c, wc, cw, wcw, x, q, m, v, xw, qw, mw,
+                                   gamma, eta)
+
+    def step_ps_update(self, c, wc, cw, wcw, x, q, m, v, xw, qw, mw,
+                       gamma: float, eta: float):
+        """The fused second half of :meth:`step_ps` (no communication).
+
+        The weight-plane update is three (n,)-vector AXPYs -- negligible
+        next to the param planes, so it stays plain jnp on every backend.
+        """
+        x2, q2, m2 = self.step_update(c, wc, x, q, m, v, gamma, eta)
+        qw2 = qw + cw
+        mw2 = mw + wcw
+        xw2 = (xw + gamma * (mw2 - qw2)).astype(xw.dtype)
+        return x2, q2, m2, xw2, qw2, mw2
 
     def gossip_apply(self, key, y, q, m, gamma: float, scale: float = 1.0,
                      t=None):
@@ -358,7 +427,30 @@ class CommRound:
             total += ns * (-(-local // PACK_BLOCK))
         return total
 
-    def wire_bytes(self, tree_or_d, n_agents: Optional[int] = None) -> float:
+    def _ps_weight_bytes(self, n_agents: int, measured: bool) -> float:
+        """Extra bytes the push-sum weight plane puts on the wire per round.
+
+        Each shipped agent buffer set carries one exact f32 weight (4
+        bytes): as a flat extra column for dense/ring, as bitcast words
+        appended to the last codec buffer.  The multiplier follows each
+        mode's link convention (:func:`repro.core.gossip.gossip_wire_bytes`):
+        'ring' ships per-agent to its live neighbors (one shift at n=2),
+        every other mode ships all n agents' buffers.  For codec mixers the
+        measured path traces the weight-word layout off the codec itself
+        (:func:`repro.core.wire_formats.measured_weight_nbytes`).
+        """
+        codec = getattr(self.mixer, "wire_codec", None)
+        if codec is not None and measured:
+            per = float(WF.measured_weight_nbytes(codec))
+        else:
+            per = 4.0
+        mode = getattr(self.mixer, "wire_mode", "dense")
+        if mode == "ring":
+            return (1.0 if n_agents == 2 else 2.0) * per
+        return float(n_agents) * per
+
+    def wire_bytes(self, tree_or_d, n_agents: Optional[int] = None,
+                   push_sum: bool = False) -> float:
         """Model-level bytes crossing agent links per round for one buffer.
 
         Accepts either an agent-stacked pytree (n and d inferred) or a
@@ -378,10 +470,17 @@ class CommRound:
         single-buffer convention.  Compare algorithms under the *same*
         gossip mode (as benchmarks/ablation.py does); cross-mode numbers
         follow each wire format's own link accounting.
+
+        ``push_sum=True`` accounts a :meth:`exchange_ps` round instead: the
+        weight plane's bytes (4 per shipped buffer set, see
+        :meth:`_ps_weight_bytes`) are added on top, in both the measured and
+        the model path, so ``--achieved-bytes`` parity covers the directed
+        codec path too.
         """
         codec = getattr(self.mixer, "wire_codec", None)
         if codec is not None:
-            return self._codec_bytes(tree_or_d, n_agents, measured=True)
+            return self._codec_bytes(tree_or_d, n_agents, measured=True,
+                                     push_sum=push_sum)
         tree = None
         if n_agents is None:
             tree = tree_or_d
@@ -390,6 +489,8 @@ class CommRound:
             d = sum(int(l.size) // n_agents for l in leaves)
         else:
             d = int(tree_or_d)
+        extra = (self._ps_weight_bytes(n_agents, measured=True)
+                 if push_sum else 0.0)
         mode = getattr(self.mixer, "wire_mode", "dense")
         if mode in ("ring", "packed"):
             frac = getattr(self.mixer, "wire_frac", None)
@@ -397,12 +498,12 @@ class CommRound:
             if mode == "packed" and tree is not None:
                 k_b = max(int(round(frac * PACK_BLOCK)), 1)
                 windows = self._packed_windows(tree, n_agents)
-                return float(n_agents) * windows * k_b * 8.0
-            return gossip_wire_bytes(mode, n_agents, d, frac=frac)
-        return n_agents * self.compressor.wire_bits(d) / 8.0
+                return float(n_agents) * windows * k_b * 8.0 + extra
+            return gossip_wire_bytes(mode, n_agents, d, frac=frac) + extra
+        return n_agents * self.compressor.wire_bits(d) / 8.0 + extra
 
-    def wire_bytes_model(self, tree_or_d,
-                         n_agents: Optional[int] = None) -> float:
+    def wire_bytes_model(self, tree_or_d, n_agents: Optional[int] = None,
+                         push_sum: bool = False) -> float:
         """The *analytic* byte model for the same round (cross-check).
 
         For codec (bit-packed) mixers this is the layout arithmetic of
@@ -414,11 +515,12 @@ class CommRound:
         accounting, so this returns the same value as :meth:`wire_bytes`.
         """
         if getattr(self.mixer, "wire_codec", None) is not None:
-            return self._codec_bytes(tree_or_d, n_agents, measured=False)
-        return self.wire_bytes(tree_or_d, n_agents)
+            return self._codec_bytes(tree_or_d, n_agents, measured=False,
+                                     push_sum=push_sum)
+        return self.wire_bytes(tree_or_d, n_agents, push_sum=push_sum)
 
     def _codec_bytes(self, tree_or_d, n_agents: Optional[int],
-                     measured: bool) -> float:
+                     measured: bool, push_sum: bool = False) -> float:
         """Collective bytes under a codec mixer, measured or modeled.
 
         Windows are counted per (leaf x model shard) exactly like
@@ -442,6 +544,9 @@ class CommRound:
             per_window = float(codec.payload_bytes_per_window
                                + codec.overhead_bytes_per_window)
         per_agent = windows * per_window
+        if push_sum:
+            per_agent += (float(WF.measured_weight_nbytes(codec))
+                          if measured else 4.0)
         mode = getattr(self.mixer, "wire_mode", "packed")
         if mode == "ring":
             shifts = 1.0 if n_agents == 2 else 2.0

@@ -34,6 +34,19 @@ ring fast path keeps its two-ppermute shift structure and only traces the
 *band weights* per round (the graph stays a ring; weights rotate), so its
 wire bytes stay 2*d regardless of the schedule.  Static mixers ignore the
 round index; :func:`apply_mixer` dispatches either way.
+
+Push-sum (directed, column-stochastic W): the dense and ring executors
+expose ``mix.push(tree, wvec, t)`` which mixes the scalar push-sum weight
+plane (shape (n,)) alongside the params with the *same* W, and the codec
+executors expose ``mix.exchange_ps(key, tree, dw, t)`` which ships the
+exact f32 weight increment bitcast inside the packed buffers.  In every
+case the weight rides inside a collective the executor already issues --
+concatenated onto the first leaf's flattened block (dense einsum, ring
+ppermute) or appended as bitcast words to the last wire buffer (codec) --
+so carrying the weight plane adds 4 bytes per shipped buffer and zero
+extra collectives (the compiled-HLO tests pin this).  Weights are never
+compressed: the column-mass conservation push-sum de-biasing relies on
+(1^T W = 1^T) must hold exactly for the weight recursion.
 """
 
 from __future__ import annotations
@@ -115,7 +128,15 @@ def make_dense_mixer(w) -> MixFn:
     """W @ incr via einsum over the agent axis (all-gather under pjit).
 
     ``w``: (n, n) static matrix, or a stacked (period, n, n) schedule table
-    -- the mixer then indexes it with the traced round argument."""
+    -- the mixer then indexes it with the traced round argument.
+
+    Push-sum: ``mix.push(tree, wvec, t)`` additionally mixes the scalar
+    push-sum weight plane ``wvec`` (shape (n,)) with the *same* W.  The
+    weight rides as one extra column concatenated onto the first leaf's
+    flattened agent block, so the einsum count -- and under pjit the
+    collective count -- is identical to the plain call; for f32 leaves the
+    param output is bit-identical to ``mix(tree, t)``.
+    """
     w_np, time_varying = _schedule_table(w)
     w_j = jnp.asarray(w_np, dtype=jnp.float32)
 
@@ -128,6 +149,23 @@ def make_dense_mixer(w) -> MixFn:
             del t  # static
             return jax.tree_util.tree_map(lambda l: _einsum_w(w_j, l), tree)
 
+    def push(tree, wvec, t=None):
+        if time_varying and t is None:
+            raise ValueError("time-varying dense mixer needs the round "
+                             "index (pass t=state.step)")
+        w_t = _entry(w_j, t) if time_varying else w_j
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        l0 = leaves[0]
+        flat0 = l0.reshape(l0.shape[0], -1).astype(jnp.float32)
+        aug = jnp.concatenate(
+            [flat0, wvec.astype(jnp.float32)[:, None]], axis=1)
+        aug_m = jnp.einsum("ij,jd->id", w_t.astype(jnp.float32), aug)
+        out0 = aug_m[:, :-1].reshape(l0.shape).astype(l0.dtype)
+        w_m = aug_m[:, -1].astype(wvec.dtype)
+        rest = [_einsum_w(w_t, l) for l in leaves[1:]]
+        return treedef.unflatten([out0] + rest), w_m
+
+    mix.push = push
     mix.time_varying = time_varying
     return mix
 
@@ -258,6 +296,48 @@ def make_ring_mixer(w, mesh: Mesh,
             check_vma=False)
         return fn(tree)
 
+    def push(tree, wvec, t=None):
+        """Push-sum ring gossip: mix ``tree`` and the (n,) weight plane
+        ``wvec`` with the same banded W.  The weight scalar is concatenated
+        onto the first leaf's flattened local block before the shifts, so
+        the ppermute count is identical to the plain call (the weight adds
+        4 wire bytes per shipped block, no extra collective)."""
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        if leaf_specs is not None:
+            specs = leaf_specs
+        else:
+            specs = jax.tree_util.tree_map(
+                lambda l: P(axes if len(axes) > 1 else axes[0],
+                            *([None] * (l.ndim - 1))), tree)
+        spec_leaves = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda s: isinstance(s, P))
+        w_spec = P(axes if len(axes) > 1 else axes[0])
+        if time_varying:
+            if t is None:
+                raise ValueError("time-varying ring mixer needs the round "
+                                 "index (pass t=state.step)")
+            b = _entry(bands_j, t)
+        else:
+            b = jnp.asarray([w_self, w_prev, w_next], jnp.float32)
+
+        def run(lvs, wv, bb):
+            l0 = lvs[0]
+            flat0 = l0.reshape(1, -1).astype(jnp.float32)
+            aug = jnp.concatenate(
+                [flat0, wv.astype(jnp.float32).reshape(1, 1)], axis=1)
+            aug_m = local(aug, bb[0], bb[1], bb[2])
+            out0 = aug_m[:, :-1].reshape(l0.shape).astype(l0.dtype)
+            w_m = aug_m[:, -1].reshape(wv.shape).astype(wv.dtype)
+            rest = [local(l, bb[0], bb[1], bb[2]) for l in lvs[1:]]
+            return [out0] + rest, w_m
+
+        fn = shard_map(run, mesh=mesh,
+                       in_specs=(spec_leaves, w_spec, P()),
+                       out_specs=(spec_leaves, w_spec), check_vma=False)
+        outs, w_m = fn(leaves, wvec, b)
+        return treedef.unflatten(outs), w_m
+
+    mix.push = push
     mix.time_varying = time_varying
     return mix
 
@@ -394,6 +474,51 @@ def _pack_local(codec: WF.WireFormat, key, x):
     return bufs, codec.unpack(*bufs), flat.shape[0]
 
 
+# Push-sum weight transport for codec executors: the exact (uncompressed)
+# f32 weight increment is bitcast into words of the last wire buffer's
+# dtype and appended to its flattened payload -- +4 bytes per shipped
+# buffer, zero extra collectives.  Bitcasting (not casting) keeps the
+# transport exact: the receiver recovers the identical f32 bits.
+
+def _weight_word_count(dtype) -> int:
+    itemsize = jnp.dtype(dtype).itemsize
+    if itemsize not in (2, 4):
+        raise ValueError(f"cannot bitcast an f32 push-sum weight into "
+                         f"{jnp.dtype(dtype)} wire words")
+    return 4 // itemsize
+
+
+def _append_weight(bufs, wloc):
+    """(bufs, (1,) weight) -> (shipped bufs, original last-buffer shape)."""
+    last = bufs[-1]
+    w32 = jax.lax.bitcast_convert_type(
+        wloc.astype(jnp.float32).reshape(1), jnp.uint32)
+    if jnp.dtype(last.dtype).itemsize == 4:
+        words = w32
+    else:
+        words = jax.lax.bitcast_convert_type(w32, jnp.uint16).reshape(-1)
+    if words.dtype != last.dtype:
+        words = jax.lax.bitcast_convert_type(words, last.dtype)
+    return tuple(bufs[:-1]) + (jnp.concatenate([last.reshape(-1), words]),), \
+        last.shape
+
+
+def _split_weight(bufs, last_shape):
+    """Inverse of :func:`_append_weight`: -> (original bufs, f32 weight)."""
+    last = bufs[-1]
+    nw = _weight_word_count(last.dtype)
+    words = last[last.shape[0] - nw:]
+    orig = last[:last.shape[0] - nw].reshape(last_shape)
+    if jnp.dtype(words.dtype).itemsize == 2:
+        words = jax.lax.bitcast_convert_type(words, jnp.uint16)
+        w32 = jax.lax.bitcast_convert_type(words, jnp.uint32)
+    else:
+        w32 = jax.lax.bitcast_convert_type(words, jnp.uint32).reshape(-1)[:1]
+    w32 = w32.reshape(())
+    return tuple(bufs[:-1]) + (orig,), \
+        jax.lax.bitcast_convert_type(w32, jnp.float32)
+
+
 def make_ring_codec_mixer(w, mesh: Mesh, codec: WF.WireFormat,
                           agent_axes: Sequence[str] = ("data",),
                           leaf_specs=None) -> MixFn:
@@ -484,10 +609,95 @@ def make_ring_codec_mixer(w, mesh: Mesh, codec: WF.WireFormat,
         cs, wcs = fn(leaves, keys, b)
         return treedef.unflatten(cs), treedef.unflatten(wcs)
 
+    def local_ps(x, b_self, b_prev, b_next, wloc, key):
+        """Leaf-0 variant of ``local``: the agent's exact f32 weight
+        increment rides bitcast inside the shipped buffers (+4 bytes, no
+        extra ppermute); returns (c, wc, cw, wcw) local blocks."""
+        bufs, c_rows, d = _pack_local(codec, key, x)
+        ship, last_shape = _append_weight(bufs, wloc)
+        w_loc = wloc.astype(jnp.float32).reshape(())
+        out = b_self * c_rows
+        w_out = b_self * w_loc
+
+        def absorb(shipped, band):
+            nonlocal out, w_out
+            orig, wj = _split_weight(shipped, last_shape)
+            out = out + band * codec.unpack(*orig)
+            w_out = w_out + band * wj
+
+        if len(axes) == 1:
+            ax = axes[0]
+            if use_prev:
+                absorb(shift_bufs(ship, +1, ax), b_prev)
+            if use_next:
+                absorb(shift_bufs(ship, -1, ax), b_next)
+        else:
+            pod_ax, data_ax = axes
+            dsize = mesh.shape[data_ax]
+            didx = jax.lax.axis_index(data_ax)
+            if use_prev:
+                intra = shift_bufs(ship, +1, data_ax)
+                cross = shift_bufs(intra, +1, pod_ax)
+                absorb(tuple(jnp.where(didx == 0, c, i_)
+                             for c, i_ in zip(cross, intra)), b_prev)
+            if use_next:
+                intra = shift_bufs(ship, -1, data_ax)
+                cross = shift_bufs(intra, -1, pod_ax)
+                absorb(tuple(jnp.where(didx == dsize - 1, c, i_)
+                             for c, i_ in zip(cross, intra)), b_next)
+        to_leaf = lambda rows: WF.from_windows(rows, d, x.shape
+                                               ).astype(x.dtype)
+        return (to_leaf(c_rows), to_leaf(out),
+                w_loc.reshape(wloc.shape), w_out.reshape(wloc.shape))
+
+    def exchange_ps(key, tree, dw, t=None):
+        """Push-sum exchange: like ``exchange`` plus the exact (n,) weight
+        increment ``dw``, shipped inside leaf 0's packed buffers.  Returns
+        (c, wc, cw, wcw); cw == dw exactly (weights are never compressed,
+        else the column-mass invariant breaks)."""
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        keys = jax.random.split(key, len(leaves))
+        if leaf_specs is not None:
+            specs = leaf_specs
+        else:
+            specs = jax.tree_util.tree_map(
+                lambda l: P(axes if len(axes) > 1 else axes[0],
+                            *([None] * (l.ndim - 1))), tree)
+        spec_leaves = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda s: isinstance(s, P))
+        w_spec = P(axes if len(axes) > 1 else axes[0])
+
+        if time_varying:
+            if t is None:
+                raise ValueError("time-varying ring codec mixer needs the "
+                                 "round index (pass t=state.step)")
+            b = _entry(bands_j, t)
+        else:
+            b = jnp.asarray([w_self, w_prev, w_next], jnp.float32)
+
+        def run(lvs, wv, ks, bb):
+            i = _agent_index(mesh, axes)
+            c0, wc0, cw, wcw = local_ps(lvs[0], bb[0], bb[1], bb[2], wv,
+                                        jax.random.fold_in(ks[0], i))
+            rest = [local(l, bb[0], bb[1], bb[2],
+                          jax.random.fold_in(ks[j], i))
+                    for j, l in enumerate(lvs[1:], start=1)]
+            return ([c0] + [o[0] for o in rest],
+                    [wc0] + [o[1] for o in rest], cw, wcw)
+
+        fn = shard_map(run, mesh=mesh,
+                       in_specs=(spec_leaves, w_spec, P(), P()),
+                       out_specs=(spec_leaves, spec_leaves, w_spec, w_spec),
+                       check_vma=False)
+        cs, wcs, cw, wcw = fn(leaves, dw, keys, b)
+        return (treedef.unflatten(cs), treedef.unflatten(wcs),
+                cw.astype(dw.dtype), wcw.astype(dw.dtype))
+
     def mix(*a, **k):                      # fresh object per factory call
         _codec_mix_error()
 
     mix.exchange = exchange
+    mix.exchange_ps = exchange_ps
     mix.time_varying = time_varying
     mix.wire_codec = codec
     return mix
@@ -557,10 +767,78 @@ def make_packed_codec_mixer(w, mesh: Mesh, codec: WF.WireFormat,
         cs, wcs = fn(leaves, w_rows, keys)
         return treedef.unflatten(cs), treedef.unflatten(wcs)
 
+    def local_ps(x, w_col, wloc, key):
+        """Leaf-0 variant of ``local``: the exact f32 weight increment is
+        bitcast into the shipped buffers (+4 bytes in the all-gather, no
+        extra collective); returns (c, wc, cw, wcw) local blocks."""
+        bufs, c_rows, d = _pack_local(codec, key, x)
+        ship, last_shape = _append_weight(bufs, wloc)
+        all_bufs = tuple(
+            jax.lax.all_gather(b, gather_axis).reshape(n, *b.shape)
+            for b in ship)
+
+        def add_agent(carry, j):
+            o, wacc = carry
+            orig, wj = _split_weight(tuple(ab[j] for ab in all_bufs),
+                                     last_shape)
+            return (o + w_col[j] * codec.unpack(*orig),
+                    wacc + w_col[j] * wj), None
+
+        (out, w_out), _ = jax.lax.scan(
+            add_agent, (jnp.zeros_like(c_rows), jnp.zeros((), jnp.float32)),
+            jnp.arange(n))
+        to_leaf = lambda rows: WF.from_windows(rows, d, x.shape
+                                               ).astype(x.dtype)
+        return (to_leaf(c_rows), to_leaf(out),
+                wloc.astype(jnp.float32),
+                w_out.reshape(wloc.shape))
+
+    def exchange_ps(key, tree, dw, t=None):
+        """Push-sum exchange: like ``exchange`` plus the exact (n,) weight
+        increment ``dw``, shipped inside leaf 0's packed buffers.  Returns
+        (c, wc, cw, wcw); cw == dw exactly."""
+        if time_varying:
+            if t is None:
+                raise ValueError("time-varying packed codec mixer needs the "
+                                 "round index (pass t=state.step)")
+            w_rows = _entry(w_j, t)
+        else:
+            w_rows = w_j
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        keys = jax.random.split(key, len(leaves))
+        if leaf_specs is not None:
+            specs = leaf_specs
+        else:
+            specs = jax.tree_util.tree_map(
+                lambda l: P(axes if len(axes) > 1 else axes[0],
+                            *([None] * (l.ndim - 1))), tree)
+        spec_leaves = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda s: isinstance(s, P))
+        w_spec = P(axes if len(axes) > 1 else axes[0])
+
+        def run(lvs, wv, w_all, ks):
+            i = _agent_index(mesh, axes)
+            row = w_all[i]
+            c0, wc0, cw, wcw = local_ps(lvs[0], row, wv,
+                                        jax.random.fold_in(ks[0], i))
+            rest = [local(l, row, jax.random.fold_in(ks[j], i))
+                    for j, l in enumerate(lvs[1:], start=1)]
+            return ([c0] + [o[0] for o in rest],
+                    [wc0] + [o[1] for o in rest], cw, wcw)
+
+        fn = shard_map(run, mesh=mesh,
+                       in_specs=(spec_leaves, w_spec, P(), P()),
+                       out_specs=(spec_leaves, spec_leaves, w_spec, w_spec),
+                       check_vma=False)
+        cs, wcs, cw, wcw = fn(leaves, dw, w_rows, keys)
+        return (treedef.unflatten(cs), treedef.unflatten(wcs),
+                cw.astype(dw.dtype), wcw.astype(dw.dtype))
+
     def mix(*a, **k):
         _codec_mix_error()
 
     mix.exchange = exchange
+    mix.exchange_ps = exchange_ps
     mix.time_varying = time_varying
     mix.wire_codec = codec
     return mix

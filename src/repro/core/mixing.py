@@ -1,10 +1,11 @@
-"""Communication graphs and mixing (gossip) matrices (paper Definition 1).
+"""Communication graphs and mixing (gossip) matrices: doubly-stochastic
+undirected mixing (paper Definition 1) and column-stochastic directed
+mixing for push-sum (DP-CSGP).
 
-The mixing matrix W satisfies W 1 = 1, W^T 1 = 1 and w_ij = 0 for (i,j) not in
-the graph; the mixing rate is alpha = || W - (1/n) 11^T ||_op.
-
-Graph builders return symmetric adjacency matrices (numpy, host-side -- these
-are a few hundred entries and feed compile-time constants).  Weight schemes:
+Undirected graphs carry a doubly stochastic W (W 1 = 1, W^T 1 = 1, w_ij = 0
+off the graph); the mixing rate is alpha = || W - (1/n) 11^T ||_op.  Graph
+builders return symmetric adjacency matrices (numpy, host-side -- a few
+hundred entries, feeding compile-time constants).  Weight schemes:
 
 * ``metropolis``      w_ij = 1/(1 + max(deg_i, deg_j)) -- doubly stochastic.
 * ``best_constant``   W = I - (2 / (lam_1(L) + lam_{n-1}(L))) L -- the
@@ -15,19 +16,41 @@ are a few hundred entries and feed compile-time constants).  Weight schemes:
                       explicitly allows.
 * ``lazy``            (I + W)/2 of the metropolis matrix.
 
+Directed graphs carry a *column*-stochastic W only (1^T W = 1^T; rows need
+not sum to 1): node j splits unit mass equally over its out-neighbours
+(self-loop included), ``w_ij = 1/outdeg_j`` for every edge j -> i.  The
+adjacency convention everywhere is ``A[i, j] = 1  <=>  edge j -> i`` --
+consistent with ``x_new = W @ x`` delivering j's mass to i.  Column
+stochasticity conserves column mass (sums over agents), which is exactly
+what the push-sum weight plane and gradient-tracking invariants need; the
+de-bias happens at read points (``x_i / w_i``), not in W.
+
 All functions are deterministic given a seed so that experiments are
 reproducible across processes/agents.
 
 Time-varying topologies: :class:`TopologySchedule` stacks a periodic window
-of mixing matrices ``W_0 .. W_{p-1}`` (each doubly stochastic) built by a
-generator -- graph rotation, per-round Erdos-Renyi resampling, agent
-dropout (churn), or straggler link failures.  Round ``t`` of training mixes
-with ``W_{t mod p}``.  Construction validates that the *union* of the
-window's graphs is connected and reports the joint spectral quantities of
-the window product ``(W_{p-1} - J) ... (W_0 - J)`` (with ``J = 11^T/n``),
-which is what consensus actually contracts by over one period.  The
-executors in :mod:`repro.core.gossip` index the stacked table with a traced
-round index, so one compiled program serves the whole schedule.
+of mixing matrices ``W_0 .. W_{p-1}`` built by a generator.  Round ``t`` of
+training mixes with ``W_{t mod p}``.  The registered generators, and which
+stochasticity each one produces (see ``SCHEDULE_STOCHASTICITY``):
+
+* doubly stochastic (undirected): ``rotate`` (graph rotation),
+  ``erdos_renyi`` (per-round resampling), ``dropout`` (agent churn),
+  ``straggler`` (symmetric link failures) -- plus ``static`` wrapping a
+  built :class:`Topology`.
+* column stochastic (directed, push-sum): ``ring_skips`` (directed ring
+  with skip chords), ``digraph`` (per-round random digraph), ``one_way``
+  (directed churn: each directed link drops independently -- an agent can
+  hear you while you can't hear it).
+
+Construction validates the window: doubly stochastic schedules need a
+*connected* union graph and report the joint spectral quantities of the
+window product ``(W_{p-1} - J) ... (W_0 - J)`` (``J = 11^T/n``); directed
+schedules need a *strongly connected* union digraph and report the joint
+contraction factor -- the second-largest eigenvalue modulus of the window
+product ``W_{p-1} ... W_0`` (the Perron root 1 excluded), the quantity
+push-sum consensus actually contracts by.  The executors in
+:mod:`repro.core.gossip` index the stacked table with a traced round
+index, so one compiled program serves the whole schedule.
 """
 
 from __future__ import annotations
@@ -51,13 +74,20 @@ __all__ = [
     "mixing_matrix",
     "mixing_rate",
     "spectral_gap",
+    "contraction_factor",
     "make_topology",
     "static_schedule",
     "rotating_schedule",
     "erdos_renyi_schedule",
     "dropout_schedule",
     "straggler_schedule",
+    "directed_ring_graph",
+    "column_stochastic_matrix",
+    "directed_ring_schedule",
+    "random_digraph_schedule",
+    "directed_churn_schedule",
     "make_schedule",
+    "SCHEDULE_STOCHASTICITY",
 ]
 
 GraphKind = Literal["ring", "torus", "erdos_renyi", "complete", "star",
@@ -213,6 +243,48 @@ def spectral_gap(w: np.ndarray) -> float:
     return 1.0 - mixing_rate(w)
 
 
+def contraction_factor(w: np.ndarray) -> float:
+    """Second-largest eigenvalue modulus of a (column-)stochastic matrix.
+
+    The Perron root 1 is excluded (one eigenvalue closest to 1 is dropped);
+    what remains bounds how fast the relative disagreement -- and the
+    push-sum weight plane -- contracts per application of W.  For the
+    symmetric doubly stochastic matrices built here this coincides with
+    :func:`mixing_rate` (W - J has the same non-Perron spectrum); for
+    directed column-stochastic W the operator norm of W - J can exceed 1
+    even when W mixes, so the eigenvalue modulus is the honest report.  A
+    matrix whose eigenvalue 1 is not simple (e.g. a disconnected round)
+    returns 1.0.
+    """
+    ev = np.linalg.eigvals(np.asarray(w, np.float64))
+    perron = int(np.argmin(np.abs(ev - 1.0)))
+    rest = np.delete(ev, perron)
+    if rest.size == 0:
+        return 0.0
+    return float(np.max(np.abs(rest)))
+
+
+def _is_strongly_connected(a: np.ndarray) -> bool:
+    """Strong connectivity of the digraph ``A[i, j] = 1 <=> j -> i``:
+    node 0 reaches everyone (BFS on A^T) and everyone reaches node 0
+    (BFS on A)."""
+    return _is_connected_directed(a.T) and _is_connected_directed(a)
+
+
+def _is_connected_directed(a: np.ndarray) -> bool:
+    """BFS from node 0 following rows as out-edges of the frontier node."""
+    n = a.shape[0]
+    seen = {0}
+    frontier = [0]
+    while frontier:
+        u = frontier.pop()
+        for v in np.nonzero(a[u])[0]:
+            if v not in seen:
+                seen.add(int(v))
+                frontier.append(int(v))
+    return len(seen) == n
+
+
 def _w_is_banded_ring(w: np.ndarray) -> bool:
     n = w.shape[0]
     off = w.copy()
@@ -258,13 +330,19 @@ def make_topology(kind: GraphKind, n: int, weights: WeightKind = "metropolis",
 class TopologySchedule:
     """A periodic window of mixing matrices; round t mixes with W_{t mod p}.
 
-    ``ws`` is the stacked ``(period, n, n)`` table of doubly stochastic
-    matrices (host-side float64; the gossip executors push an f32 copy to
-    device and index it with a traced round counter).  ``alphas`` are the
-    per-round mixing rates -- an individual round of a churn schedule may
-    not mix at all (alpha_t = 1 when the round's graph is disconnected);
-    what the construction guarantees instead is that the *window* mixes:
-    the union graph is connected and ``joint_alpha < 1``.
+    ``ws`` is the stacked ``(period, n, n)`` table (host-side float64; the
+    gossip executors push an f32 copy to device and index it with a traced
+    round counter).  ``stochasticity`` is ``"doubly"`` for undirected
+    schedules (every round doubly stochastic) or ``"column"`` for directed
+    push-sum schedules (columns sum to 1, rows need not).  ``alphas`` are
+    the per-round mixing rates -- an individual round of a churn schedule
+    may not mix at all (alpha_t = 1 when the round's graph is
+    disconnected); what the construction guarantees instead is that the
+    *window* mixes: the union graph is (strongly, for directed) connected
+    and ``joint_alpha < 1``.  For doubly stochastic schedules
+    ``joint_alpha`` is ``|| (W_{p-1}-J) ... (W_0-J) ||_op``; for directed
+    schedules it is the joint contraction factor -- the second-largest
+    eigenvalue modulus of ``W_{p-1} ... W_0``.
     """
 
     kind: str
@@ -272,11 +350,17 @@ class TopologySchedule:
     ws: np.ndarray            # (period, n, n)
     adjacencies: np.ndarray   # (period, n, n), binary
     alphas: Tuple[float, ...]
-    joint_alpha: float        # || (W_{p-1}-J) ... (W_0-J) ||_op
+    joint_alpha: float        # window contraction (see class docstring)
+    stochasticity: str = "doubly"   # "doubly" | "column"
 
     @property
     def period(self) -> int:
         return self.ws.shape[0]
+
+    @property
+    def is_directed(self) -> bool:
+        """True for column-stochastic (push-sum) schedules."""
+        return self.stochasticity == "column"
 
     @property
     def alpha(self) -> float:
@@ -461,12 +545,172 @@ def straggler_schedule(n: int, rate: float = 0.2, period: int = 8,
                           period, _churn_weights(weights), seed, prune)
 
 
+# ---------------------------------------------------------------------------
+# Directed (column-stochastic) schedules for push-sum / DP-CSGP
+# ---------------------------------------------------------------------------
+
+def directed_ring_graph(n: int, skip: int = 0) -> np.ndarray:
+    """Directed ring adjacency ``A[i, j] = 1 <=> j -> i``: every node sends
+    to its clockwise neighbour (j -> j+1), plus an optional skip chord
+    (j -> j+skip) when ``skip >= 2``.  ``skip = 0`` is the pure directed
+    cycle -- the only variant whose W stays a circulant ring band (the
+    ppermute fast path)."""
+    if n < 2:
+        raise ValueError(f"directed ring needs n >= 2, got {n}")
+    if skip and not 2 <= skip < n:
+        raise ValueError(f"skip must be 0 or in [2, n), got {skip}")
+    a = np.zeros((n, n), dtype=np.float64)
+    for j in range(n):
+        a[(j + 1) % n, j] = 1.0
+        if skip:
+            a[(j + skip) % n, j] = 1.0
+    np.fill_diagonal(a, 0.0)
+    return a
+
+
+def column_stochastic_matrix(adj: np.ndarray) -> np.ndarray:
+    """Equal-out-weight column-stochastic W for a directed adjacency
+    (``adj[i, j] = 1 <=> j -> i``): node j splits unit mass uniformly over
+    its out-neighbours *including itself*, ``w_ij = 1 / (outdeg_j + 1)``.
+    Columns sum to 1 exactly; every diagonal entry is positive (the
+    self-loop), which keeps every round aperiodic and the push-sum weights
+    strictly positive."""
+    n = adj.shape[0]
+    a = (np.asarray(adj, np.float64) > 0).astype(np.float64)
+    np.fill_diagonal(a, 0.0)
+    out = a.sum(axis=0) + 1.0                 # out-degree incl. self-loop
+    w = (a + np.eye(n)) / out[None, :]
+    return w
+
+
+def _finalize_directed_schedule(kind: str, n: int, ws, adjs
+                                ) -> TopologySchedule:
+    """Directed analogue of :func:`_finalize_schedule`: per-round column
+    stochasticity + positive diagonals, window-union *strong* connectivity,
+    and a joint contraction factor (eigenvalue modulus of the window
+    product) strictly below 1."""
+    ws = np.stack([np.asarray(w, np.float64) for w in ws])
+    adjs = np.stack([np.asarray(a, np.float64) for a in adjs])
+    if ws.ndim != 3 or ws.shape[1] != n or ws.shape[2] != n:
+        raise ValueError(f"schedule table must be (period, {n}, {n}); got "
+                         f"{ws.shape}")
+    for t, w in enumerate(ws):
+        if not np.allclose(w.sum(0), 1.0, atol=1e-9):
+            raise ValueError(f"directed schedule round {t} is not column "
+                             "stochastic (1^T W != 1^T)")
+        if np.any(w < -1e-12):
+            raise ValueError(f"directed schedule round {t} has negative "
+                             "entries; push-sum weights must stay positive")
+        if np.any(np.diag(w) <= 0.0):
+            raise ValueError(f"directed schedule round {t} is missing a "
+                             "self-loop; push-sum weights could hit zero")
+    union = (adjs.sum(axis=0) > 0).astype(np.float64)
+    if not _is_strongly_connected(union):
+        raise ValueError(
+            f"{kind!r} schedule: the union digraph over the "
+            f"{ws.shape[0]}-round window is not strongly connected -- some "
+            "agent's mass never reaches (or never hears from) the rest, so "
+            "push-sum cannot reach consensus.  Lower the loss rate, "
+            "lengthen the period, or densify the base digraph.")
+    prod = np.eye(n)
+    for w in ws:
+        prod = w @ prod
+    joint = contraction_factor(prod)
+    if joint >= 1.0 - 1e-12:
+        raise ValueError(
+            f"{kind!r} schedule does not contract over its window "
+            f"(joint contraction factor = {joint:.6f} >= 1); the consensus "
+            "stepsize would degenerate to 0")
+    return TopologySchedule(kind=kind, n=n, ws=ws, adjacencies=adjs,
+                            alphas=tuple(contraction_factor(w) for w in ws),
+                            joint_alpha=joint, stochasticity="column")
+
+
+def directed_ring_schedule(n: int, skip: int = 0) -> TopologySchedule:
+    """Static (period-1) directed ring, optionally with skip chords.
+
+    ``skip = 0`` keeps W a circulant ring band, so the ppermute ring
+    executor applies; ``skip >= 2`` adds j -> j+skip chords (denser, faster
+    contraction, dense/packed executors only)."""
+    adj = directed_ring_graph(n, skip=skip)
+    return _finalize_directed_schedule(f"ring_skips:skip={skip}", n,
+                                       [column_stochastic_matrix(adj)], [adj])
+
+
+def random_digraph_schedule(n: int, p: float = 0.5, period: int = 8,
+                            seed: int = 0) -> TopologySchedule:
+    """Per-round random digraph: each directed edge j -> i (i != j) is
+    present independently with probability ``p``, resampled every round;
+    self-loops always.  The window is resampled until its union digraph is
+    strongly connected and the product contracts."""
+    if not 0.0 < p <= 1.0:
+        raise ValueError(f"digraph edge probability must be in (0, 1], got {p}")
+    if period < 1:
+        raise ValueError(f"period must be >= 1, got {period}")
+    rng = np.random.default_rng(seed)
+    return _directed_window(f"digraph:p={p}", n, period, lambda: (
+        (rng.random((n, n)) < p).astype(np.float64)
+        * (1.0 - np.eye(n))))
+
+
+def directed_churn_schedule(n: int, rate: float = 0.2, period: int = 8,
+                            skip: int = 2, seed: int = 0) -> TopologySchedule:
+    """Directed churn (one-way link loss): start from the directed ring
+    with skip chords and drop every directed edge independently with
+    probability ``rate`` each round.  A drop is one-way -- j -> i can fail
+    while i -> j survives -- which is exactly the asymmetry the
+    doubly-stochastic churn schedules cannot express."""
+    if not 0.0 <= rate < 1.0:
+        raise ValueError(f"one-way loss rate must be in [0, 1), got {rate}")
+    if period < 1:
+        raise ValueError(f"period must be >= 1, got {period}")
+    base = directed_ring_graph(n, skip=skip)
+    rng = np.random.default_rng(seed)
+    return _directed_window(f"one_way:rate={rate},skip={skip}", n, period,
+                            lambda: base * (rng.random((n, n)) >= rate))
+
+
+def _directed_window(kind: str, n: int, period: int, sample_adj
+                     ) -> TopologySchedule:
+    """Sample ``period`` directed adjacencies until the window validates
+    (strongly connected union, contracting product) -- the directed
+    analogue of :func:`_pruned_rounds`."""
+    last_err = None
+    for _ in range(1000):
+        adjs = [sample_adj() for _ in range(period)]
+        ws = [column_stochastic_matrix(a) for a in adjs]
+        try:
+            return _finalize_directed_schedule(kind, n, ws, adjs)
+        except ValueError as e:
+            last_err = e
+    raise RuntimeError(
+        f"could not sample a window-connected {kind!r} schedule in 1000 "
+        f"tries; the loss rate is too high for this period/base digraph "
+        f"(last: {last_err})")
+
+
 _SCHEDULE_GENERATORS = {
     "rotate": rotating_schedule,
     "erdos_renyi": erdos_renyi_schedule,
     "dropout": dropout_schedule,
     "straggler": straggler_schedule,
+    "ring_skips": directed_ring_schedule,
+    "digraph": random_digraph_schedule,
+    "one_way": directed_churn_schedule,
 }
+
+# generator registry with the stochasticity each kind produces; the
+# topology-schedule property sweep completeness-checks itself against this
+SCHEDULE_STOCHASTICITY = {
+    "rotate": "doubly",
+    "erdos_renyi": "doubly",
+    "dropout": "doubly",
+    "straggler": "doubly",
+    "ring_skips": "column",
+    "digraph": "column",
+    "one_way": "column",
+}
+assert set(SCHEDULE_STOCHASTICITY) == set(_SCHEDULE_GENERATORS)
 
 
 def make_schedule(kind: str, n: int, **kwargs) -> TopologySchedule:
@@ -474,7 +718,8 @@ def make_schedule(kind: str, n: int, **kwargs) -> TopologySchedule:
 
     ``kind='static'`` expects ``topology=`` (a built :class:`Topology`);
     the other generators take their own keyword knobs -- see each
-    generator's signature.
+    generator's signature and ``SCHEDULE_STOCHASTICITY`` for which kinds
+    are doubly vs column stochastic.
     """
     if kind == "static":
         top = kwargs.pop("topology", None)

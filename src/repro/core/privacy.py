@@ -99,9 +99,13 @@ class MomentsAccountant:
         best = 1.0
         for lam in range(1, self.max_lambda + 1):
             a = self.steps * self._log_mgf_one_step(float(lam))
-            if not math.isfinite(a):
+            x = a - lam * eps
+            # x >= 0 is a vacuous tail bound (delta >= 1) and would
+            # overflow exp for large compositions; it can never beat the
+            # 1.0 cap, so skip it
+            if not math.isfinite(x) or x >= 0.0:
                 continue
-            best = min(best, math.exp(a - lam * eps))
+            best = min(best, math.exp(x))
         return best
 
 

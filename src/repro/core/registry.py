@@ -14,7 +14,7 @@ Metrics schema (uniform, enforced by tests/test_api_registry.py): every
 (model-level bytes crossing links per round); decentralized algorithms add
 ``consensus_x``.
 
-This module holds only the registry machinery -- the eight concrete
+This module holds only the registry machinery -- the nine concrete
 registrations live in :mod:`repro.api`, which also owns the construction of
 topologies, mixers, compressors and comm-round engines (no call site should
 build those by hand).
@@ -92,7 +92,7 @@ _REGISTRY: Dict[str, Tuple[AlgorithmInfo, Callable]] = {}
 
 
 def _ensure_builtin():
-    """The eight built-in registrations live in repro.api (they need the
+    """The nine built-in registrations live in repro.api (they need the
     facade's resolvers); import it lazily so lookups work regardless of
     which of repro.core / repro.api the caller imported first."""
     import repro.api  # noqa: F401  (registers on import)

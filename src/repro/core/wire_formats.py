@@ -366,6 +366,25 @@ def measured_pack_nbytes(fmt: WireFormat, d: int) -> int:
                for b in jax.tree_util.tree_leaves(bufs))
 
 
+def measured_weight_nbytes(fmt: WireFormat) -> int:
+    """Measured nbytes the push-sum weight scalar adds to one shipped buffer
+    set.  The codec gossip executors bitcast the exact f32 weight increment
+    into words of the *last* wire buffer's dtype and append them to its
+    flattened payload (:mod:`repro.core.gossip`); this traces that buffer's
+    dtype via ``jax.eval_shape`` on the codec itself -- like
+    :func:`measured_pack_nbytes`, the measurement cannot drift from what the
+    executor ships."""
+    rows = jax.ShapeDtypeStruct((1, PACK_BLOCK), jnp.float32)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    bufs = jax.eval_shape(lambda k, r: fmt.pack(k, r), key, rows)
+    itemsize = np.dtype(jax.tree_util.tree_leaves(bufs)[-1].dtype).itemsize
+    if itemsize not in (2, 4):
+        raise ValueError(
+            f"no push-sum weight word layout for a {itemsize}-byte wire "
+            "buffer dtype")
+    return (4 // itemsize) * itemsize
+
+
 def codec_collective_bytes(fmt: WireFormat, mode: str, n_agents: int,
                            d: int) -> float:
     """Per-round link bytes for one agent buffer under a codec-aware

@@ -286,7 +286,11 @@ def main():
     ap.add_argument("--all", action="store_true",
                     help="sweep all (arch x shape)")
     ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--variant", default="gc", choices=["gc", "dp", "beer"])
+    ap.add_argument("--variant", default="gc",
+                    choices=["gc", "dp", "beer", "csgp"],
+                    help="algorithm alias (repro.api.VARIANT_TO_ALGO); "
+                         "'csgp' is push-sum DP-CSGP -- pair it with a "
+                         "'directed:...' --topology-schedule")
     ap.add_argument("--gossip", default="dense",
                     choices=["dense", "ring", "packed"])
     ap.add_argument("--compressor", default="block_top_k")

@@ -113,6 +113,28 @@ class TrainSetup:
         return self.algorithm.init(params, n_agents=self.n_agents)
 
 
+def _state_partition_specs(state_shapes, stacked_specs, ax_entry):
+    """PartitionSpecs for any registered algorithm's state NamedTuple.
+
+    Param-shaped buffer trees (x, v, the EF surrogates and mirrors) share
+    the agent-stacked leaf specs; bare 1-D fields are the ``(n,)`` push-sum
+    weight planes, sharded over the agent axes like any agent-stacked
+    buffer; bare scalars (the step counter) replicate.  Deriving this from
+    the state's own shape keeps one launch path for every state layout
+    (PorterState, PorterAdamState, DpCsgpState, ...) instead of
+    hand-writing a spec tuple per algorithm.
+    """
+    def field_spec(val):
+        if hasattr(val, "shape"):
+            if val.ndim == 0:
+                return P()
+            if val.ndim == 1:
+                return P(ax_entry)
+        return stacked_specs
+
+    return type(state_shapes)(*[field_spec(v) for v in state_shapes])
+
+
 def build_train_step(
     cfg: ModelConfig,
     mesh: Mesh,
@@ -197,10 +219,8 @@ def build_train_step(
     step = algo.step
     state_shapes = jax.eval_shape(
         lambda p: algo.init(p, n_agents=n, w=None), params_shapes)
-    state_specs = PorterState(
-        x=stacked_specs, v=stacked_specs, q_x=stacked_specs,
-        q_v=stacked_specs, g_prev=stacked_specs, m_x=stacked_specs,
-        m_v=stacked_specs, step=P())
+    state_specs = _state_partition_specs(state_shapes, stacked_specs,
+                                         ax_entry)
     batch_shapes, batch_specs = SH.train_batch_specs(cfg, shape, n, ax)
 
     state_sh = _shardings(mesh, state_specs)

@@ -109,6 +109,19 @@ PERF_LADDERS = [
     ("arctic-480b", "train_4k", False,
      dict(local_compress=True, gossip="packed", wire="packed_bits"),
      "lc_packed_bits"),
+    # SPerf-8: directed graphs / push-sum (dp-csgp) -- column-stochastic
+    # W_t with the weight plane riding inside the existing collectives
+    # (an extra flat column for dense/ring, +4 bitcast bytes under
+    # packed_bits), so these lower the same executables as their
+    # doubly-stochastic counterparts with zero extra communication ops.
+    ("rwkv6-7b", "train_4k", False,
+     dict(variant="csgp", local_compress=True,
+          topology_schedule="directed:one_way,rate=0.1,period=8", chunk=8),
+     "csgp_oneway_chunk8"),
+    ("rwkv6-7b", "train_4k", False,
+     dict(variant="csgp", local_compress=True, gossip="ring",
+          wire="packed_bits", topology_schedule="directed:ring_skips"),
+     "csgp_ring_bits"),
 ]
 
 

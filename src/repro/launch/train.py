@@ -114,8 +114,10 @@ def main(argv=None):
     ap.add_argument("--algo", default=None, choices=list(list_algorithms()),
                     help="registered algorithm (default porter-gc; "
                          "see repro.api)")
-    ap.add_argument("--variant", default=None, choices=["gc", "dp", "beer"],
-                    help="deprecated alias for --algo porter-<variant>")
+    ap.add_argument("--variant", default=None,
+                    choices=sorted(VARIANT_TO_ALGO),
+                    help="deprecated alias for --algo (gc/dp/beer -> "
+                         "porter-*, csgp -> dp-csgp)")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--chunk", type=int, default=1,
                     help="comm rounds scan-fused per dispatch (donated "

@@ -20,7 +20,7 @@ from repro.core import CommRound, make_compressor, make_mixer, make_topology
 from repro.core.porter import porter_init, porter_step
 
 EXPECTED_ALGOS = {"porter-gc", "porter-dp", "beer", "porter-adam", "dsgd",
-                  "choco", "dp-sgd", "soteriafl"}
+                  "choco", "dp-sgd", "soteriafl", "dp-csgp"}
 
 N, D, B = 4, 24, 6
 
@@ -48,7 +48,7 @@ def _spec(name, **over):
     return ExperimentSpec(**kw)
 
 
-def test_all_eight_registered():
+def test_all_nine_registered():
     assert set(list_algorithms()) == EXPECTED_ALGOS
 
 
@@ -77,7 +77,7 @@ def test_registered_algorithm_trains(name):
 
 
 def test_dp_flags_match_oracles():
-    for name in ("porter-dp", "dp-sgd", "soteriafl"):
+    for name in ("porter-dp", "dp-sgd", "soteriafl", "dp-csgp"):
         assert algorithm_info(name).dp
     for name in ("porter-gc", "beer", "porter-adam", "choco", "dsgd"):
         assert not algorithm_info(name).dp
@@ -96,7 +96,8 @@ def test_unclipped_porter_gc_is_beer():
                for l in jax.tree_util.tree_leaves(state.x))
 
 
-@pytest.mark.parametrize("name", ["porter-dp", "dp-sgd", "soteriafl"])
+@pytest.mark.parametrize("name", ["porter-dp", "dp-sgd", "soteriafl",
+                                  "dp-csgp"])
 def test_dp_algorithms_reject_unclipped_tau(name):
     """Noise is calibrated to tau's sensitivity; tau=None must not silently
     run unclipped."""
@@ -120,7 +121,7 @@ def test_registry_populated_via_core_import():
     caller imported first (registrations are triggered lazily)."""
     import subprocess, sys
     code = ("from repro.core import list_algorithms, algorithm_info; "
-            "assert len(list_algorithms()) == 8, list_algorithms(); "
+            "assert len(list_algorithms()) == 9, list_algorithms(); "
             "assert algorithm_info('choco').decentralized")
     res = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True)

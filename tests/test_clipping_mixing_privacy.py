@@ -158,3 +158,45 @@ def test_accountant_delta_inverse():
     acct.step(1000)
     eps = acct.epsilon(1e-5)
     assert acct.delta(eps) <= 1e-5 * 1.01
+
+
+@given(st.floats(1e-4, 1e-2), st.floats(0.5, 8.0), st.integers(10, 20000),
+       st.floats(1e-8, 1e-3))
+@settings(max_examples=40, deadline=None)
+def test_accountant_eps_delta_round_trip(q, s, steps, delta):
+    """Round trip: both converters minimize over the same lambda grid, so
+    delta(epsilon(delta)) <= delta and epsilon(delta(eps)) <= eps -- the
+    tail bound never *loses* privacy through a conversion."""
+    acct = PV.MomentsAccountant(q=q, noise_multiplier=s)
+    acct.step(steps)
+    eps = acct.epsilon(delta)
+    assert np.isfinite(eps) and eps > 0
+    d_back = acct.delta(eps)
+    assert d_back <= delta * (1 + 1e-9)
+    # and the reverse leg re-enters consistently
+    assert acct.epsilon(d_back) <= eps * (1 + 1e-9)
+
+
+@given(st.floats(0.05, 2.0), st.floats(1e-4, 1e-2), st.floats(1.0, 8.0),
+       st.integers(10, 20000))
+@settings(max_examples=40, deadline=None)
+def test_accountant_delta_eps_round_trip(eps, q, s, steps):
+    acct = PV.MomentsAccountant(q=q, noise_multiplier=s)
+    acct.step(steps)
+    d = acct.delta(eps)
+    assert 0.0 < d <= 1.0
+    if d >= 1.0:       # vacuous region: the bound says nothing at this eps
+        return
+    assert acct.epsilon(d) <= eps * (1 + 1e-9)
+
+
+@given(st.floats(0.01, 2.0), st.floats(1.1, 10.0), st.integers(100, 50_000),
+       st.floats(1.1, 10.0))
+@settings(max_examples=40, deadline=None)
+def test_calibrate_sigma_monotone_in_eps_and_T(eps, k_eps, T, k_T):
+    """Eq. (5) sanity: a looser target (bigger eps) needs strictly less
+    noise; more rounds (bigger T) need strictly more."""
+    tau, m, delta = 1.0, 3000, 1e-3
+    s0 = PV.calibrate_sigma(tau, T, m, eps, delta)
+    assert PV.calibrate_sigma(tau, T, m, k_eps * eps, delta) < s0
+    assert PV.calibrate_sigma(tau, int(k_T * T) + 1, m, eps, delta) > s0

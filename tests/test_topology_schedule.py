@@ -174,12 +174,115 @@ def test_schedule_spec_parsing():
         spec.replace(topology_schedule="straggler:rate=0.2,period=4,"
                                        "base=complete"))
     assert s.period == 4 and "base=complete" in s.kind
+    # directed (column-stochastic) family: 'directed:<subkind>,key=value'
+    s = resolve_schedule(
+        spec.replace(topology_schedule="directed:ring_skips,skip=2"))
+    assert s.is_directed and s.period == 1 and s.stochasticity == "column"
+    s = resolve_schedule(
+        spec.replace(topology_schedule="directed:one_way,rate=0.2,period=4"))
+    assert s.period == 4 and s.stochasticity == "column"
     with pytest.raises(ValueError, match="unknown topology schedule"):
         resolve_schedule(spec.replace(topology_schedule="warp:speed=9"))
     with pytest.raises(ValueError, match="unknown 'dropout' schedule keys"):
         resolve_schedule(spec.replace(topology_schedule="dropout:rte=0.3"))
     with pytest.raises(ValueError, match="key=value"):
         resolve_schedule(spec.replace(topology_schedule="dropout:0.3"))
+    with pytest.raises(ValueError, match="unknown directed schedule subkind"):
+        resolve_schedule(spec.replace(topology_schedule="directed:spiral"))
+    with pytest.raises(ValueError, match="directed:one_way schedule keys"):
+        resolve_schedule(
+            spec.replace(topology_schedule="directed:one_way,rte=0.2"))
+
+
+# ---------------------------------------------------------------------------
+# generator property sweep (completeness-checked against the registry)
+# ---------------------------------------------------------------------------
+
+# one representative build per registered generator; the completeness test
+# below fails when a new generator lands without a row here
+_GEN_CASES = {
+    "rotate": lambda: MX.rotating_schedule(["ring", "star", "complete"], 6),
+    "erdos_renyi": lambda: MX.erdos_renyi_schedule(6, p=0.7, period=4,
+                                                   seed=1),
+    "dropout": lambda: MX.dropout_schedule(6, rate=0.3, period=6,
+                                           base="ring", seed=0),
+    "straggler": lambda: MX.straggler_schedule(6, rate=0.4, period=6,
+                                               base="erdos_renyi", p=0.7,
+                                               seed=2),
+    "ring_skips": lambda: MX.directed_ring_schedule(6, skip=2),
+    "digraph": lambda: MX.random_digraph_schedule(6, p=0.5, period=4,
+                                                  seed=3),
+    "one_way": lambda: MX.directed_churn_schedule(6, rate=0.3, period=4,
+                                                  skip=2, seed=0),
+}
+
+
+def test_generator_sweep_is_complete():
+    """Every registered generator has a property-sweep case, and the
+    stochasticity registry backs exactly the dispatch table."""
+    assert set(_GEN_CASES) == set(MX.SCHEDULE_STOCHASTICITY)
+    assert set(MX.SCHEDULE_STOCHASTICITY) == set(MX._SCHEDULE_GENERATORS)
+    assert set(MX.SCHEDULE_STOCHASTICITY.values()) == {"doubly", "column"}
+
+
+def _slem(w):
+    """Second-largest eigenvalue modulus (Perron root excluded) -- the
+    dense-eigvals oracle for stochastic matrices."""
+    ev = np.linalg.eigvals(np.asarray(w, np.float64))
+    return float(np.max(np.abs(np.delete(ev, np.argmin(np.abs(ev - 1.0))))))
+
+
+@pytest.mark.parametrize("kind", sorted(_GEN_CASES))
+def test_generator_stochasticity_and_contraction_oracle(kind):
+    """Acceptance sweep: every generator's rounds carry the stochasticity
+    the registry declares, and the recorded per-round/joint contraction
+    factors agree with a dense ``numpy.linalg.eigvals`` oracle."""
+    sched = _GEN_CASES[kind]()
+    tag = MX.SCHEDULE_STOCHASTICITY[kind]
+    assert sched.stochasticity == tag
+    assert sched.is_directed == (tag == "column")
+    n = sched.n
+    j = np.ones((n, n)) / n
+    for t, w in enumerate(sched.ws):
+        # columns always sum to 1 (mass conservation: 1^T W = 1^T)
+        np.testing.assert_allclose(w.sum(0), 1.0, atol=1e-9,
+                                   err_msg=f"{kind} round {t} columns")
+        if tag == "doubly":
+            np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-9,
+                                       err_msg=f"{kind} round {t} rows")
+            assert np.allclose(w, w.T, atol=1e-12)
+            # symmetric W: ||W - J||_2 == max |eig(W - J)|
+            oracle = float(np.max(np.abs(np.linalg.eigvals(w - j))))
+        else:
+            assert np.all(np.diag(w) > 0), f"{kind} round {t} diagonal"
+            oracle = _slem(w)
+        np.testing.assert_allclose(sched.alphas[t], oracle, atol=1e-9,
+                                   err_msg=f"{kind} round {t} alpha")
+    # joint window contraction against the same eigvals oracle
+    prod = np.eye(n)
+    if tag == "doubly":
+        for w in sched.ws:
+            prod = (w - j) @ prod
+        # ||B||_2 == sqrt(max eig(B^T B))
+        oracle = float(np.sqrt(np.max(np.abs(
+            np.linalg.eigvals(prod.T @ prod)))))
+    else:
+        for w in sched.ws:
+            prod = w @ prod
+        oracle = _slem(prod)
+    np.testing.assert_allclose(sched.joint_alpha, oracle, atol=1e-9,
+                               err_msg=f"{kind} joint")
+    assert 0.0 <= sched.joint_alpha < 1.0
+
+
+def test_directed_generators_break_row_stochasticity():
+    """The resampling directed generators must produce genuinely one-way
+    rounds (row sums != 1) -- otherwise the column tag is vacuous and
+    push-sum de-biasing is untested against them."""
+    for kind in ("digraph", "one_way"):
+        sched = _GEN_CASES[kind]()
+        assert any(not np.allclose(w.sum(1), 1.0, atol=1e-6)
+                   for w in sched.ws), kind
 
 
 # ---------------------------------------------------------------------------
