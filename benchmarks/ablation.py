@@ -24,6 +24,7 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.data import a9a_like, minibatch_source, shard_to_agents
 from benchmarks import common as C
@@ -42,8 +43,8 @@ def run_ablation(steps=400, seed=0):
 
     def gnorm(p):
         g = jax.grad(loss_fn)(p, flat)
-        return float(jnp.sqrt(sum(jnp.sum(v ** 2)
-                                  for v in jax.tree_util.tree_leaves(g))))
+        sq = sum(jnp.sum(v ** 2) for v in jax.tree_util.tree_leaves(g))
+        return float(np.sqrt(np.asarray(sq)))
 
     results = {}
 

@@ -54,6 +54,7 @@ if "--sharded" in sys.argv or "--achieved-bytes" in sys.argv:
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.api import ExperimentSpec, build_engine, resolve_compressor
 
@@ -327,7 +328,8 @@ def bench_achieved_bytes(reps: int):
 
         c, wc, cw, wcw = ps_round(key, y, q, xw, qw)
         # column-stochastic W conserves weight mass: 1^T(W cw) == 1^T cw
-        mass_in, mass_out = float(jnp.sum(cw)), float(jnp.sum(wcw))
+        mass_in = float(np.asarray(jnp.sum(cw)))
+        mass_out = float(np.asarray(jnp.sum(wcw)))
         assert abs(mass_in - mass_out) < 1e-4, (mode, mass_in, mass_out)
         print(f"# directed/{mode}: push_sum bytes {ps_meas:.0f} "
               f"(plain {plain:.0f} + weight {ps_meas - plain:.0f}), "
@@ -363,7 +365,7 @@ def bench_achieved_bytes(reps: int):
     a = seq_round(key, y, q, m, g, gp, q_x, m_x)
     b = ovl_round(key, y, q, m, g, gp, q_x, m_x)
     bitexact = all(
-        bool(jnp.all(la == lb))
+        np.array_equal(np.asarray(la), np.asarray(lb))
         for la, lb in zip(jax.tree_util.tree_leaves(a),
                           jax.tree_util.tree_leaves(b)))
     assert bitexact, "overlap ordering is not bit-exact to sequential"

@@ -71,15 +71,16 @@ def mlp_params0(key=None):
 
 
 def accuracy_fn(kind):
+    # one explicit numpy boundary conversion per eval; comparisons stay host-side
     if kind == "logreg":
         def acc(params, f, l):
-            logits = f @ params["w"] + params["b"]
-            return float(jnp.mean((logits > 0) == (l > 0.5)))
+            logits = np.asarray(f @ params["w"] + params["b"])
+            return float(np.mean((logits > 0) == (np.asarray(l) > 0.5)))
     else:
         def acc(params, f, l):
             h = jax.nn.sigmoid(f @ params["w1"] + params["c1"])
-            logits = h @ params["w2"] + params["c2"]
-            return float(jnp.mean(jnp.argmax(logits, -1) == l))
+            logits = np.asarray(h @ params["w2"] + params["c2"])
+            return float(np.mean(np.argmax(logits, -1) == np.asarray(l)))
     return acc
 
 

@@ -52,13 +52,14 @@ def bench_fig1_clipping():
     norms = np.linspace(0.01, 8.0, 50)
     curves = {}
     for tau in taus:
-        sm, pw = [], []
-        for n in norms:
-            x = jnp.asarray([float(n)])
-            sm.append(float(jnp.linalg.norm(smooth_clip(x, tau))))
-            pw.append(float(jnp.linalg.norm(piecewise_clip(x, tau))))
-        curves[tau] = {"input_norm": norms.tolist(), "smooth": sm,
-                       "piecewise": pw}
+        # vectorized: each norm is a one-element vector; one host sync total
+        xs = jnp.asarray(norms)[:, None]
+        sm = np.asarray(jax.vmap(
+            lambda v: jnp.linalg.norm(smooth_clip(v, tau)))(xs))
+        pw = np.asarray(jax.vmap(
+            lambda v: jnp.linalg.norm(piecewise_clip(v, tau)))(xs))
+        curves[tau] = {"input_norm": norms.tolist(), "smooth": sm.tolist(),
+                       "piecewise": pw.tolist()}
     _save("fig1_clipping", curves)
     x = jax.random.normal(jax.random.PRNGKey(0), (100000,))
     us = C.timed(jax.jit(lambda v: smooth_clip(v, 1.0)), x)
@@ -224,8 +225,8 @@ def bench_scaling(steps=60):
 
     def grad_norm(p):
         g = jax.grad(loss_fn)(p, flat)
-        return float(jnp.sqrt(sum(jnp.sum(v ** 2)
-                                  for v in jax.tree_util.tree_leaves(g))))
+        sq = sum(jnp.sum(v ** 2) for v in jax.tree_util.tree_leaves(g))
+        return float(np.sqrt(np.asarray(sq)))
 
     out = {"rho": {}, "alpha": {}}
     top = C.paper_topology()

@@ -7,6 +7,7 @@ Theorems 2-4 on the logistic-regression testbed.
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.api import ExperimentSpec, build
 from repro.core import average_params, calibrate_sigma, phi_m
@@ -45,8 +46,8 @@ def run_sweep(variant, rho, sigma_p):
     state, _, _ = runner(state, jax.random.PRNGKey(0), 0)
     g = jax.grad(loss_fn)(average_params(state.x),
                           (xs.reshape(-1, D), ys.reshape(-1)))
-    gn = float(jnp.sqrt(sum(jnp.sum(v ** 2)
-                            for v in jax.tree_util.tree_leaves(g))))
+    gn = float(np.sqrt(np.asarray(
+        sum(jnp.sum(v ** 2) for v in jax.tree_util.tree_leaves(g)))))
     from repro.core import consensus_error
     return gn, float(consensus_error(state.x))
 

@@ -20,6 +20,7 @@ instead of once per round.
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.api import ExperimentSpec, build
 from repro.data import a9a_like, minibatch_source, shard_to_agents
@@ -66,8 +67,8 @@ state, _ = run_chunked(algo, batches, state, jax.random.PRNGKey(0), 400,
 avg = average_params(state.x)
 full = (jnp.asarray(xs.reshape(-1, 123)), jnp.asarray(ys.reshape(-1)))
 g = jax.grad(loss_fn)(avg, full)
-gn = float(jnp.sqrt(sum(jnp.sum(v ** 2)
-                        for v in jax.tree_util.tree_leaves(g))))
+gn = float(np.sqrt(np.asarray(
+    sum(jnp.sum(v ** 2) for v in jax.tree_util.tree_leaves(g)))))
 print(f"\nfinal grad norm of the average iterate: {gn:.4f} "
       f"(alpha={algo.topology.alpha:.3f}, rho={RHO}, "
       f"gamma={algo.gamma:.4f})")

@@ -1,0 +1,34 @@
+"""Static-analysis subsystem: compiled-program and source-convention checks.
+
+Submodules:
+
+* :mod:`repro.analysis.hlo` -- collective census vs. declared
+  :class:`~repro.core.gossip.GossipBudget`\\ s, donation checker, retrace
+  detector, dtype-flow (the canonical home of the HLO parsing that used to
+  live in ``launch/dryrun.py`` and four test files).
+* :mod:`repro.analysis.ast_rules` -- stdlib-only AST lint (host escapes in
+  step functions, host syncs in eval callbacks, jax-free modules) plus
+  table-completeness checks.
+* :mod:`repro.analysis.sweep` -- the algorithm x executor x wire matrix
+  behind ``python -m repro.analysis --all``.
+
+This ``__init__`` stays lazy on purpose: ``python -m repro.analysis``
+executes it *before* ``__main__`` gets the chance to call
+``ensure_host_device_count``, so importing anything jax-backed here would
+lock the backend to the ambient device count and break the CPU-mesh
+census.  Attribute access forwards to the submodules instead.
+"""
+
+from typing import TYPE_CHECKING
+
+__all__ = ["hlo", "ast_rules", "sweep"]
+
+if TYPE_CHECKING:  # pragma: no cover - typing aid only
+    from . import ast_rules, hlo, sweep  # noqa: F401
+
+
+def __getattr__(name):
+    if name in __all__:
+        import importlib
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

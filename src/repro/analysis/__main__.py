@@ -1,0 +1,97 @@
+"""CLI for the static-analysis subsystem.
+
+Usage (PYTHONPATH=src):
+
+    python -m repro.analysis --all            # census + probes + lint + tables
+    python -m repro.analysis --census         # collective census only
+    python -m repro.analysis --probes         # donation + retrace only
+    python -m repro.analysis --lint [PATH...] # AST lint (no jax needed)
+    python -m repro.analysis --tables         # table-completeness checks
+    python -m repro.analysis --all --quick    # PR-sized subset
+    python -m repro.analysis --all --algo porter-gc --algo dp-csgp
+
+Exits non-zero on any violation; writes the machine-readable report to
+--out (default artifacts/analysis/report.json).
+
+The ensure_host_device_count call below MUST stay ahead of any
+jax-importing import: the census builds a 4-agent CPU mesh, and jax locks
+the device count at first backend init (same contract as launch/dryrun).
+"""
+
+from repro._env import ensure_host_device_count
+
+ensure_host_device_count(8)
+
+import argparse
+import sys
+from pathlib import Path
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("--all", action="store_true",
+                    help="census + probes + lint + tables")
+    ap.add_argument("--census", action="store_true",
+                    help="collective census + dtype flow over the "
+                         "algorithm x executor x wire matrix")
+    ap.add_argument("--probes", action="store_true",
+                    help="donation + retrace runtime probes per algorithm")
+    ap.add_argument("--lint", nargs="*", metavar="PATH", default=None,
+                    help="AST lint; default paths: src benchmarks examples")
+    ap.add_argument("--tables", action="store_true",
+                    help="registry/contract table completeness")
+    ap.add_argument("--quick", action="store_true",
+                    help="PR-sized census subset (porter-gc + one case "
+                         "per family)")
+    ap.add_argument("--algo", action="append", default=None,
+                    help="restrict census/probes to these algorithms "
+                         "(repeatable)")
+    ap.add_argument("--list", action="store_true",
+                    help="print the census matrix and exit")
+    ap.add_argument("--out", default="artifacts/analysis/report.json")
+    args = ap.parse_args(argv)
+
+    lint_only = args.lint is not None and not (
+        args.all or args.census or args.probes or args.tables or args.list)
+    if lint_only:
+        # pure-AST path: usable in environments without jax
+        from repro.analysis import ast_rules
+        paths = [Path(p) for p in args.lint] or None
+        if not paths:
+            root = Path.cwd()
+            paths = [p for p in (root / "src", root / "benchmarks",
+                                 root / "examples") if p.exists()]
+        findings = ast_rules.lint_paths(paths)
+        for f in findings:
+            print(f)
+        print(f"{len(findings)} finding(s)")
+        return 1 if findings else 0
+
+    from repro.analysis import sweep
+
+    if args.list:
+        for case in sweep.census_matrix(quick=args.quick):
+            mesh = "mesh" if case.needs_mesh else "    "
+            print(f"  [{mesh}] {case.label}")
+        return 0
+
+    if not (args.all or args.census or args.probes or args.tables
+            or args.lint is not None):
+        ap.error("pick a pass: --all, --census, --probes, --lint, --tables")
+
+    report = sweep.run_all(
+        quick=args.quick,
+        do_census=args.all or args.census,
+        do_probes=args.all or args.probes,
+        do_lint=args.all or args.lint is not None,
+        do_tables=args.all or args.tables,
+        algos=args.algo)
+    out = sweep.write_report(report, args.out)
+    n_fail = len(report["failures"])
+    print(f"\n{'OK' if report['ok'] else 'FAIL'}: "
+          f"{n_fail} violation(s); report -> {out}")
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

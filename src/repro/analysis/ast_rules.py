@@ -1,0 +1,373 @@
+"""AST lint for repo conventions that no runtime test can see.
+
+Three source rules (stdlib-``ast`` only -- importable and runnable without
+jax) plus a table-completeness check that does import the repo:
+
+* ``host-escape-in-step``: inside ``step`` / ``*_step`` functions (and
+  everything nested in them -- ``lax.scan`` bodies, closures) no host-side
+  escape may touch traced values: ``.item()``, stdlib ``time.*`` /
+  ``random.*``, ``np.random.*``, or ``float()/int()/bool()`` applied to an
+  expression referencing a step parameter.  Under ``jit`` these either
+  crash (concretization) or silently pin the trace to host values; either
+  way they are bugs the compiler hides until the worst moment.
+* ``host-sync-eval`` (benchmarks/ and examples/ only): ``float(jnp.…(…))``
+  / ``int(jax.…(…))`` and ``.item()`` force one device round-trip per
+  call.  Eval callbacks convert once via ``np.asarray`` at the boundary
+  instead -- per-element implicit syncs in report loops are what made the
+  pre-PR-4 training loop dispatch-bound.
+* ``jax-free-modules``: modules that must win the import race against the
+  jax backend (``repro/_env.py``) may not import jax, directly or from.
+
+A finding is suppressed by putting ``analysis: ok`` in a comment on the
+flagged line (used sparingly; every use should say why).
+
+:func:`check_tables` closes the registry/contract tables against their
+generator dicts: schedule kinds in ``core.mixing`` vs. the ``allowed``
+dicts in ``api.resolve_schedule`` / ``api._resolve_directed_schedule``
+(AST-extracted -- they are function locals), ``VARIANT_TO_ALGO`` vs. the
+registry, and the dryrun ``--variant`` choices vs. ``VARIANT_TO_ALGO``.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+__all__ = [
+    "LintFinding",
+    "JAX_FREE_MODULES",
+    "lint_source",
+    "lint_file",
+    "lint_paths",
+    "check_tables",
+]
+
+SUPPRESS_TOKEN = "analysis: ok"
+
+# repo-relative module paths that must stay importable before jax backend
+# init (they set XLA flags; importing jax first would lock the device count)
+JAX_FREE_MODULES = ("src/repro/_env.py",)
+
+_CAST_BUILTINS = {"float", "int", "bool"}
+
+
+@dataclasses.dataclass(frozen=True)
+class LintFinding:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _suppressed_lines(src: str) -> Set[int]:
+    return {i for i, line in enumerate(src.splitlines(), start=1)
+            if SUPPRESS_TOKEN in line}
+
+
+def _import_roots(tree: ast.AST) -> Dict[str, str]:
+    """Map bound names to the root module they come from.
+
+    ``import numpy as np`` -> {'np': 'numpy'};
+    ``from jax import random`` -> {'random': 'jax'} (so stdlib-``random``
+    detection cannot misfire on jax.random).
+    """
+    roots: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                root = alias.name.split(".")[0]
+                bound = alias.asname or root
+                roots[bound] = root
+        elif isinstance(node, ast.ImportFrom):
+            if node.level or not node.module:
+                continue  # relative imports never shadow stdlib names
+            root = node.module.split(".")[0]
+            for alias in node.names:
+                roots[alias.asname or alias.name] = root
+    return roots
+
+
+def _attr_chain(node: ast.AST) -> Tuple[str, ...]:
+    """('np', 'random', 'normal') for np.random.normal; () if not a plain
+    dotted name."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return ()
+
+
+def _param_names(fn: ast.AST) -> Set[str]:
+    """Parameter names of ``fn`` and every function nested inside it
+    (scan bodies, closures) -- the names that carry traced values."""
+    names: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            a = node.args
+            for arg in (a.posonlyargs + a.args + a.kwonlyargs):
+                names.add(arg.arg)
+            if a.vararg:
+                names.add(a.vararg.arg)
+            if a.kwarg:
+                names.add(a.kwarg.arg)
+    return names
+
+
+def _is_step_fn(node: ast.AST) -> bool:
+    return (isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and (node.name == "step" or node.name.endswith("_step")))
+
+
+def _check_step_scopes(tree: ast.AST, roots: Dict[str, str], path: str,
+                       skip: Set[int]) -> List[LintFinding]:
+    findings: List[LintFinding] = []
+    seen: Set[int] = set()  # node ids already covered by an outer step fn
+
+    def emit(node, msg):
+        if node.lineno not in skip:
+            findings.append(LintFinding("host-escape-in-step", path,
+                                        node.lineno, msg))
+
+    for fn in ast.walk(tree):
+        if not _is_step_fn(fn) or id(fn) in seen:
+            continue
+        for inner in ast.walk(fn):
+            seen.add(id(inner))
+        params = _param_names(fn)
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            if isinstance(func, ast.Attribute) and func.attr == "item" \
+                    and not node.args and not node.keywords:
+                emit(node, f"`.item()` in {fn.name!r} blocks on the device "
+                           "and hides a per-round host sync")
+                continue
+            chain = _attr_chain(func)
+            if len(chain) >= 2:
+                root = roots.get(chain[0])
+                if root == "time":
+                    emit(node, f"host clock `{'.'.join(chain)}()` inside "
+                               f"{fn.name!r}: traced code runs at trace "
+                               "time, not per step -- thread timestamps "
+                               "through the state instead")
+                    continue
+                if root == "random" and chain[0] == "random":
+                    emit(node, f"stdlib `random.{chain[1]}` inside "
+                               f"{fn.name!r}: host RNG is invisible to the "
+                               "jax key stream (breaks restart-invariance) "
+                               "-- use jax.random with the step key")
+                    continue
+                if root == "numpy" and len(chain) >= 3 \
+                        and chain[1] == "random":
+                    emit(node, f"`{'.'.join(chain)}` inside {fn.name!r}: "
+                               "numpy RNG runs at trace time and bakes one "
+                               "draw into the executable -- use jax.random")
+                    continue
+            if isinstance(func, ast.Name) and func.id in _CAST_BUILTINS \
+                    and len(node.args) == 1 and not node.keywords:
+                referenced = {n.id for n in ast.walk(node.args[0])
+                              if isinstance(n, ast.Name)}
+                hit = referenced & params
+                if hit:
+                    emit(node, f"`{func.id}(...)` over traced value(s) "
+                               f"{sorted(hit)} inside {fn.name!r}: "
+                               "concretizes the trace (crashes under jit, "
+                               "silently pins constants otherwise)")
+    return findings
+
+
+def _check_host_sync(tree: ast.AST, roots: Dict[str, str], path: str,
+                     skip: Set[int]) -> List[LintFinding]:
+    findings: List[LintFinding] = []
+
+    def emit(node, msg):
+        if node.lineno not in skip:
+            findings.append(LintFinding("host-sync-eval", path, node.lineno,
+                                        msg))
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        func = node.func
+        if isinstance(func, ast.Attribute) and func.attr == "item" \
+                and not node.args and not node.keywords:
+            emit(node, "`.item()` forces a device round-trip per call; "
+                       "convert once via np.asarray at the boundary")
+            continue
+        if isinstance(func, ast.Name) and func.id in _CAST_BUILTINS \
+                and len(node.args) == 1 and isinstance(node.args[0],
+                                                       ast.Call):
+            chain = _attr_chain(node.args[0].func)
+            if chain and roots.get(chain[0]) == "jax":
+                emit(node, f"`{func.id}({'.'.join(chain)}(...))` syncs the "
+                           "device per call -- batch the computation and "
+                           "convert once (np.asarray) instead")
+    return findings
+
+
+def _check_jax_free(tree: ast.AST, path: str,
+                    skip: Set[int]) -> List[LintFinding]:
+    findings = []
+    for node in ast.walk(tree):
+        mods: List[Tuple[int, str]] = []
+        if isinstance(node, ast.Import):
+            mods = [(node.lineno, a.name) for a in node.names]
+        elif isinstance(node, ast.ImportFrom) and node.module \
+                and not node.level:
+            mods = [(node.lineno, node.module)]
+        for line, mod in mods:
+            if (mod == "jax" or mod.startswith("jax.")) and line not in skip:
+                findings.append(LintFinding(
+                    "jax-free-modules", path, line,
+                    f"imports {mod!r} but must stay jax-free: it runs "
+                    "before backend init to set XLA flags, and importing "
+                    "jax here locks the device count first"))
+    return findings
+
+
+def lint_source(src: str, path: str = "<string>", *,
+                host_sync: bool = False,
+                jax_free: bool = False) -> List[LintFinding]:
+    """Lint one source string.  ``host_sync``/``jax_free`` opt the file into
+    the benchmarks-and-examples rule / the jax-free-module rule; the step
+    rule always applies."""
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [LintFinding("syntax", path, e.lineno or 0, str(e.msg))]
+    skip = _suppressed_lines(src)
+    roots = _import_roots(tree)
+    findings = _check_step_scopes(tree, roots, path, skip)
+    if host_sync:
+        findings += _check_host_sync(tree, roots, path, skip)
+    if jax_free:
+        findings += _check_jax_free(tree, path, skip)
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+
+
+def _rel(path: Path, root: Optional[Path]) -> str:
+    try:
+        return str(path.relative_to(root)) if root else str(path)
+    except ValueError:
+        return str(path)
+
+
+def lint_file(path, root=None) -> List[LintFinding]:
+    path = Path(path)
+    rel = _rel(path, Path(root) if root else None)
+    parts = Path(rel).parts
+    host_sync = "benchmarks" in parts or "examples" in parts
+    jax_free = rel.replace("\\", "/") in JAX_FREE_MODULES
+    return lint_source(path.read_text(), rel, host_sync=host_sync,
+                       jax_free=jax_free)
+
+
+def lint_paths(paths: Iterable, root=None) -> List[LintFinding]:
+    """Lint every ``*.py`` under each path (files are linted directly)."""
+    findings: List[LintFinding] = []
+    for p in paths:
+        p = Path(p)
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in files:
+            findings += lint_file(f, root=root)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Table completeness: registry / contract tables vs. their generator dicts.
+# ---------------------------------------------------------------------------
+
+def _extract_allowed_kind_dicts(api_path: Path) -> Set[str]:
+    """Union of string keys of every dict literal bound to a name
+    ``allowed`` in repro/api.py (they are locals of resolve_schedule and
+    _resolve_directed_schedule, so they cannot be imported)."""
+    tree = ast.parse(api_path.read_text(), filename=str(api_path))
+    kinds: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Dict):
+            names = {t.id for t in node.targets if isinstance(t, ast.Name)}
+            if "allowed" not in names:
+                continue
+            for k in node.value.keys:
+                if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                    kinds.add(k.value)
+    return kinds
+
+
+def _extract_argparse_choices(path: Path, flag: str) -> Optional[Set[str]]:
+    """``choices=[...]`` of the add_argument call registering ``flag``."""
+    tree = ast.parse(path.read_text(), filename=str(path))
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "add_argument" and node.args
+                and isinstance(node.args[0], ast.Constant)
+                and node.args[0].value == flag):
+            continue
+        for kw in node.keywords:
+            if kw.arg == "choices" and isinstance(kw.value,
+                                                  (ast.List, ast.Tuple)):
+                return {e.value for e in kw.value.elts
+                        if isinstance(e, ast.Constant)}
+    return None
+
+
+def check_tables() -> List[LintFinding]:
+    """Close the contract tables against their generator dicts.  Imports
+    the repo lazily (jax must already be importable); pure-AST callers use
+    :func:`lint_paths` only."""
+    findings: List[LintFinding] = []
+
+    def flag(path, msg):
+        findings.append(LintFinding("table-completeness", path, 0, msg))
+
+    from repro.core import mixing as MX
+    gen = set(MX._SCHEDULE_GENERATORS)
+    sto = set(MX.SCHEDULE_STOCHASTICITY)
+    if gen != sto:
+        flag("src/repro/core/mixing.py",
+             f"SCHEDULE_STOCHASTICITY {sorted(sto)} != schedule generators "
+             f"{sorted(gen)}")
+
+    import repro.api as api
+    from repro.core.registry import list_algorithms
+    api_path = Path(api.__file__)
+    registered = set(list_algorithms())
+    variants = set(api.VARIANT_TO_ALGO.values())
+    if not variants <= registered:
+        flag("src/repro/api.py",
+             f"VARIANT_TO_ALGO targets unregistered algorithms "
+             f"{sorted(variants - registered)}")
+
+    allowed = _extract_allowed_kind_dicts(api_path)
+    if allowed != gen:
+        flag("src/repro/api.py",
+             "resolve_schedule/_resolve_directed_schedule 'allowed' kind "
+             f"dicts {sorted(allowed)} drifted from the schedule "
+             f"generators {sorted(gen)}")
+
+    # dryrun must not be imported in-process (it pins 512 host devices at
+    # import); read its --variant choices straight from the source
+    dryrun_path = api_path.parent / "launch" / "dryrun.py"
+    choices = _extract_argparse_choices(dryrun_path, "--variant")
+    if choices is None:
+        flag("src/repro/launch/dryrun.py",
+             "could not locate the --variant add_argument choices")
+    elif choices != set(api.VARIANT_TO_ALGO):
+        flag("src/repro/launch/dryrun.py",
+             f"--variant choices {sorted(choices)} drifted from "
+             f"VARIANT_TO_ALGO {sorted(api.VARIANT_TO_ALGO)}")
+    return findings

@@ -1,0 +1,566 @@
+"""Compiled-program invariant passes: census, donation, retrace, dtype flow.
+
+The byte model in EXPERIMENTS.md is only honest if the compiled programs
+actually ship what it claims.  PRs 3, 6 and 7 each pinned that with
+hand-rolled HLO string matching scattered across four test files; this
+module is the canonical home of those passes, shared by the tests, the
+dry-run tool (``--analyze``) and the ``python -m repro.analysis`` sweep.
+
+Four passes, all operating on a lowered/compiled executable without running
+a training step:
+
+* **Collective census** (:func:`check_census`): count every collective op
+  in the optimized HLO and bound it by the *declared* budget -- the gossip
+  executor's :class:`repro.core.gossip.GossipBudget` times the leaf count
+  times the algorithm's registered ``comm_rounds``.  Ops are attributed by
+  the ``source_file`` HLO metadata: collectives issued from
+  ``core/gossip.py`` (the only module that calls ``lax.ppermute`` /
+  ``lax.all_gather``) are judged against the budget; partitioner-inserted
+  collectives (GSPMD resharding) are held to a separate rule -- they must
+  be all-reduces (cross-agent metric and gradient reductions) or gathers
+  feeding the compressor's TopK custom-call, anything else means sharded
+  state is being silently materialized.
+* **Donation** (:func:`donation_hlo_report` / :func:`check_donation`):
+  every carried state leaf must be input-output aliased in the lowered
+  module, and the call-site buffers must actually be consumed (no read
+  after donation).
+* **Retrace** (:func:`check_retrace`): one executable per chunk size across
+  a whole schedule period -- the traced ``W_t`` gather and round index must
+  never trigger recompilation.
+* **Dtype flow** (:func:`check_dtype_flow`): under ``wire='packed_bits'``
+  the shipped buffers stay bf16/u16/u32 end-to-end; a dense-f32 collective
+  sneaking between pack and ship defeats the wire format silently.
+
+Parsing helpers (:func:`parse_collectives`, :func:`shape_bytes`) moved here
+from ``repro.launch.dryrun``, which now re-exports them.  This module is
+import-safe before jax backend initialization (jax is imported, never
+queried, at import time), so ``repro._env.ensure_host_device_count`` calls
+still win the race.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core.gossip import GossipBudget
+
+__all__ = [
+    "COLLECTIVES",
+    "WIRE_FACTOR",
+    "NO_GOSSIP_BUDGET",
+    "GOSSIP_SOURCES",
+    "SPMD_GATHER_SOURCES",
+    "CollectiveOp",
+    "CensusReport",
+    "DonationReport",
+    "RetraceReport",
+    "DtypeFlowReport",
+    "shape_bytes",
+    "parse_collectives",
+    "collective_ops",
+    "collective_counts",
+    "check_census",
+    "check_dtype_flow",
+    "donation_hlo_report",
+    "check_donation",
+    "check_retrace",
+]
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+# effective wire traffic per byte of result (all-reduce = RS + AG)
+WIRE_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+
+# centralized algorithms (dp-sgd, soteriafl) gossip nothing: any collective
+# in their compiled step is a violation
+NO_GOSSIP_BUDGET = GossipBudget(
+    executor="none", per_leaf={},
+    note="no gossip executor; the step must compile collective-free")
+
+# the only module that issues collectives by hand (lax.ppermute /
+# lax.all_gather inside shard_map); everything else in the HLO is
+# partitioner-inserted
+GOSSIP_SOURCES = ("core/gossip.py",)
+
+# partitioner gathers tolerated outside the gossip executor: GSPMD cannot
+# shard the TopK custom-call along the agent axis, so block_top_k's operand
+# is gathered and TopK runs replicated
+SPMD_GATHER_SOURCES = ("core/compression.py",)
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+                "c128": 16, "token": 0}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(")
+_SOURCE_RE = re.compile(r'source_file="([^"]+)"')
+
+
+def _norm_source(path: str) -> str:
+    """Repo-relative source tag: '.../src/repro/core/gossip.py' ->
+    'core/gossip.py'; unknown layouts fall back to the basename."""
+    if "/repro/" in path:
+        return path.rsplit("/repro/", 1)[1]
+    return path.rsplit("/", 1)[-1]
+
+
+def shape_bytes(text: str) -> int:
+    """Sum bytes of every typed shape in an HLO result-type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+# legacy alias kept for the dryrun-era import sites
+_shape_bytes = shape_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveOp:
+    """One collective instruction in the optimized HLO."""
+
+    category: str                 # canonical name from COLLECTIVES
+    op: str                       # raw op token ('all-gather-start', ...)
+    result_bytes: int
+    dtypes: Tuple[str, ...]       # dtype tokens in the result type
+    dtype_bytes: Mapping[str, int]  # per-dtype result bytes
+    source: str = ""              # repo-relative source_file metadata
+
+    @property
+    def gossip(self) -> bool:
+        """Issued by a gossip executor (vs. partitioner-inserted)."""
+        return self.source in GOSSIP_SOURCES
+
+
+def _dtype_split(text: str) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out[dt] = out.get(dt, 0) + n * _DTYPE_BYTES[dt]
+    return out
+
+
+def collective_ops(hlo_text: str) -> List[CollectiveOp]:
+    """Every collective op in the HLO, with result bytes split per dtype.
+
+    Async pairs are counted at ``-start`` (the ``-done`` re-states the same
+    transfer); sync ops count once.
+    """
+    ops: List[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line.strip())
+        if not m:
+            continue
+        result_type, op = m.groups()
+        for c in COLLECTIVES:
+            if op == c or op.startswith(c + "-start") or op == c + "-done":
+                if op.endswith("-done"):
+                    break  # counted at -start
+                per = _dtype_split(result_type)
+                src = _SOURCE_RE.search(line)
+                ops.append(CollectiveOp(
+                    category=c, op=op,
+                    result_bytes=sum(per.values()),
+                    dtypes=tuple(sorted(per)), dtype_bytes=per,
+                    source=_norm_source(src.group(1)) if src else ""))
+                break
+    return ops
+
+
+def parse_collectives(hlo_text: str):
+    """Per-category result bytes + op counts for every collective in the
+    HLO (the dryrun-era aggregate view, kept signature-compatible)."""
+    out = {c: {"bytes": 0, "count": 0} for c in COLLECTIVES}
+    for op in collective_ops(hlo_text):
+        out[op.category]["bytes"] += op.result_bytes
+        out[op.category]["count"] += 1
+    return out
+
+
+def collective_counts(hlo_text: str) -> Dict[str, int]:
+    """Per-category op counts only (zero categories included)."""
+    return {c: v["count"] for c, v in parse_collectives(hlo_text).items()}
+
+
+# ---------------------------------------------------------------------------
+# Pass 1: collective census against declared budgets.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CensusReport:
+    """Measured collective counts vs. the declared budget for one step.
+
+    ``counts``/``bytes`` cover the gossip-attributed collectives (those
+    whose ``source_file`` metadata points into :data:`GOSSIP_SOURCES`);
+    ``spmd_counts``/``spmd_sources`` cover partitioner-inserted ones.
+    ``enforced`` is False for SPMD-partitioner-dependent executors (dense
+    einsum gossip under a mesh): their gossip counts are reported, never
+    judged.  The partitioner rule (all-reduce or allowlisted gather only)
+    is judged whenever a budget is present.
+    """
+
+    counts: Dict[str, int]
+    bytes: Dict[str, int]
+    bound: Optional[Dict[str, int]]
+    budget: Optional[GossipBudget]
+    enforced: bool
+    spmd_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    spmd_sources: Dict[str, int] = dataclasses.field(default_factory=dict)
+    violations: List[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def to_json(self) -> dict:
+        return {
+            "counts": self.counts, "bytes": self.bytes, "bound": self.bound,
+            "executor": self.budget.executor if self.budget else None,
+            "enforced": self.enforced,
+            "spmd_counts": self.spmd_counts,
+            "spmd_sources": self.spmd_sources,
+            "violations": self.violations,
+            "ok": self.ok,
+        }
+
+
+def check_census(hlo_text: str, *, mixer=None,
+                 budget: Optional[GossipBudget] = None,
+                 n_leaves: int = 1, comm_rounds: int = 1,
+                 enforce: Optional[bool] = None,
+                 meshed: bool = True,
+                 spmd_gather_sources: Sequence[str] = SPMD_GATHER_SOURCES,
+                 spmd_scalar_bytes: int = 16,
+                 spmd_rule: bool = True,
+                 ) -> CensusReport:
+    """Count collectives in ``hlo_text`` and bound them by the budget.
+
+    ``budget`` defaults to ``mixer.budget``.  Collectives split by HLO
+    ``source_file`` attribution:
+
+    * gossip-attributed (issued from :data:`GOSSIP_SOURCES`): per-step
+      ceiling is ``budget.per_leaf[cat] * n_leaves * comm_rounds``; any op
+      of a category absent from the budget is a violation.  ``enforce``
+      overrides the default policy (skip enforcement for
+      ``spmd_dependent`` budgets when ``meshed``).
+    * partitioner-inserted (everything else): must be an all-reduce
+      (cross-agent metric / gradient reductions the agent-axis sharding
+      legitimately induces), an all-gather attributed to
+      ``spmd_gather_sources`` (the compressor's unpartitionable TopK), or
+      a scalar-sized op of at most ``spmd_scalar_bytes`` (PRNG key
+      plumbing for per-agent DP noise shows up as 4-8 byte
+      collective-permutes).  Any other partitioner collective means
+      sharded state is being materialized behind the executor's back.
+
+    The partitioner rule is calibrated for agent-axes-only meshes (the
+    sweep's 4-agent census mesh).  On meshes with a model axis GSPMD
+    legitimately gathers sharded weights/activations for the
+    model-parallel matmuls -- callers lowering on such meshes pass
+    ``spmd_rule=False`` (launch/dryrun does); the partitioner ops are
+    still recorded in ``spmd_counts``/``spmd_sources``, just not judged.
+
+    With no budget at all the census is report-only.
+    """
+    if budget is None and mixer is not None:
+        budget = getattr(mixer, "budget", None)
+    ops = collective_ops(hlo_text)
+    gossip_ops = [op for op in ops if op.gossip]
+    spmd_ops = [op for op in ops if not op.gossip]
+
+    counts = {c: 0 for c in COLLECTIVES}
+    nbytes = {c: 0 for c in COLLECTIVES}
+    for op in gossip_ops:
+        counts[op.category] += 1
+        nbytes[op.category] += op.result_bytes
+    spmd_counts: Dict[str, int] = {}
+    spmd_sources: Dict[str, int] = {}
+    for op in spmd_ops:
+        spmd_counts[op.category] = spmd_counts.get(op.category, 0) + 1
+        spmd_sources[op.source] = spmd_sources.get(op.source, 0) + 1
+
+    if budget is None:
+        return CensusReport(counts=counts, bytes=nbytes, bound=None,
+                            budget=None, enforced=False,
+                            spmd_counts=spmd_counts,
+                            spmd_sources=spmd_sources)
+
+    enforced = (not (budget.spmd_dependent and meshed)
+                if enforce is None else enforce)
+    bound = budget.bound(n_leaves, comm_rounds)
+    violations: List[str] = []
+    if enforced:
+        for cat, count in counts.items():
+            if not count:
+                continue
+            ceiling = bound.get(cat)
+            if ceiling is None:
+                violations.append(
+                    f"unbudgeted collective {cat!r}: {count} gossip op(s) "
+                    f"but executor {budget.executor!r} declares none")
+            elif count > ceiling:
+                violations.append(
+                    f"{cat}: {count} gossip op(s) > budget {ceiling} "
+                    f"({budget.per_leaf[cat]}/leaf x {n_leaves} leaves x "
+                    f"{comm_rounds} round(s), executor "
+                    f"{budget.executor!r})")
+    for op in spmd_ops:
+        if not spmd_rule:
+            break
+        if op.category == "all-reduce":
+            continue
+        if (op.category == "all-gather"
+                and op.source in spmd_gather_sources):
+            continue
+        if op.result_bytes <= spmd_scalar_bytes:
+            continue
+        violations.append(
+            f"partitioner-inserted {op.category} "
+            f"({op.result_bytes} bytes, source "
+            f"{op.source or 'unattributed'!r}) -- only all-reduce "
+            "reductions and the compressor TopK gather are expected "
+            "outside the gossip executor")
+    return CensusReport(counts=counts, bytes=nbytes, bound=bound,
+                        budget=budget, enforced=enforced,
+                        spmd_counts=spmd_counts, spmd_sources=spmd_sources,
+                        violations=violations)
+
+
+# ---------------------------------------------------------------------------
+# Pass 2: dtype flow -- packed wire buffers never upcast to dense f32.
+# ---------------------------------------------------------------------------
+
+PACKED_WIRE_DTYPES = ("bf16", "u16", "u32", "s32")
+
+
+@dataclasses.dataclass
+class DtypeFlowReport:
+    """Per-dtype bytes crossing collectives, judged against the packed-wire
+    contract: payload stays in packed dtypes; f32 on the wire is capped by
+    ``f32_allowance_bytes`` (the QSGD per-window scales and the push-sum
+    weight word are legitimate, bounded f32 riders)."""
+
+    dtype_bytes: Dict[str, int]
+    packed_bytes: int
+    f32_bytes: int
+    f32_allowance_bytes: int
+    violations: List[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def to_json(self) -> dict:
+        return {
+            "dtype_bytes": self.dtype_bytes,
+            "packed_bytes": self.packed_bytes,
+            "f32_bytes": self.f32_bytes,
+            "f32_allowance_bytes": self.f32_allowance_bytes,
+            "violations": self.violations, "ok": self.ok,
+        }
+
+
+def check_dtype_flow(hlo_text: str, *, f32_allowance_bytes: int = 0,
+                     allowed: Sequence[str] = PACKED_WIRE_DTYPES,
+                     require_packed: bool = True,
+                     sources: Optional[Sequence[str]] = GOSSIP_SOURCES,
+                     ) -> DtypeFlowReport:
+    """Under ``wire='packed_bits'`` only packed dtypes may cross the wire.
+
+    Sums collective result bytes per dtype over the wire collectives --
+    those attributed to ``sources`` (default: the gossip executor; pass
+    ``sources=None`` to take every collective, e.g. for synthetic HLO).
+    Partitioner metric reductions are f32 by design and are the census'
+    business, not the wire contract's.  Violations: any dtype outside
+    ``allowed`` + {f32}; f32 beyond the allowance (QSGD ships one f32 scale
+    per window as a separate buffer -- size it via
+    ``wire_format.overhead_bytes(d) * n_agents`` and add a few words for
+    the push-sum weight); and, when ``require_packed``, a program with
+    wire collectives but none in a packed dtype (the check would be
+    vacuous).
+    """
+    totals: Dict[str, int] = {}
+    for op in collective_ops(hlo_text):
+        if sources is not None and op.source not in sources:
+            continue
+        for dt, b in op.dtype_bytes.items():
+            totals[dt] = totals.get(dt, 0) + b
+    packed = sum(b for dt, b in totals.items() if dt in allowed)
+    f32 = totals.get("f32", 0)
+    violations: List[str] = []
+    for dt, b in sorted(totals.items()):
+        if dt in allowed or dt == "f32":
+            continue
+        violations.append(
+            f"collective ships {b} bytes of {dt}; packed wire formats "
+            f"allow only {tuple(allowed)} (+ bounded f32 riders)")
+    if f32 > f32_allowance_bytes:
+        violations.append(
+            f"{f32} f32 bytes cross collectives, allowance is "
+            f"{f32_allowance_bytes} -- a dense plane is leaking past the "
+            "pack/ship boundary")
+    if require_packed and totals and not packed:
+        violations.append(
+            "no packed-dtype (bf16/u16/u32) collective found although the "
+            "program ships collectives -- the packed wire path is not "
+            "actually in the compiled program")
+    return DtypeFlowReport(dtype_bytes=totals, packed_bytes=packed,
+                           f32_bytes=f32,
+                           f32_allowance_bytes=f32_allowance_bytes,
+                           violations=violations)
+
+
+# ---------------------------------------------------------------------------
+# Pass 3: donation -- carried state aliased in, consumed at the call site.
+# ---------------------------------------------------------------------------
+
+_DONATION_MARKS = ("tf.aliasing_output", "jax.buffer_donor")
+
+
+@dataclasses.dataclass
+class DonationReport:
+    n_state_leaves: int
+    aliased: int                      # donation marks in the lowered module
+    consumed: Optional[bool] = None   # runtime probe (None = not run)
+    reusable: Optional[bool] = None   # outputs stay alive / callable again
+    violations: List[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def to_json(self) -> dict:
+        return {"n_state_leaves": self.n_state_leaves,
+                "aliased": self.aliased, "consumed": self.consumed,
+                "reusable": self.reusable,
+                "violations": self.violations, "ok": self.ok}
+
+
+def donation_hlo_report(lowered_text: str,
+                        n_state_leaves: int) -> DonationReport:
+    """Static leg: every carried state leaf must carry a donation mark
+    (``tf.aliasing_output`` input-output alias, or ``jax.buffer_donor``
+    when XLA declined the alias) in the lowered module."""
+    aliased = sum(lowered_text.count(m) for m in _DONATION_MARKS)
+    violations = []
+    if aliased < n_state_leaves:
+        violations.append(
+            f"only {aliased} donation mark(s) for {n_state_leaves} carried "
+            "state leaves -- un-donated leaves double the state HBM "
+            "footprint per chunk")
+    return DonationReport(n_state_leaves=n_state_leaves, aliased=aliased,
+                          violations=violations)
+
+
+def check_donation(algo, source, params0, *, chunk: int = 2,
+                   seed: int = 0) -> DonationReport:
+    """Static + runtime donation check for ``algo`` under the chunk runner.
+
+    Builds the donating runner, asserts every state leaf is aliased in the
+    lowered module, then runs two chunks and probes the buffers: the second
+    call's input leaves must be deleted (consumed), its outputs alive.
+    The probe starts from the *second* state because ``init`` aliases
+    leaves (q_x is x), which would make per-leaf deletion ambiguous.
+    """
+    import jax
+    from repro.launch.runtime import make_runner
+
+    runner = make_runner(algo, source, chunk)
+    state_shapes = jax.eval_shape(lambda p: algo.init(p), params0)
+    n_leaves = len(jax.tree_util.tree_leaves(state_shapes))
+    report = donation_hlo_report(runner.lower(state_shapes).as_text(),
+                                 n_leaves)
+
+    state = algo.init(params0)
+    mid, _, _ = runner(state, jax.random.PRNGKey(seed), 0)
+    final, _, _ = runner(mid, jax.random.PRNGKey(seed + 1), chunk)
+    consumed = all(leaf.is_deleted()
+                   for leaf in jax.tree_util.tree_leaves(mid))
+    reusable = not any(leaf.is_deleted()
+                       for leaf in jax.tree_util.tree_leaves(final))
+    report.consumed, report.reusable = consumed, reusable
+    if not consumed:
+        report.violations.append(
+            "donated state buffers survive the call -- the executable "
+            "aliases on paper but the runtime keeps a live reference "
+            "(read after donation)")
+    if not reusable:
+        report.violations.append(
+            "returned state leaves are already deleted -- an output "
+            "aliases a buffer the program later donates away")
+    return report
+
+
+# ---------------------------------------------------------------------------
+# Pass 4: retrace -- one executable per chunk size across a schedule period.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RetraceReport:
+    executables: Dict[int, Optional[int]]   # chunk -> cache size after runs
+    calls_per_chunk: int
+    violations: List[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def to_json(self) -> dict:
+        return {"executables": {str(k): v
+                                for k, v in self.executables.items()},
+                "calls_per_chunk": self.calls_per_chunk,
+                "violations": self.violations, "ok": self.ok}
+
+
+def check_retrace(algo, source, params0, *, chunks: Sequence[int] = (2, 3),
+                  period: int = 1, seed: int = 0,
+                  runner_factory=None) -> RetraceReport:
+    """Run enough chunks to cross a full schedule period at every chunk
+    size and assert each runner compiled exactly one executable -- the
+    traced ``W_t`` gather and round offset must never specialize.
+
+    ``runner_factory(algo, source, chunk)`` defaults to the production
+    :func:`repro.launch.runtime.make_runner`; the analyzer self-tests
+    inject a known-bad runner (``static_argnums`` on the round offset) to
+    prove the rule fires."""
+    import jax
+
+    if runner_factory is None:
+        from repro.launch.runtime import make_runner
+        runner_factory = make_runner
+
+    executables: Dict[int, Optional[int]] = {}
+    violations: List[str] = []
+    n_calls = 0
+    for chunk in chunks:
+        runner = runner_factory(algo, source, chunk)
+        # cover the period boundary plus one extra call past it
+        n_calls = max(2, -(-period // chunk) + 1)
+        state = algo.init(params0)
+        for i in range(n_calls):
+            state, _, _ = runner(state, jax.random.PRNGKey(seed),
+                                 i * chunk)
+        size = runner.cache_size()
+        executables[chunk] = size
+        if size is not None and size > 1:
+            violations.append(
+                f"chunk={chunk}: {size} executables after {n_calls} calls "
+                f"spanning a period-{period} schedule -- the round index "
+                "or W_t table is retracing")
+    return RetraceReport(executables=executables, calls_per_chunk=n_calls,
+                         violations=violations)

@@ -584,27 +584,27 @@ def _porter_family(spec: ExperimentSpec, loss_fn, r: Resolved, variant: str,
                       config=cfg)
 
 
-@register_algorithm("porter-gc")
+@register_algorithm("porter-gc", comm_rounds=2)
 def _build_porter_gc(spec, loss_fn, r):
     return _porter_family(spec, loss_fn, r, "gc")
 
 
-@register_algorithm("porter-dp", dp=True)
+@register_algorithm("porter-dp", dp=True, comm_rounds=2)
 def _build_porter_dp(spec, loss_fn, r):
     return _porter_family(spec, loss_fn, r, "dp")
 
 
-@register_algorithm("beer")
+@register_algorithm("beer", comm_rounds=2)
 def _build_beer(spec, loss_fn, r):
     return _porter_family(spec, loss_fn, r, "beer")
 
 
-@register_algorithm("porter-adam")
+@register_algorithm("porter-adam", comm_rounds=2)
 def _build_porter_adam(spec, loss_fn, r):
     return _porter_family(spec, loss_fn, r, "gc", adam=True)
 
 
-@register_algorithm("dsgd", compressed=False)
+@register_algorithm("dsgd", compressed=False, comm_rounds=1)
 def _build_dsgd(spec, loss_fn, r):
     step = functools.partial(BL.dsgd_step, spec.eta, r.gamma, loss_fn,
                              r.mixer, tau=spec.tau, clip_mode=spec.clip_mode,
@@ -613,7 +613,7 @@ def _build_dsgd(spec, loss_fn, r):
     return _algorithm(spec, r, state_cls=BL.DsgdState, init=init, step=step)
 
 
-@register_algorithm("choco")
+@register_algorithm("choco", comm_rounds=1)
 def _build_choco(spec, loss_fn, r):
     step = functools.partial(BL.choco_step, spec.eta, r.gamma, loss_fn,
                              None, None, engine=r.engine, tau=spec.tau,
@@ -652,7 +652,7 @@ def _build_dpsgd(spec, loss_fn, r):
     return _algorithm(spec, r, state_cls=BL.DpSgdState, init=init, step=step)
 
 
-@register_algorithm("dp-csgp", dp=True)
+@register_algorithm("dp-csgp", dp=True, comm_rounds=2)
 def _build_dp_csgp(spec, loss_fn, r):
     tau = _require_tau(spec)
     cfg = PorterConfig(eta=spec.eta, gamma=r.gamma, tau=tau, variant="dp",

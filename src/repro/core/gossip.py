@@ -70,6 +70,7 @@ from .mixing import Topology, TopologySchedule
 from .wire_formats import PACK_BLOCK
 
 __all__ = [
+    "GossipBudget",
     "MixFn",
     "PACK_BLOCK",
     "apply_mixer",
@@ -85,6 +86,46 @@ __all__ = [
 # tree of (n, ...) -> tree of (n, ...); time-varying mixers additionally
 # take the traced absolute round index (see apply_mixer)
 MixFn = Callable[..., object]
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipBudget:
+    """Declared collective budget of one gossip executor.
+
+    Every mixer factory attaches one of these as ``mix.budget`` -- the
+    executor's *contract* for what its compiled program may ship, declared
+    at construction time and enforced against the lowered HLO by the
+    collective census in :mod:`repro.analysis.hlo`.
+
+    ``per_leaf`` maps an HLO collective category (``"collective-permute"``,
+    ``"all-gather"``, ...) to the maximum number of such ops the executor
+    may emit *per gossiped leaf, per comm round*.  The census multiplies by
+    the leaf count and the algorithm's declared
+    :attr:`repro.core.registry.AlgorithmInfo.comm_rounds` to bound the whole
+    step.  Budgets are upper bounds (XLA's combiner passes may merge ops
+    below them); categories absent from ``per_leaf`` are *forbidden* -- a
+    single op of an unbudgeted category is a violation.
+
+    ``spmd_dependent`` marks executors (dense einsum gossip) whose
+    collective schedule is chosen by the SPMD partitioner, not by the
+    executor: under a mesh the census reports their counts without
+    enforcing, and enforces the zero-collective contract only in the
+    unmeshed harness.
+
+    Push-sum transport never changes a budget: the weight plane rides
+    inside already-shipped buffers (``mix.push`` / ``mix.exchange_ps`` add
+    zero collectives by construction, and the census proves it).
+    """
+
+    executor: str
+    per_leaf: "dict[str, int]" = dataclasses.field(default_factory=dict)
+    spmd_dependent: bool = False
+    note: str = ""
+
+    def bound(self, n_leaves: int, comm_rounds: int) -> "dict[str, int]":
+        """Per-category op ceiling for a whole compiled step."""
+        return {cat: per * n_leaves * comm_rounds
+                for cat, per in self.per_leaf.items()}
 
 
 def apply_mixer(mixer: MixFn, tree, t=None):
@@ -167,6 +208,10 @@ def make_dense_mixer(w) -> MixFn:
 
     mix.push = push
     mix.time_varying = time_varying
+    mix.budget = GossipBudget(
+        executor="dense", per_leaf={}, spmd_dependent=True,
+        note="einsum over the agent axis; unmeshed it emits zero "
+             "collectives, under pjit the SPMD partitioner chooses them")
     return mix
 
 
@@ -339,6 +384,16 @@ def make_ring_mixer(w, mesh: Mesh,
 
     mix.push = push
     mix.time_varying = time_varying
+    # one ppermute per live band; the multi-pod seam patch doubles it (an
+    # extra shift over the 'pod' axis); n=2 folding halves it (use_next=0)
+    _shifts = int(use_prev) + int(use_next)
+    mix.budget = GossipBudget(
+        executor="ring",
+        per_leaf={"collective-permute":
+                  _shifts * (2 if len(axes) == 2 else 1)},
+        note=f"{_shifts} live band(s) x "
+             f"{2 if len(axes) == 2 else 1} agent axis(es); "
+             "push-sum weight rides in leaf 0, zero extra")
     return mix
 
 
@@ -432,6 +487,9 @@ def make_packed_mixer(w, mesh: Mesh, frac: float,
         return fn(tree, w_rows)
 
     mix.time_varying = time_varying
+    mix.budget = GossipBudget(
+        executor="packed", per_leaf={"all-gather": 2},
+        note="one all-gather each for the (values, indices) planes")
     return mix
 
 
@@ -472,6 +530,37 @@ def _pack_local(codec: WF.WireFormat, key, x):
     rows = WF.to_windows(flat)
     bufs = codec.pack(key, rows)
     return bufs, codec.unpack(*bufs), flat.shape[0]
+
+
+# Wire armor: float wire buffers are bitcast to same-width uints for the
+# collective itself.  Without this, XLA's convert-mover is free to hoist
+# the receiver-side f32 upcast across the collective (the CPU backend does
+# not model comm cost), silently shipping the bf16 value plane -- or the
+# qsgd scale column -- as dense f32.  A bitcast is a hard boundary no
+# convert can cross, and the round trip is bit-exact.
+
+_ARMOR_UINT = {2: jnp.uint16, 4: jnp.uint32}
+
+
+def _armor_bufs(bufs):
+    """Bitcast float buffers to uint for shipping -> (armored, orig dtypes)."""
+    out, kinds = [], []
+    for b in bufs:
+        # issubdtype, not dtype.kind: ml_dtypes' bfloat16 reports kind 'V'
+        if jnp.issubdtype(b.dtype, jnp.floating):
+            u = _ARMOR_UINT[jnp.dtype(b.dtype).itemsize]
+            out.append(jax.lax.bitcast_convert_type(b, u))
+            kinds.append(b.dtype)
+        else:
+            out.append(b)
+            kinds.append(None)
+    return tuple(out), tuple(kinds)
+
+
+def _unarmor_bufs(bufs, kinds):
+    """Inverse of :func:`_armor_bufs` on the received buffers."""
+    return tuple(jax.lax.bitcast_convert_type(b, k) if k is not None else b
+                 for b, k in zip(bufs, kinds))
 
 
 # Push-sum weight transport for codec executors: the exact (uncompressed)
@@ -541,7 +630,9 @@ def make_ring_codec_mixer(w, mesh: Mesh, codec: WF.WireFormat,
     def shift_bufs(bufs, direction: int, axis: str):
         size = mesh.shape[axis]
         perm = [(i, (i + direction) % size) for i in range(size)]
-        return tuple(jax.lax.ppermute(b, axis, perm) for b in bufs)
+        armored, kinds = _armor_bufs(bufs)
+        shipped = tuple(jax.lax.ppermute(b, axis, perm) for b in armored)
+        return _unarmor_bufs(shipped, kinds)
 
     def local(x, b_self, b_prev, b_next, key):
         bufs, c_rows, d = _pack_local(codec, key, x)
@@ -700,6 +791,14 @@ def make_ring_codec_mixer(w, mesh: Mesh, codec: WF.WireFormat,
     mix.exchange_ps = exchange_ps
     mix.time_varying = time_varying
     mix.wire_codec = codec
+    _shifts = int(use_prev) + int(use_next)
+    mix.budget = GossipBudget(
+        executor="ring_codec",
+        per_leaf={"collective-permute":
+                  _shifts * (2 if len(axes) == 2 else 1) * codec.n_buffers},
+        note=f"{codec.name}: each live band ships {codec.n_buffers} packed "
+             "buffers; exchange_ps bitcasts the weight into the last one "
+             "(zero extra)")
     return mix
 
 
@@ -718,11 +817,16 @@ def make_packed_codec_mixer(w, mesh: Mesh, codec: WF.WireFormat,
     gather_axis = axes if len(axes) > 1 else axes[0]
     w_j = jnp.asarray(w_np)
 
+    def gather_bufs(bufs):
+        armored, kinds = _armor_bufs(bufs)
+        gathered = tuple(
+            jax.lax.all_gather(b, gather_axis).reshape(n, *b.shape)
+            for b in armored)
+        return _unarmor_bufs(gathered, kinds)
+
     def local(x, w_col, key):
         bufs, c_rows, d = _pack_local(codec, key, x)
-        all_bufs = tuple(
-            jax.lax.all_gather(b, gather_axis).reshape(n, *b.shape)
-            for b in bufs)
+        all_bufs = gather_bufs(bufs)
 
         def add_agent(o, j):
             return o + w_col[j] * codec.unpack(*[ab[j] for ab in all_bufs]
@@ -773,9 +877,7 @@ def make_packed_codec_mixer(w, mesh: Mesh, codec: WF.WireFormat,
         extra collective); returns (c, wc, cw, wcw) local blocks."""
         bufs, c_rows, d = _pack_local(codec, key, x)
         ship, last_shape = _append_weight(bufs, wloc)
-        all_bufs = tuple(
-            jax.lax.all_gather(b, gather_axis).reshape(n, *b.shape)
-            for b in ship)
+        all_bufs = gather_bufs(ship)
 
         def add_agent(carry, j):
             o, wacc = carry
@@ -841,6 +943,11 @@ def make_packed_codec_mixer(w, mesh: Mesh, codec: WF.WireFormat,
     mix.exchange_ps = exchange_ps
     mix.time_varying = time_varying
     mix.wire_codec = codec
+    mix.budget = GossipBudget(
+        executor="packed_codec", per_leaf={"all-gather": codec.n_buffers},
+        note=f"{codec.name}: one all-gather per packed buffer; "
+             "exchange_ps bitcasts the weight into the last one (zero "
+             "extra)")
     return mix
 
 

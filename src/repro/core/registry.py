@@ -53,12 +53,22 @@ class AlgorithmInfo:
                    emits ``consensus_x``).
     compressed:    communicates through a rho-compressor (needs a
                    :class:`repro.core.comm_round.CommRound` engine).
+    comm_rounds:   gossip exchanges per ``step`` (mixer applications).  This
+                   is a *declared budget*, not a measurement: the static
+                   analyzer (:mod:`repro.analysis.hlo`) multiplies it by the
+                   mixer's per-round :class:`repro.core.gossip.GossipBudget`
+                   and the number of gossiped leaves to bound how many
+                   collectives the compiled step may contain.  PORTER-family
+                   algorithms exchange both the compressed innovation and the
+                   compressed iterate (2); single-gossip baselines exchange
+                   once (1); centralized algorithms never gossip (0).
     """
 
     name: str
     dp: bool = False
     decentralized: bool = True
     compressed: bool = True
+    comm_rounds: int = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,13 +109,27 @@ def _ensure_builtin():
 
 
 def register_algorithm(name: str, *, dp: bool = False,
-                       decentralized: bool = True, compressed: bool = True):
+                       decentralized: bool = True, compressed: bool = True,
+                       comm_rounds: Optional[int] = None):
     """Decorator: register ``factory(spec, loss_fn, resolved) -> Algorithm``
     under ``name``.  ``resolved`` is the build context (topology, mixer,
     compressor, engine, gamma) that :func:`repro.api.build` constructed from
-    the spec -- factories never build those pieces themselves."""
+    the spec -- factories never build those pieces themselves.
+
+    ``comm_rounds`` declares how many gossip exchanges one ``step`` performs
+    (see :class:`AlgorithmInfo`); it defaults to 1 for decentralized
+    algorithms and 0 otherwise, and is enforced against the compiled HLO by
+    ``python -m repro.analysis``."""
+    if comm_rounds is None:
+        comm_rounds = 1 if decentralized else 0
+    if comm_rounds < 0:
+        raise ValueError(f"comm_rounds must be >= 0, got {comm_rounds}")
+    if not decentralized and comm_rounds:
+        raise ValueError(
+            f"algorithm {name!r}: centralized algorithms gossip zero times "
+            f"per step, got comm_rounds={comm_rounds}")
     info = AlgorithmInfo(name=name, dp=dp, decentralized=decentralized,
-                         compressed=compressed)
+                         compressed=compressed, comm_rounds=comm_rounds)
 
     def deco(factory):
         if name in _REGISTRY:

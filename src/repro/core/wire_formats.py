@@ -266,6 +266,10 @@ class WireFormat:
         scales; the acceptance ratios count payload, totals include both).
       pack: (key, rows (nb, PACK_BLOCK)) -> tuple of wire buffers.
       unpack: (*buffers, dtype=...) -> (nb, PACK_BLOCK) dense window.
+      n_buffers: how many wire buffers ``pack`` returns (the codec gossip
+        executors ship each one through its own collective, so this is the
+        per-leaf collective multiplier the static analyzer budgets
+        against -- see :class:`repro.core.gossip.GossipBudget`).
     """
 
     name: str
@@ -274,6 +278,7 @@ class WireFormat:
     overhead_bytes_per_window: int
     pack: Callable
     unpack: Callable
+    n_buffers: int = 2
 
     def windows(self, d: int) -> int:
         return -(-int(d) // PACK_BLOCK)
@@ -322,7 +327,7 @@ def make_wire_format(compressor_name: str, *, frac: Optional[float] = None,
             name="topk_bits", deterministic=True,
             payload_bytes_per_window=4 * k,      # bf16 value + u16 index
             overhead_bytes_per_window=0,
-            pack=pack, unpack=unpack)
+            pack=pack, unpack=unpack, n_buffers=2)
     if compressor_name == "qsgd":
         if levels is None:
             raise ValueError("qsgd_bits wire format needs levels")
@@ -346,7 +351,7 @@ def make_wire_format(compressor_name: str, *, frac: Optional[float] = None,
             name="qsgd_bits", deterministic=False,
             payload_bytes_per_window=4 * words,  # bit-packed uint32 codes
             overhead_bytes_per_window=4,         # one f32 scale per window
-            pack=pack, unpack=unpack)
+            pack=pack, unpack=unpack, n_buffers=2)
     raise ValueError(
         f"compressor {compressor_name!r} has no registered bit-packed wire "
         f"format; have {WIRE_FORMATS} (top_k/block_top_k -> topk_bits, "

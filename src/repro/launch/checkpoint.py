@@ -66,7 +66,7 @@ def _state_step(state) -> int:
     """The iteration counter, wherever the state keeps it (PorterAdamState
     nests it inside its PORTER base)."""
     if hasattr(state, "step"):
-        return int(state.step)
+        return int(state.step)  # analysis: ok -- host-side restore, state is concrete
     for name in _state_fields(state):
         v = getattr(state, name)
         if hasattr(v, "_fields"):

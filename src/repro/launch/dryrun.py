@@ -32,7 +32,6 @@ ensure_host_device_count(512)
 import argparse
 import dataclasses
 import json
-import re
 import time
 import traceback
 from pathlib import Path
@@ -47,52 +46,11 @@ from repro.launch.mesh import HW, make_production_mesh
 from repro.launch.steps import (build_prefill_step, build_serve_step,
                                 build_train_step)
 
-COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-               "collective-permute")
-# effective wire traffic per byte of result (all-reduce = RS + AG)
-WIRE_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
-               "all-to-all": 1.0, "collective-permute": 1.0}
-
-_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1,
-                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
-                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
-                "c128": 16, "token": 0}
-
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-
-
-def _shape_bytes(text: str) -> int:
-    """Sum bytes of every typed shape in an HLO result-type string."""
-    total = 0
-    for dt, dims in _SHAPE_RE.findall(text):
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
-
-
-def parse_collectives(hlo_text: str):
-    """Per-category result bytes for every collective op in the HLO."""
-    out = {c: {"bytes": 0, "count": 0} for c in COLLECTIVES}
-    for line in hlo_text.splitlines():
-        line = line.strip()
-        m = re.match(r"^%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", line)
-        if not m:
-            continue
-        result_type, op = m.groups()
-        base = op
-        for c in COLLECTIVES:
-            if base == c or base.startswith(c + "-start") or base == c + "-done":
-                if base.endswith("-done"):
-                    break  # counted at -start
-                out[c]["bytes"] += _shape_bytes(result_type)
-                out[c]["count"] += 1
-                break
-    return out
+# the HLO parsing machinery's canonical home is the analysis subsystem;
+# these re-exports keep the historical dryrun import sites working
+from repro.analysis.hlo import (COLLECTIVES, WIRE_FACTOR,  # noqa: F401
+                                _shape_bytes, check_census,
+                                parse_collectives)
 
 
 def count_params(shapes_tree, top_k: int = 2):
@@ -130,6 +88,10 @@ class _ChunkedLower:
         self.runner = runner
         self.setup = setup
 
+    @property
+    def algorithm(self):
+        return self.setup.algorithm
+
     def lower(self):
         return self.runner.lower(self.setup.state_shapes,
                                  self.setup.key_shape)
@@ -142,7 +104,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, variant: str,
             q_chunk=None, capacity: float = None, cache_dtype="bf16",
             topology: str = "ring", topology_schedule: str = None,
             comm_backend: str = "auto", chunk: int = None,
-            wire: str = "dense", overlap: bool = False):
+            wire: str = "dense", overlap: bool = False,
+            analyze: bool = False):
     shape = SH.SHAPES[shape_name]
     cfg = get_config(arch)
     if capacity is not None:
@@ -230,6 +193,23 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, variant: str,
         wire = sum(WIRE_FACTOR[c] * v["bytes"] for c, v in coll.items())
         rec["hlo_ops"] = {"lines": hlo.count("\n")}
 
+        if analyze and shape.kind == "train":
+            # the analyzer's collective census: measured counts vs. the
+            # gossip executor's declared budget x leaves x comm rounds
+            # (x chunk when the executable covers a whole chunk)
+            algo = setup.algorithm
+            budget = (getattr(algo.mixer, "budget", None)
+                      if algo.mixer is not None else None)
+            n_leaves = len(jax.tree_util.tree_leaves(params_shapes))
+            rounds = algo.info.comm_rounds * (rec.get("chunk") or 1)
+            # the partitioner rule only holds on agent-axes-only meshes;
+            # the production meshes shard the model axis, where GSPMD
+            # gathering weights for the matmuls is the whole point
+            rec["census"] = check_census(
+                hlo, budget=budget, n_leaves=n_leaves,
+                comm_rounds=rounds, meshed=True,
+                spmd_rule="model" not in mesh.shape).to_json()
+
         mf = model_flops(cfg, shape, params_shapes, shape.kind)
         if rec.get("chunk"):
             # the compiled program covers `chunk` comm rounds; put the
@@ -267,13 +247,30 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, variant: str,
     fname = out_dir / f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
     fname.write_text(json.dumps(rec, indent=2))
     status = "ok" if rec["ok"] else "FAIL"
-    r = rec.get("roofline", {})
-    print(f"[{status}] {arch:>20s} {shape_name:>12s} {mesh_name:>10s} "
-          f"lower={rec.get('lower_s', '-')}s compile={rec.get('compile_s', '-')}s "
-          f"dom={r.get('dominant', '-')} "
-          f"c/m/x={r.get('compute_s', 0):.3g}/{r.get('memory_s', 0):.3g}/"
-          f"{r.get('collective_s', 0):.3g}s",
-          flush=True)
+    if analyze and "census" in rec:
+        # --analyze replaces the raw cost-analysis roofline with the
+        # analyzer's collective-census report
+        cen = rec["census"]
+        counts = {c: v for c, v in cen["counts"].items() if v}
+        bound = cen.get("bound")
+        verdict = ("within-budget" if cen["ok"] and cen["enforced"]
+                   else "report-only" if not cen["enforced"]
+                   else "OVER-BUDGET")
+        print(f"[{status}] {arch:>20s} {shape_name:>12s} {mesh_name:>10s} "
+              f"census[{cen.get('executor') or 'no-gossip'}] {verdict} "
+              f"counts={counts or 0} bound={bound}", flush=True)
+        for v in cen["violations"]:
+            print("    census:", v, flush=True)
+    else:
+        r = rec.get("roofline", {})
+        print(f"[{status}] {arch:>20s} {shape_name:>12s} {mesh_name:>10s} "
+              f"lower={rec.get('lower_s', '-')}s "
+              f"compile={rec.get('compile_s', '-')}s "
+              f"dom={r.get('dominant', '-')} "
+              f"c/m/x={r.get('compute_s', 0):.3g}/"
+              f"{r.get('memory_s', 0):.3g}/"
+              f"{r.get('collective_s', 0):.3g}s",
+              flush=True)
     if not rec["ok"]:
         print("   ", rec["error"], flush=True)
     return rec
@@ -333,6 +330,11 @@ def main():
                     help="lower the scan-fused chunk runner over N comm "
                          "rounds (train shapes; one executable, donated "
                          "state, on-device batch synthesis)")
+    ap.add_argument("--analyze", action="store_true",
+                    help="replace the cost-analysis roofline printout with "
+                         "the analyzer's collective-census report (counts "
+                         "vs. the gossip executor's declared budget; see "
+                         "python -m repro.analysis)")
     ap.add_argument("--tag", default="")
     ap.add_argument("--out", default="artifacts/dryrun")
     args = ap.parse_args()
@@ -360,7 +362,8 @@ def main():
                 topology=args.topology,
                 topology_schedule=args.topology_schedule,
                 comm_backend=args.comm_backend,
-                chunk=args.chunk, wire=args.wire, overlap=args.overlap))
+                chunk=args.chunk, wire=args.wire, overlap=args.overlap,
+                analyze=args.analyze))
     n_ok = sum(r["ok"] for r in results)
     print(f"\n{n_ok}/{len(results)} combinations lowered+compiled OK")
     return 0 if n_ok == len(results) else 1

@@ -1,0 +1,351 @@
+"""Analyzer self-tests (repro.analysis): every pass must fail its known-bad
+fixture for exactly its own rule and accept the known-good twin.
+
+* HLO parsing: shape bytes, -start/-done async pairing, source_file
+  attribution.
+* Census: gossip budgets (over-count, unbudgeted category), the
+  partitioner rule (all-reduce / TopK gather / scalar key plumbing pass;
+  anything else fails), spmd_dependent report-only mode.
+* Dtype flow: packed wire contract with the f32 allowance and source
+  scoping.
+* Donation: static marker count + the live runtime probe on a 1-device
+  runner (known-bad: a jit WITHOUT donate_argnums).
+* Retrace: known-bad step whose carried aval alternates between calls.
+* AST lint: host escapes inside step functions, host syncs in eval
+  callbacks, jax-free modules, suppression token.
+* Table completeness over the live registry.
+
+Everything here runs mesh-free (single CPU device) so it stays tier-1.
+"""
+
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import ast_rules
+from repro.analysis.hlo import (GOSSIP_SOURCES, NO_GOSSIP_BUDGET,
+                                check_census, check_dtype_flow,
+                                check_retrace, collective_counts,
+                                collective_ops, donation_hlo_report,
+                                parse_collectives, shape_bytes)
+from repro.api import ExperimentSpec, build
+from repro.core.gossip import GossipBudget
+from repro.data import minibatch_source
+
+# ---------------------------------------------------------------------------
+# Synthetic HLO fixtures.  Shapes/sources mirror what the CPU backend
+# actually emits (see analysis/hlo.py docstring).
+# ---------------------------------------------------------------------------
+
+_SRC = 'metadata={op_name="x" source_file="/r/src/repro/%s" source_line=1}'
+
+GOOD_RING_HLO = f"""
+  %cp.1 = u16[1,1024]{{1,0}} collective-permute(u16[1,1024] %a), {_SRC % 'core/gossip.py'}
+  %cp.2 = u16[1,1024]{{1,0}} collective-permute(u16[1,1024] %b), {_SRC % 'core/gossip.py'}
+  %ar.1 = f32[4096]{{0}} all-reduce(f32[4096] %m), {_SRC % 'core/porter.py'}
+  %ar.2 = f32[] all-reduce(f32[] %s), {_SRC % 'core/clipping.py'}
+  %ag.1 = f32[4,2,2048]{{2,1,0}} all-gather(f32[1,2,2048] %t), {_SRC % 'core/compression.py'}
+  %cpk = u32[2]{{0}} collective-permute(u32[2] %k), {_SRC % 'core/porter.py'}
+"""
+
+RING_BUDGET = GossipBudget(executor="ring", per_leaf={"collective-permute": 2})
+
+
+def test_shape_bytes_and_parse():
+    assert shape_bytes("bf16[16,2048]{1,0}") == 16 * 2048 * 2
+    assert shape_bytes("(f32[8,4]{1,0}, s32[8]{0})") == 8 * 4 * 4 + 8 * 4
+    hlo = """
+      %ag = f32[16,1024]{1,0} all-gather(f32[1,1024] %p), dims={0}
+      %ag2 = f32[8]{0} all-gather-start(f32[1] %q)
+      %agd = f32[8]{0} all-gather-done(f32[8] %ag2)
+    """
+    out = parse_collectives(hlo)
+    assert out["all-gather"]["count"] == 2  # -start counted, -done not
+    assert out["all-gather"]["bytes"] == 16 * 1024 * 4 + 8 * 4
+    assert collective_counts(hlo)["collective-permute"] == 0
+
+
+def test_collective_source_attribution():
+    ops = collective_ops(GOOD_RING_HLO)
+    assert [op.source for op in ops] == [
+        "core/gossip.py", "core/gossip.py", "core/porter.py",
+        "core/clipping.py", "core/compression.py", "core/porter.py"]
+    assert [op.gossip for op in ops] == [True, True, False, False, False,
+                                         False]
+    assert GOSSIP_SOURCES == ("core/gossip.py",)
+
+
+def test_census_known_good():
+    rep = check_census(GOOD_RING_HLO, budget=RING_BUDGET, n_leaves=1,
+                       comm_rounds=1)
+    assert rep.ok, rep.violations
+    assert rep.counts["collective-permute"] == 2
+    assert rep.spmd_counts == {"all-reduce": 2, "all-gather": 1,
+                               "collective-permute": 1}
+    assert rep.to_json()["executor"] == "ring"
+
+
+def test_census_over_budget_fails():
+    hlo = GOOD_RING_HLO + f"""
+  %cp.3 = u16[1,1024]{{1,0}} collective-permute(u16[1,1024] %c), {_SRC % 'core/gossip.py'}
+"""
+    rep = check_census(hlo, budget=RING_BUDGET, n_leaves=1, comm_rounds=1)
+    assert not rep.ok
+    assert len(rep.violations) == 1
+    assert "3 gossip op(s) > budget 2" in rep.violations[0]
+
+
+def test_census_unbudgeted_category_fails():
+    hlo = GOOD_RING_HLO + f"""
+  %ag.g = u16[4,1024]{{1,0}} all-gather(u16[1,1024] %g), {_SRC % 'core/gossip.py'}
+"""
+    rep = check_census(hlo, budget=RING_BUDGET, n_leaves=1, comm_rounds=1)
+    assert not rep.ok
+    assert len(rep.violations) == 1
+    assert "unbudgeted collective 'all-gather'" in rep.violations[0]
+
+
+def test_census_partitioner_rule():
+    # a partitioner all-gather NOT from the compressor = sharded state
+    # being materialized -> exactly one violation
+    bad = GOOD_RING_HLO + f"""
+  %ag.bad = f32[4,4096]{{1,0}} all-gather(f32[1,4096] %z), {_SRC % 'core/porter.py'}
+"""
+    rep = check_census(bad, budget=RING_BUDGET, n_leaves=1, comm_rounds=1)
+    assert not rep.ok
+    assert len(rep.violations) == 1
+    assert "partitioner-inserted all-gather" in rep.violations[0]
+    # model-sharded meshes opt out of the partitioner rule (GSPMD gathers
+    # weights for the matmuls there); the gossip budget still enforces
+    relaxed = check_census(bad, budget=RING_BUDGET, n_leaves=1,
+                           comm_rounds=1, spmd_rule=False)
+    assert relaxed.ok and relaxed.spmd_counts["all-gather"] == 2
+    over = bad + f"""
+  %cp.3 = u16[1,1024]{{1,0}} collective-permute(u16[1,1024] %c), {_SRC % 'core/gossip.py'}
+"""
+    assert not check_census(over, budget=RING_BUDGET, n_leaves=1,
+                            comm_rounds=1, spmd_rule=False).ok
+    # ...but the scalar key permute (8 bytes, core/porter.py) in the good
+    # fixture passed, as did the TopK gather and the metric all-reduces
+    assert check_census(GOOD_RING_HLO, budget=RING_BUDGET).ok
+
+
+def test_census_no_gossip_budget():
+    hlo = f"""
+  %cp = u16[1,1024]{{1,0}} collective-permute(u16[1,1024] %a), {_SRC % 'core/gossip.py'}
+"""
+    rep = check_census(hlo, budget=NO_GOSSIP_BUDGET)
+    assert not rep.ok and "declares none" in rep.violations[0]
+    assert check_census("", budget=NO_GOSSIP_BUDGET).ok
+
+
+def test_census_spmd_dependent_report_only():
+    dense = GossipBudget(executor="dense", per_leaf={}, spmd_dependent=True)
+    hlo = f"""
+  %ag = f32[4,4096]{{1,0}} all-gather(f32[1,4096] %x), {_SRC % 'core/gossip.py'}
+"""
+    meshed = check_census(hlo, budget=dense, meshed=True)
+    assert meshed.ok and not meshed.enforced
+    unmeshed = check_census(hlo, budget=dense, meshed=False)
+    assert not unmeshed.ok and unmeshed.enforced
+
+
+def test_dtype_flow():
+    good = f"""
+  %cp.1 = u16[1,2048]{{1,0}} collective-permute(u16[1,2048] %a), {_SRC % 'core/gossip.py'}
+  %ar.1 = f32[4096]{{0}} all-reduce(f32[4096] %m), {_SRC % 'core/porter.py'}
+"""
+    # the 16 KiB f32 metric all-reduce is out of scope (not gossip-sourced)
+    rep = check_dtype_flow(good)
+    assert rep.ok, rep.violations
+    assert rep.dtype_bytes == {"u16": 2048 * 2}
+
+    leak = f"""
+  %cp.1 = u16[1,2048]{{1,0}} collective-permute(u16[1,2048] %a), {_SRC % 'core/gossip.py'}
+  %cp.2 = f32[1,4096]{{1,0}} collective-permute(f32[1,4096] %d), {_SRC % 'core/gossip.py'}
+"""
+    rep = check_dtype_flow(leak)
+    assert not rep.ok
+    assert any("dense plane is leaking" in v for v in rep.violations)
+    # the same f32 rider within its allowance (qsgd scales) is fine
+    assert check_dtype_flow(leak, f32_allowance_bytes=4096 * 4).ok
+
+    wide = f"""
+  %cp = f64[1,64]{{1,0}} collective-permute(f64[1,64] %a), {_SRC % 'core/gossip.py'}
+  %cp2 = u32[1,64]{{1,0}} collective-permute(u32[1,64] %b), {_SRC % 'core/gossip.py'}
+"""
+    rep = check_dtype_flow(wide)
+    assert any("f64" in v for v in rep.violations)
+
+    # vacuous pass guard: collectives present but none packed
+    allf = f"""
+  %cp = f32[1,64]{{1,0}} collective-permute(f32[1,64] %a), {_SRC % 'core/gossip.py'}
+"""
+    rep = check_dtype_flow(allf, f32_allowance_bytes=10**6)
+    assert any("not actually in the compiled program" in v
+               for v in rep.violations)
+
+
+# ---------------------------------------------------------------------------
+# Donation + retrace probes (1-device, tier-1 safe).
+# ---------------------------------------------------------------------------
+
+N, D, M, B = 4, 16, 32, 3
+
+
+def _loss_fn(params, batch):
+    f, l = batch
+    f, l = jnp.atleast_2d(f), jnp.atleast_1d(l)
+    logits = f @ params["w"] + params["b"]
+    return jnp.mean(jnp.log1p(jnp.exp(-(2 * l - 1) * logits)))
+
+
+def _problem(seed=0):
+    rng = np.random.default_rng(seed)
+    w_true = rng.normal(size=D)
+    f = rng.normal(size=(N, M, D)).astype(np.float32)
+    l = (f @ w_true > 0).astype(np.float32)
+    params0 = {"w": jnp.zeros(D), "b": jnp.zeros(())}
+    return params0, minibatch_source(f, l, B)
+
+
+def test_donation_hlo_report_known_bad():
+    # a jit WITHOUT donate_argnums lowers no aliasing marks: the static
+    # leg must flag every leaf as un-donated
+    params0, _ = _problem()
+
+    @jax.jit
+    def step(state):
+        return jax.tree_util.tree_map(lambda x: x + 1.0, state)
+
+    hlo = step.lower(params0).as_text()
+    rep = donation_hlo_report(hlo, len(jax.tree_util.tree_leaves(params0)))
+    assert not rep.ok
+    assert "un-donated leaves" in rep.violations[0]
+    assert donation_hlo_report(hlo, 0).ok  # nothing carried, nothing owed
+
+
+def test_retrace_known_good_and_bad():
+    params0, source = _problem()
+    algo = build(ExperimentSpec(algo="porter-gc", n_agents=N,
+                                topology="ring", compressor="top_k",
+                                frac=0.25, eta=0.1, tau=5.0), _loss_fn)
+    rep = check_retrace(algo, source, params0, chunks=(2, 3), period=1)
+    assert rep.ok, rep.violations
+    assert all(v in (None, 1) for v in rep.executables.values())
+
+    class StaticStartRunner:
+        """Known-bad: the round offset is a static argnum, so every new
+        start position compiles a fresh executable -- exactly the
+        specialization the retrace rule exists to catch."""
+
+        def __init__(self, algo, source, chunk):
+            def run(state, key, start):
+                def body(st, t):
+                    kb, ks = jax.random.split(jax.random.fold_in(key, t))
+                    st, m = algo.step(st, source(kb, t), ks)
+                    return st, m
+
+                st, metrics = jax.lax.scan(
+                    body, state,
+                    start + jnp.arange(chunk, dtype=jnp.int32))
+                return st, key, metrics
+
+            self.jitted = jax.jit(run, static_argnums=2)
+
+        def __call__(self, state, key, start):
+            return self.jitted(state, key, start)
+
+        def cache_size(self):
+            getter = getattr(self.jitted, "_cache_size", None)
+            return getter() if getter is not None else None
+
+    rep = check_retrace(algo, source, params0, chunks=(2,), period=3,
+                        runner_factory=StaticStartRunner)
+    assert not rep.ok
+    assert "retracing" in rep.violations[0]
+
+
+# ---------------------------------------------------------------------------
+# AST lint fixtures.
+# ---------------------------------------------------------------------------
+
+def _lint(src, **kw):
+    return ast_rules.lint_source(textwrap.dedent(src), "fix.py", **kw)
+
+
+def test_lint_host_escape_in_step():
+    findings = _lint("""
+        import random
+        import time
+
+        def porter_step(state, batch, key):
+            if random.random() > 0.5:      # host RNG inside a step
+                time.sleep(0.1)            # host clock inside a step
+            return float(state), state.item()
+    """)
+    assert len(findings) == 4, findings
+    assert all(f.rule == "host-escape-in-step" for f in findings)
+
+
+def test_lint_step_scope_clean_and_suppression():
+    assert not _lint("""
+        import jax.numpy as jnp
+
+        def step(state, batch, key):
+            return state + jnp.mean(batch), {}
+    """)
+    # the token silences exactly the marked line
+    assert not _lint("""
+        import time
+
+        def my_step(state, batch, key):
+            t0 = time.perf_counter()  # analysis: ok -- wall-clock harness
+            return state, t0
+    """)
+    # `from jax import random` must NOT trip the stdlib-random rule
+    assert not _lint("""
+        from jax import random
+
+        def step(state, batch, key):
+            return state + random.normal(key, state.shape), {}
+    """)
+
+
+def test_lint_host_sync():
+    findings = _lint("""
+        import jax.numpy as jnp
+
+        def eval_cb(params):
+            return float(jnp.mean(params)), bool(jnp.all(params > 0))
+    """, host_sync=True)
+    assert len(findings) == 2
+    assert all(f.rule == "host-sync-eval" for f in findings)
+    # the numpy-boundary idiom is the sanctioned fix
+    assert not _lint("""
+        import numpy as np
+
+        def eval_cb(params):
+            return float(np.mean(np.asarray(params)))
+    """, host_sync=True)
+
+
+def test_lint_jax_free():
+    findings = _lint("""
+        import jax
+    """, jax_free=True)
+    assert findings and findings[0].rule == "jax-free-modules"
+    assert not _lint("import os\n", jax_free=True)
+
+
+def test_lint_finding_format():
+    f = ast_rules.LintFinding(rule="host-escape", path="a.py", line=3,
+                              message="m")
+    assert str(f) == "a.py:3: [host-escape] m"
+    assert f.to_json()["rule"] == "host-escape"
+
+
+def test_tables_complete():
+    assert ast_rules.check_tables() == []

@@ -323,7 +323,6 @@ def test_engine_without_mesh_keeps_single_plane_path():
 _SHARDED_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    import re
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.api import ExperimentSpec, build_engine, resolve_compressor
@@ -401,12 +400,14 @@ _SHARDED_SCRIPT = textwrap.dedent("""
     print("bf16-parity-ok")
 
     # --- collective inspection: pack/unpack must add no all-gather --------
+    from repro.analysis.hlo import collective_counts
+
     def ag_count(eng):
         f = jax.jit(lambda k, y, q, m, g, gp: eng.track(k, y, q, m, g, gp,
                                                         0.2),
                     in_shardings=(NamedSharding(mesh, P()),) + (sh,) * 5)
         txt = f.lower(kr, y, q, m, g, gp).compile().as_text()
-        return len(re.findall(r"all-gather", txt))
+        return collective_counts(txt)["all-gather"]
 
     ref, pal = engines("ring")
     # ring gossip + shard-local compression + per-shard planes: the whole

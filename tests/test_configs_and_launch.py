@@ -10,7 +10,7 @@ import pytest
 from repro.configs import ARCHS, get_config, get_smoke
 from repro.core.gossip import gossip_wire_bytes
 from repro.launch import shapes as SH
-from repro.launch.dryrun import _shape_bytes, parse_collectives
+from repro.analysis.hlo import shape_bytes as _shape_bytes, parse_collectives
 
 EXPECTED = {
     # arch: (layers, d_model, heads, kv, d_ff, vocab)
@@ -105,6 +105,11 @@ def test_cache_pspec_rules():
 
 
 def test_hlo_shape_bytes_and_collective_parser():
+    # dryrun re-exports the canonical analysis passes (back-compat surface)
+    from repro.launch import dryrun
+    assert dryrun.parse_collectives is parse_collectives
+    assert dryrun._shape_bytes is _shape_bytes
+
     assert _shape_bytes("bf16[16,2048]{1,0}") == 16 * 2048 * 2
     assert _shape_bytes("(f32[8,4]{1,0}, s32[8]{0})") == 8 * 4 * 4 + 8 * 4
     hlo = """

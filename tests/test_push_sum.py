@@ -416,7 +416,7 @@ SCRIPT = textwrap.dedent("""
 
     # the weight plane adds no collectives: dp-csgp's lowered step has
     # exactly porter-dp's per-category collective counts on the same spec
-    from repro.launch.dryrun import parse_collectives
+    from repro.analysis.hlo import collective_counts
     params0 = {"w": jnp.zeros(dd)}
 
     def loss(p, b):
@@ -437,8 +437,7 @@ SCRIPT = textwrap.dedent("""
         hlo = (jax.jit(algo.step)
                .lower(state, batch, jax.random.PRNGKey(0))
                .compile().as_text())
-        counts[name] = {c: v["count"]
-                        for c, v in parse_collectives(hlo).items()}
+        counts[name] = collective_counts(hlo)
     assert counts["porter-dp"] == counts["dp-csgp"], counts
     assert sum(counts["dp-csgp"].values()) > 0, counts
     print("hlo-ps-ok")

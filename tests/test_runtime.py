@@ -118,14 +118,18 @@ def test_resume_continues_the_key_stream():
 
 
 def test_runner_donates_state():
+    from repro.analysis.hlo import donation_hlo_report
+
     params0, source = _problem()
     algo = build(_spec("porter-gc"), _loss_fn)
     runner = make_runner(algo, source, CHUNK)
 
-    # the compiled program aliases state inputs to outputs
+    # the compiled program aliases every state leaf input to an output
     state_shapes = jax.eval_shape(lambda p: algo.init(p), params0)
     hlo = runner.lower(state_shapes).as_text()
-    assert "tf.aliasing_output" in hlo or "jax.buffer_donor" in hlo
+    report = donation_hlo_report(
+        hlo, len(jax.tree_util.tree_leaves(state_shapes)))
+    assert report.ok, report.violations
 
     # and the call-site argument is actually consumed
     state = algo.init(params0)

@@ -309,7 +309,7 @@ SCRIPT = textwrap.dedent("""
 
     # overlap introduces no extra collectives: the lowered PORTER step has
     # identical per-category collective counts with overlap on and off
-    from repro.launch.dryrun import parse_collectives
+    from repro.analysis.hlo import collective_counts
     d = 2 * WF.PACK_BLOCK
     params0 = {"w": jnp.zeros(d)}
     pspecs = {"w": P("data", None)}
@@ -333,8 +333,7 @@ SCRIPT = textwrap.dedent("""
         hlo = (jax.jit(algo.step)
                .lower(state, batch, jax.random.PRNGKey(0))
                .compile().as_text())
-        counts[ovl] = {c: v["count"]
-                       for c, v in parse_collectives(hlo).items()}
+        counts[ovl] = collective_counts(hlo)
     assert counts[False] == counts[True], counts
     assert sum(counts[True].values()) > 0, counts
     print("hlo-overlap-ok")
