@@ -171,6 +171,28 @@ def census_matrix(quick: bool = False) -> List[Case]:
              _spec_for("porter-gc", gossip_mode="packed",
                        wire="packed_bits", compressor="qsgd",
                        compressor_kwargs={"levels": 16}), True))
+    # mixed-precision planes: with plane_dtype='bf16' the gossip
+    # collectives themselves must ship <= 2 B/elem (dtype flow runs on
+    # these even without a packed-bits codec -- see run_census_case);
+    # the push-sum case additionally proves the f32-exact weight rider
+    # stays a bounded scalar, not a hidden dense upcast.
+    cases.append(
+        Case("porter-gc/ring/f32/bf16planes",
+             _spec_for("porter-gc", gossip_mode="ring",
+                       plane_dtype="bf16"), True))
+    if not quick:
+        cases += [
+            Case("porter-gc/packed/f32/bf16planes",
+                 _spec_for("porter-gc", gossip_mode="packed",
+                           plane_dtype="bf16"), True),
+            Case("porter-gc/ring/packed_bits/bf16planes",
+                 _spec_for("porter-gc", gossip_mode="ring",
+                           wire="packed_bits", plane_dtype="bf16"), True),
+            Case("dp-csgp/ring/f32/bf16planes/directed",
+                 _spec_for("dp-csgp", gossip_mode="ring",
+                           plane_dtype="bf16",
+                           topology_schedule="directed:ring_skips"), True),
+        ]
     return cases
 
 
@@ -228,6 +250,15 @@ def run_census_case(case: Case, mesh: Optional[Mesh]) -> dict:
                      * codec.overhead_bytes(D_CENSUS) + 64)
         flow = H.check_dtype_flow(hlo_text,
                                   f32_allowance_bytes=allowance)
+        rec["dtype_flow"] = flow.to_json()
+        ok = ok and flow.ok
+    elif case.spec.plane_dtype is not None:
+        # bf16 state planes without a packed-bits codec: the plane wire is
+        # the collectives themselves, so the same <=2 B/elem contract
+        # applies directly.  The f32 allowance covers only scalar riders
+        # (push-sum weight words, traced band weights) -- one leaked dense
+        # f32 plane is 4*D_CENSUS = 8 KiB and trips it immediately.
+        flow = H.check_dtype_flow(hlo_text, f32_allowance_bytes=1024)
         rec["dtype_flow"] = flow.to_json()
         ok = ok and flow.ok
     rec["ok"] = ok

@@ -64,7 +64,7 @@ import jax.numpy as jnp
 
 from repro.core import baselines as BL
 from repro.core.beer import beer_config
-from repro.core.comm_round import CommRound
+from repro.core.comm_round import CommRound, resolve_backend
 from repro.core.compression import Compressor, make_compressor
 from repro.core import mixing as MX
 from repro.core import wire_formats
@@ -89,6 +89,7 @@ __all__ = [
     "resolve_compressor",
     "resolve_wire_format",
     "resolve_gamma",
+    "resolve_plane_dtype",
     "Algorithm",
     "AlgorithmInfo",
     "algorithm_info",
@@ -182,6 +183,20 @@ class ExperimentSpec:
     alpha_shift: float = 0.5
     # EF/tracking buffer accumulation dtype
     buffer_dtype: Any = jnp.float32
+    # storage dtype of the EF state planes: None = legacy f32 layout;
+    # 'bf16' puts every parameter-sized EF buffer (q, m, v, g_prev, the
+    # soteriafl shift) in bfloat16 -- resident optimizer state and the
+    # gossip wire both drop to 2 B/element while the master params stay
+    # f32 and the fused kernels keep f32 accumulation with a
+    # stochastic-rounding writeback (kernels/sr_cast.py).  Accepts 'f32' /
+    # 'bf16' strings or jnp dtypes (resolve_plane_dtype).
+    plane_dtype: Any = None
+    # rematerialization of the loss/grad inside algo.step: None = off,
+    # 'full' = jax.checkpoint around the loss (recompute everything in the
+    # backward pass), 'dots' = checkpoint with the dots_saveable policy
+    # (keep matmul outputs, recompute the cheap elementwise rest) -- the
+    # right knob for the models/ transformer+SSM stack on pod meshes.
+    remat_policy: Optional[str] = None
 
     def replace(self, **kw) -> "ExperimentSpec":
         return dataclasses.replace(self, **kw)
@@ -352,6 +367,53 @@ def resolve_compressor(spec: ExperimentSpec) -> Compressor:
     return make_compressor(spec.compressor, **kwargs)
 
 
+_PLANE_DTYPES = {"f32": jnp.float32, "float32": jnp.float32,
+                 "bf16": jnp.bfloat16, "bfloat16": jnp.bfloat16}
+
+
+def resolve_plane_dtype(spec_or_name) -> Optional[Any]:
+    """``spec.plane_dtype`` -> a concrete jnp dtype or None (legacy f32).
+
+    Accepts an :class:`ExperimentSpec`, a name ('f32'/'bf16' and their long
+    spellings), or a dtype-like; validates against the engine's supported
+    planes (f32 exact, bf16 with stochastic-rounding writeback).
+    """
+    val = (spec_or_name.plane_dtype
+           if isinstance(spec_or_name, ExperimentSpec) else spec_or_name)
+    if val is None:
+        return None
+    if isinstance(val, str):
+        if val not in _PLANE_DTYPES:
+            raise ValueError(f"unknown plane_dtype {val!r}; have "
+                             f"{sorted(_PLANE_DTYPES)}")
+        val = _PLANE_DTYPES[val]
+    dt = jnp.dtype(val)
+    if dt not in (jnp.dtype(jnp.float32), jnp.dtype(jnp.bfloat16)):
+        raise ValueError(f"plane_dtype must be f32 or bf16, got {dt}")
+    return dt
+
+
+def _apply_remat(loss_fn, policy: Optional[str]):
+    """Wrap ``loss_fn`` in jax.checkpoint per ``spec.remat_policy``.
+
+    The registered algorithms differentiate the loss inside their step
+    (``jax.value_and_grad`` in ``_agent_gradient``), so checkpointing the
+    loss function itself is exactly "remat around the loss/grad": the
+    backward pass recomputes activations instead of keeping the whole
+    forward resident -- what makes the models/ stack fit next to eight
+    agent-stacked state buffers.
+    """
+    if policy is None:
+        return loss_fn
+    if policy == "full":
+        return jax.checkpoint(loss_fn)
+    if policy == "dots":
+        return jax.checkpoint(
+            loss_fn, policy=jax.checkpoint_policies.dots_saveable)
+    raise ValueError(f"unknown remat_policy {policy!r}; have None, "
+                     "'full', 'dots'")
+
+
 def resolve_wire_format(spec: ExperimentSpec):
     """``spec.wire`` -> a :class:`repro.core.wire_formats.WireFormat` or None.
 
@@ -370,9 +432,7 @@ def resolve_wire_format(spec: ExperimentSpec):
             "wire='packed_bits' needs gossip_mode 'ring' or 'packed' "
             f"(got {spec.gossip_mode!r}); dense gossip ships the dense "
             "emulation by definition")
-    use_pallas = (spec.comm_backend == "pallas"
-                  or (spec.comm_backend == "auto"
-                      and jax.default_backend() == "tpu"))
+    use_pallas = resolve_backend(spec.comm_backend) == "pallas"
     if spec.compressor == "qsgd":
         levels = int(spec.compressor_kwargs.get("levels", 16))
         return wire_formats.make_wire_format(
@@ -447,7 +507,8 @@ def build_engine(spec: ExperimentSpec, *,
     return CommRound(compressor=comp, mixer=mixer, compress_fn=compress_fn,
                      backend=spec.comm_backend, interpret=spec.interpret,
                      mesh=mesh, leaf_specs=leaf_specs,
-                     agent_axes=tuple(agent_axes), overlap=spec.overlap)
+                     agent_axes=tuple(agent_axes), overlap=spec.overlap,
+                     plane_dtype=resolve_plane_dtype(spec))
 
 
 def build(spec: ExperimentSpec, loss_fn, *,
@@ -464,6 +525,7 @@ def build(spec: ExperimentSpec, loss_fn, *,
       topology fields are resolved via make_topology.
     """
     info = algorithm_info(spec.algo)
+    loss_fn = _apply_remat(loss_fn, spec.remat_policy)
     top, sched = None, None
     if info.decentralized:
         top = resolve_topology(spec) if topology is None else topology
@@ -496,7 +558,8 @@ def build(spec: ExperimentSpec, loss_fn, *,
                            backend=spec.comm_backend,
                            interpret=spec.interpret,
                            mesh=mesh, leaf_specs=leaf_specs,
-                           agent_axes=tuple(agent_axes))
+                           agent_axes=tuple(agent_axes),
+                           plane_dtype=resolve_plane_dtype(spec))
     gamma = None
     if info.decentralized:
         gamma = (resolve_gamma(spec, top, comp, sched) if info.compressed
@@ -558,28 +621,35 @@ def _porter_family(spec: ExperimentSpec, loss_fn, r: Resolved, variant: str,
         # beer_config keeps the no-clip point exact instead of feeding
         # tau=inf into the smooth clip factor (inf/(inf+nrm) is NaN)
         variant = "beer"
+    # under bf16 planes the stored gradient g_prev is a bf16 buffer, so the
+    # fresh gradient must be cast to the same dtype -- otherwise the state's
+    # dtype flips between init and step and scan/chunked carries diverge
+    pdt = resolve_plane_dtype(spec)
+    grad_dtype = spec.buffer_dtype if pdt is None else pdt
     if variant == "beer":
         cfg = beer_config(spec.eta, r.gamma, clip_mode=spec.clip_mode,
-                          grad_dtype=spec.buffer_dtype)
+                          grad_dtype=grad_dtype)
     else:
         tau = (_require_tau(spec) if variant == "dp"
                else (float("inf") if spec.tau is None else spec.tau))
         cfg = PorterConfig(eta=spec.eta, gamma=r.gamma, tau=tau,
                            variant=variant, clip_mode=spec.clip_mode,
                            sigma_p=spec.sigma_p,
-                           grad_dtype=spec.buffer_dtype)
+                           grad_dtype=grad_dtype)
     if adam:
         step = functools.partial(porter_adam_step, cfg, loss_fn, None, None,
                                  engine=r.engine, b1=spec.b1, b2=spec.b2,
                                  adam_eps=spec.adam_eps)
-        init = _bind_init(spec, r, porter_adam_init)
+        init = _bind_init(
+            spec, r, functools.partial(porter_adam_init, plane_dtype=pdt))
         return _algorithm(spec, r, state_cls=PorterAdamState, init=init,
                           step=step, config=cfg)
     step = functools.partial(porter_step, cfg, loss_fn, None, None,
                              engine=r.engine)
     init = _bind_init(
         spec, r,
-        functools.partial(porter_init, buffer_dtype=spec.buffer_dtype))
+        functools.partial(porter_init, buffer_dtype=spec.buffer_dtype,
+                          plane_dtype=pdt))
     return _algorithm(spec, r, state_cls=PorterState, init=init, step=step,
                       config=cfg)
 
@@ -618,7 +688,10 @@ def _build_choco(spec, loss_fn, r):
     step = functools.partial(BL.choco_step, spec.eta, r.gamma, loss_fn,
                              None, None, engine=r.engine, tau=spec.tau,
                              clip_mode=spec.clip_mode)
-    init = _bind_init(spec, r, lambda params, n, w: BL.choco_init(params, n))
+    pdt = resolve_plane_dtype(spec)
+    init = _bind_init(
+        spec, r,
+        lambda params, n, w: BL.choco_init(params, n, plane_dtype=pdt))
     return _algorithm(spec, r, state_cls=BL.ChocoState, init=init, step=step)
 
 
@@ -655,9 +728,10 @@ def _build_dpsgd(spec, loss_fn, r):
 @register_algorithm("dp-csgp", dp=True, comm_rounds=2)
 def _build_dp_csgp(spec, loss_fn, r):
     tau = _require_tau(spec)
+    pdt = resolve_plane_dtype(spec)
     cfg = PorterConfig(eta=spec.eta, gamma=r.gamma, tau=tau, variant="dp",
                        clip_mode=spec.clip_mode, sigma_p=spec.sigma_p,
-                       grad_dtype=spec.buffer_dtype)
+                       grad_dtype=spec.buffer_dtype if pdt is None else pdt)
     step = functools.partial(dp_csgp_step, cfg, loss_fn, None, None,
                              engine=r.engine)
     # the push-sum mirrors need the actual round-0 matrix (m = W q with a
@@ -666,7 +740,7 @@ def _build_dp_csgp(spec, loss_fn, r):
     init = _bind_init(
         spec, r,
         functools.partial(dp_csgp_init, w0=w0,
-                          buffer_dtype=spec.buffer_dtype))
+                          buffer_dtype=spec.buffer_dtype, plane_dtype=pdt))
     return _algorithm(spec, r, state_cls=DpCsgpState, init=init, step=step,
                       config=cfg)
 
@@ -677,7 +751,9 @@ def _build_soteriafl(spec, loss_fn, r):
     step = functools.partial(BL.soteria_step, spec.eta, spec.alpha_shift,
                              loss_fn, None, engine=r.engine, tau=tau,
                              clip_mode=spec.clip_mode, sigma_p=spec.sigma_p)
-    init = _bind_init(spec, r,
-                      lambda params, n, w: BL.soteria_init(params, n))
+    pdt = resolve_plane_dtype(spec)
+    init = _bind_init(
+        spec, r,
+        lambda params, n, w: BL.soteria_init(params, n, plane_dtype=pdt))
     return _algorithm(spec, r, state_cls=BL.SoteriaState, init=init,
                       step=step)

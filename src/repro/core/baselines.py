@@ -131,9 +131,12 @@ class ChocoState(NamedTuple):
     step: jax.Array
 
 
-def choco_init(params, n_agents: int) -> ChocoState:
+def choco_init(params, n_agents: int, plane_dtype=None) -> ChocoState:
+    """``plane_dtype``: storage dtype of the surrogate/mirror buffers
+    (bf16 halves them); the params ``x`` keep their own dtype."""
     x = _stack(params, n_agents)
-    zeros = _tree(lambda l: jnp.zeros_like(l, dtype=jnp.float32), x)
+    dt = jnp.float32 if plane_dtype is None else jnp.dtype(plane_dtype)
+    zeros = _tree(lambda l: jnp.zeros_like(l, dtype=dt), x)
     return ChocoState(x=x, q=zeros, m=zeros, step=jnp.zeros((), jnp.int32))
 
 
@@ -206,9 +209,13 @@ class SoteriaState(NamedTuple):
     step: jax.Array
 
 
-def soteria_init(params, n_agents: int) -> SoteriaState:
+def soteria_init(params, n_agents: int, plane_dtype=None) -> SoteriaState:
+    """``plane_dtype``: storage dtype of the agent-stacked client shifts
+    ``h`` (the memory-dominant buffer; bf16 halves it).  The server-side
+    ``h_bar`` is a single replica and stays f32 exact."""
+    dt = jnp.float32 if plane_dtype is None else jnp.dtype(plane_dtype)
     zeros_stacked = _tree(
-        lambda p: jnp.zeros((n_agents,) + p.shape, jnp.float32), params)
+        lambda p: jnp.zeros((n_agents,) + p.shape, dt), params)
     zeros = _tree(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
     # copy x: the state must own its buffers (donation-safe, see dpsgd_init)
     return SoteriaState(x=_tree(jnp.array, params), h=zeros_stacked,

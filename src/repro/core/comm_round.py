@@ -19,12 +19,25 @@ per round instead of ~13 separate HBM-bound tree_map passes.
 
 Backends:
 
-* ``'pallas'`` -- flatten to (tiles, 8*1024) f32 planes, run ef_track /
+* ``'pallas'`` -- flatten to (tiles, 8*1024) planes, run ef_track /
   ef_step / ef_gossip (Mosaic on TPU; pass ``interpret=True`` for CPU CI).
 * ``'ref'``    -- pure-jnp tree_map chain, bit-identical to the pre-engine
   per-algorithm bodies; the numerical oracle.
-* ``'auto'``   -- 'pallas' on TPU, 'ref' elsewhere (the default: CPU tests
-  keep XLA-fused jnp speed, TPU gets the kernels).
+* ``'auto'``   -- 'pallas' on TPU, 'ref' elsewhere (the default, resolved
+  by :func:`resolve_backend`: BENCH_comm.json measures pallas-interpret
+  ~3x slower than ref on CPU, so off-TPU auto must mean ref).
+
+Mixed precision (``plane_dtype='bf16'`` through the facade): the EF state
+buffers (q, m, v, g_prev) live in bf16, so packed planes and the gossip
+wire both carry 2 B/element while the master params ``x`` stay f32 exact
+(the plane dtype is derived *per buffer tree* -- see
+:func:`repro.kernels.flatten.derived_plane_dtype`).  Every fused kernel
+still accumulates in f32 inside the block; the writeback to a bf16 buffer
+goes through the stochastic-rounding cast (:mod:`repro.kernels.sr_cast`)
+so the EF drift stays unbiased, with the SR key split off the round key
+(:meth:`CommRound.sr_split`) -- f32 engines never split, so their RNG
+streams are bit-identical to the pre-mixed-precision code.  The push-sum
+weight plane stays f32-exact on every path.
 
 Sharding: for pure data/agent-sharded states (every buffer
 P(agents, None, ...)) the flat plane is sharded along its row axis and the
@@ -78,9 +91,36 @@ from . import wire_formats as WF
 from .compression import Compressor
 from .gossip import PACK_BLOCK, MixFn, apply_mixer, gossip_wire_bytes
 
-__all__ = ["CommRound", "compress_stacked", "resolve_engine"]
+__all__ = ["CommRound", "compress_stacked", "resolve_backend",
+           "resolve_engine"]
 
 CompressFn = Callable[[jax.Array, Any], Any]  # (key, tree) -> tree
+
+
+def resolve_backend(backend: str) -> str:
+    """Resolve 'auto' to a concrete comm-round backend for this process.
+
+    'auto' means the fused pallas kernels *on TPU only*: off-TPU the
+    kernels run in interpret mode, which BENCH_comm.json measures at ~3x
+    the ref backend's wall time on every compressor (e.g. top_k 17483 vs
+    5672 us/round on CPU), so auto resolves to 'ref' everywhere except a
+    real TPU backend.  This is the single resolution point -- the engine
+    and the facade's wire-format builder both call it, so they can never
+    disagree.
+    """
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend not in ("pallas", "ref"):
+        raise ValueError(f"unknown comm-round backend {backend!r}")
+    return backend
+
+
+def _sr_dtype(tree) -> bool:
+    """True when ``tree``'s buffers take the stochastic-rounding writeback
+    (bf16 -- the only sub-f32 plane dtype the engine supports)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    dt = jnp.result_type(*[l.dtype for l in leaves])
+    return jnp.dtype(dt) == jnp.dtype(jnp.bfloat16)
 
 
 def compress_stacked(comp: Compressor, key: jax.Array, tree):
@@ -167,6 +207,12 @@ class CommRound:
         value is identical to the sequential order, so the flag is bit-exact
         by construction (tests pin this for all registered algorithms);
         single-round algorithms ignore it.
+      plane_dtype: declared storage dtype of the EF state planes (None =
+        legacy f32).  The *actual* plane dtype is always derived from the
+        buffers themselves (so f32 master params keep f32 planes next to
+        bf16 EF buffers); this field drives the scalar-``d`` wire-byte
+        accounting and documents the engine's precision contract.  Must be
+        f32 or bf16: the SR writeback targets bf16 only.
 
     Wire formats: when the mixer was built with a
     :class:`repro.core.wire_formats.WireFormat` codec (``spec.wire =
@@ -190,17 +236,22 @@ class CommRound:
     leaf_specs: Any = None
     agent_axes: Sequence[str] = ("data",)
     overlap: bool = False
+    plane_dtype: Any = None
 
     def __post_init__(self):
         if self.backend not in ("pallas", "ref", "auto"):
             raise ValueError(f"unknown comm-round backend {self.backend!r}")
+        if self.plane_dtype is not None:
+            pdt = jnp.dtype(self.plane_dtype)
+            if pdt not in (jnp.dtype(jnp.float32), jnp.dtype(jnp.bfloat16)):
+                raise ValueError(
+                    f"plane_dtype must be f32 or bf16, got {pdt} -- the "
+                    "stochastic-rounding writeback targets bf16 only")
 
     # -- backend plumbing ---------------------------------------------------
 
     def _use_pallas(self) -> bool:
-        if self.backend == "auto":
-            return jax.default_backend() == "tpu"
-        return self.backend == "pallas"
+        return resolve_backend(self.backend) == "pallas"
 
     def _kernel_kw(self):
         return {} if self.interpret is None else {"interpret": self.interpret}
@@ -212,6 +263,72 @@ class CommRound:
                                                 self.agent_axes)):
             return None
         return FL.sharded_spec(self.mesh, self.leaf_specs)
+
+    # -- stochastic-rounding plumbing ---------------------------------------
+
+    def sr_split(self, key, trees) -> Tuple[jax.Array, Optional[jax.Array]]:
+        """Split an SR key off ``key`` when any of ``trees`` is bf16.
+
+        Returns ``(compress_key, sr_key)``; for all-f32 buffers the key is
+        returned untouched with ``sr_key=None``, so f32 engines keep their
+        historical RNG streams bit-identical.  Overlap-mode algorithm steps
+        call this before :meth:`exchange` with the same buffer tuple the
+        sequential path passes internally, which keeps overlap==sequential
+        bit-exact under mixed precision too.
+        """
+        if not any(_sr_dtype(t) for t in trees):
+            return key, None
+        k_c, k_sr = jax.random.split(key)
+        return k_c, k_sr
+
+    def _plane_update(self, kfn, trees, sr_key):
+        """Fused 3-output kernel over planes, with SR writeback when asked.
+
+        ``kfn(*planes, out_dtype=...)`` must return three planes whose
+        destinations are ``trees[:3]`` in order.  With an ``sr_key`` and
+        any bf16 destination, the kernel is asked for f32 outputs and each
+        bf16-bound plane is stochastically rounded before unpacking; f32
+        destinations pass through exact.  Under per-shard planes the SR key
+        is folded with every mesh axis index so no two shards reuse bits.
+        """
+        sharded = self._sharded_planes()
+        needs = [_sr_dtype(t) for t in trees[:3]]
+        if sr_key is None or not any(needs):
+            return FL.plane_apply(lambda *p: kfn(*p), trees, 3, sharded)
+        kw = self._kernel_kw()
+        axis_names = (tuple(sharded.mesh.axis_names)
+                      if sharded is not None else ())
+
+        def kernel(*planes):
+            outs = kfn(*planes, out_dtype=jnp.float32)
+            key = sr_key
+            for ax in axis_names:
+                key = jax.random.fold_in(key, jax.lax.axis_index(ax))
+            keys = jax.random.split(key, 3)
+            return tuple(ops.sr_cast(o, keys[i], **kw) if needs[i] else o
+                         for i, o in enumerate(outs))
+
+        return FL.plane_apply(kernel, trees, 3, sharded)
+
+    @staticmethod
+    def _sr_writeback(tree_f32, like, key):
+        """Cast an f32 result tree back to ``like``'s buffer dtypes (ref
+        backend): stochastic rounding into bf16 leaves, plain astype into
+        everything else."""
+        leaves, treedef = jax.tree_util.tree_flatten(like)
+        vals = jax.tree_util.tree_leaves(tree_f32)
+        keys = jax.random.split(key, len(vals))
+        out = []
+        for val, l, kk in zip(vals, leaves, keys):
+            if jnp.dtype(l.dtype) == jnp.dtype(jnp.bfloat16):
+                out.append(ops.sr_cast_leaf(val, kk))
+            else:
+                out.append(val.astype(l.dtype))
+        return treedef.unflatten(out)
+
+    @staticmethod
+    def _f32(tree):
+        return _tree(lambda l: l.astype(jnp.float32), tree)
 
     # -- the shared front half: compress + mix ------------------------------
 
@@ -234,8 +351,16 @@ class CommRound:
         With a codec mixer (bit-packed wire format) the compression step is
         fused into the executor: pack once, apply the round-tripped
         increment locally, ship only the packed buffers.
+
+        The increment is computed in the *surrogate's* dtype: with a bf16
+        ``q`` beside the f32 master ``y = x``, a plain subtract would
+        promote to f32 and put a 4 B/element buffer on the wire.  The
+        narrowing is a deterministic cast (its error is measured afresh by
+        the next round's ``y - q``, so EF self-corrects); stochastic
+        rounding is reserved for the *accumulating* q/m/v writebacks where
+        bias compounds.
         """
-        delta = _tree(jnp.subtract, y, q)
+        delta = _tree(lambda a, b: (a - b).astype(b.dtype), y, q)
         if getattr(self.mixer, "wire_codec", None) is not None:
             return self.mixer.exchange(key, delta, t)
         c = self.compress(key, delta)
@@ -254,7 +379,7 @@ class CommRound:
         bitcast bytes on the codec buffers), so the collective count is
         identical to :meth:`exchange` -- the HLO tests pin this.
         """
-        delta = _tree(jnp.subtract, y, q)
+        delta = _tree(lambda a, b: (a - b).astype(b.dtype), y, q)
         dw = jnp.subtract(yw, qw)
         if getattr(self.mixer, "wire_codec", None) is not None:
             return self.mixer.exchange_ps(key, delta, dw, t)
@@ -280,21 +405,37 @@ class CommRound:
         Returns (v', q', m').  ``t``: absolute round index for time-varying
         mixers (see :meth:`exchange`).
         """
+        key, sr_key = self.sr_split(key, (q, m, v))
         c, wc = self.exchange(key, v, q, t)
-        return self.track_update(c, wc, v, q, m, g, g_prev, gamma)
+        return self.track_update(c, wc, v, q, m, g, g_prev, gamma,
+                                 sr_key=sr_key)
 
-    def track_update(self, c, wc, v, q, m, g, g_prev, gamma: float):
+    def track_update(self, c, wc, v, q, m, g, g_prev, gamma: float,
+                     sr_key=None):
         """The fused second half of :meth:`track` (no communication).
 
         Exposed separately so overlap mode can issue several exchanges
         before running any update (see the ``overlap`` attribute).
+        ``sr_key``: stochastic-rounding key for bf16 buffers (from
+        :meth:`sr_split`); None falls back to deterministic casts.
         """
+        kw = self._kernel_kw()
         if self._use_pallas():
-            kw = self._kernel_kw()
-            qo, mo, vo = FL.plane_apply(
-                lambda *p: ops.ef_track(*p, gamma, **kw),
-                (q, m, v, c, wc, g, g_prev), 3, self._sharded_planes())
+            qo, mo, vo = self._plane_update(
+                lambda *p, out_dtype=None: ops.ef_track(
+                    *p, gamma, out_dtype=out_dtype, **kw),
+                (q, m, v, c, wc, g, g_prev), sr_key)
             return vo, qo, mo
+        if sr_key is not None and any(_sr_dtype(t) for t in (q, m, v)):
+            q2f = _tree(jnp.add, self._f32(q), self._f32(c))
+            m2f = _tree(jnp.add, self._f32(m), self._f32(wc))
+            v2f = _tree(lambda v0, mm, qq, gn, gp: v0 + gamma * (mm - qq)
+                        + gn - gp, self._f32(v), m2f, q2f, self._f32(g),
+                        self._f32(g_prev))
+            kq, km, kv = jax.random.split(sr_key, 3)
+            return (self._sr_writeback(v2f, v, kv),
+                    self._sr_writeback(q2f, q, kq),
+                    self._sr_writeback(m2f, m, km))
         q2 = _tree(jnp.add, q, c)
         m2 = _tree(jnp.add, m, wc)
         v2 = _tree(lambda v0, mm, qq, gn, gp: v0 + gamma * (mm - qq)
@@ -309,17 +450,35 @@ class CommRound:
         passes the tracked gradient, PORTER-Adam its preconditioned form).
         ``t``: absolute round index for time-varying mixers.
         """
+        key, sr_key = self.sr_split(key, (q, m, x))
         c, wc = self.exchange(key, x, q, t)
-        return self.step_update(c, wc, x, q, m, v, gamma, eta)
+        return self.step_update(c, wc, x, q, m, v, gamma, eta, sr_key=sr_key)
 
-    def step_update(self, c, wc, x, q, m, v, gamma: float, eta: float):
-        """The fused second half of :meth:`step` (no communication)."""
+    def step_update(self, c, wc, x, q, m, v, gamma: float, eta: float,
+                    sr_key=None):
+        """The fused second half of :meth:`step` (no communication).
+
+        ``sr_key``: stochastic-rounding key for bf16 buffers (the master
+        params ``x`` normally stay f32 and take an exact writeback; only
+        the q/m surrogates round stochastically).
+        """
+        kw = self._kernel_kw()
         if self._use_pallas():
-            kw = self._kernel_kw()
-            qo, mo, xo = FL.plane_apply(
-                lambda *p: ops.ef_step(*p, gamma, eta, **kw),
-                (q, m, x, c, wc, v), 3, self._sharded_planes())
+            qo, mo, xo = self._plane_update(
+                lambda *p, out_dtype=None: ops.ef_step(
+                    *p, gamma, eta, out_dtype=out_dtype, **kw),
+                (q, m, x, c, wc, v), sr_key)
             return xo, qo, mo
+        if sr_key is not None and any(_sr_dtype(t) for t in (q, m, x)):
+            q2f = _tree(jnp.add, self._f32(q), self._f32(c))
+            m2f = _tree(jnp.add, self._f32(m), self._f32(wc))
+            x2f = _tree(lambda x0, mm, qq, vv:
+                        x0 + gamma * (mm - qq) - eta * vv,
+                        self._f32(x), m2f, q2f, self._f32(v))
+            kq, km, kx = jax.random.split(sr_key, 3)
+            return (self._sr_writeback(x2f, x, kx),
+                    self._sr_writeback(q2f, q, kq),
+                    self._sr_writeback(m2f, m, km))
         q2 = _tree(jnp.add, q, c)
         m2 = _tree(jnp.add, m, wc)
         x2 = _tree(lambda x0, mm, qq, vv:
@@ -339,18 +498,22 @@ class CommRound:
         converge to ``n * pi`` (the Perron vector).  Read points de-bias by
         ``x / xw``.  Returns (x', q', m', xw', qw', mw').
         """
+        key, sr_key = self.sr_split(key, (q, m, x))
         c, wc, cw, wcw = self.exchange_ps(key, x, q, xw, qw, t)
         return self.step_ps_update(c, wc, cw, wcw, x, q, m, v, xw, qw, mw,
-                                   gamma, eta)
+                                   gamma, eta, sr_key=sr_key)
 
     def step_ps_update(self, c, wc, cw, wcw, x, q, m, v, xw, qw, mw,
-                       gamma: float, eta: float):
+                       gamma: float, eta: float, sr_key=None):
         """The fused second half of :meth:`step_ps` (no communication).
 
         The weight-plane update is three (n,)-vector AXPYs -- negligible
-        next to the param planes, so it stays plain jnp on every backend.
+        next to the param planes, so it stays plain jnp on every backend,
+        and it is *always* f32-exact: compressing or rounding the push-sum
+        weight would break the column-mass invariant ``1^T xw = n``.
         """
-        x2, q2, m2 = self.step_update(c, wc, x, q, m, v, gamma, eta)
+        x2, q2, m2 = self.step_update(c, wc, x, q, m, v, gamma, eta,
+                                      sr_key=sr_key)
         qw2 = qw + cw
         mw2 = mw + wcw
         xw2 = (xw + gamma * (mw2 - qw2)).astype(xw.dtype)
@@ -365,13 +528,26 @@ class CommRound:
         CHOCO, alpha for shifted compression); ``t`` the absolute round
         index for time-varying mixers.
         """
+        key, sr_key = self.sr_split(key, (q, m, y))
         c, wc = self.exchange(key, y, q, t)
+        kw = self._kernel_kw()
         if self._use_pallas():
-            kw = self._kernel_kw()
-            qo, mo, yo = FL.plane_apply(
-                lambda *p: ops.ef_gossip(*p, gamma, scale, **kw),
-                (q, m, y, c, wc), 3, self._sharded_planes())
+            qo, mo, yo = self._plane_update(
+                lambda *p, out_dtype=None: ops.ef_gossip(
+                    *p, gamma, scale, out_dtype=out_dtype, **kw),
+                (q, m, y, c, wc), sr_key)
             return yo, qo, mo
+        if sr_key is not None and any(_sr_dtype(t) for t in (q, m, y)):
+            q2f = _tree(lambda a, b: a + scale * b, self._f32(q),
+                        self._f32(c))
+            m2f = _tree(lambda a, b: a + scale * b, self._f32(m),
+                        self._f32(wc))
+            y2f = _tree(lambda y0, mm, qq: y0 + gamma * (mm - qq),
+                        self._f32(y), m2f, q2f)
+            kq, km, ky = jax.random.split(sr_key, 3)
+            return (self._sr_writeback(y2f, y, ky),
+                    self._sr_writeback(q2f, q, kq),
+                    self._sr_writeback(m2f, m, km))
         q2 = _tree(lambda a, b: a + scale * b, q, c)
         m2 = _tree(lambda a, b: a + scale * b, m, wc)
         y2 = _tree(lambda y0, mm, qq: y0 + gamma * (mm - qq), y, m2, q2)
@@ -383,8 +559,9 @@ class CommRound:
         c = C(y - q); q' = q + scale*c.  Returns (c, q') -- the caller owns
         the server-side aggregation of ``c`` (a mean, not a gossip mix).
         """
-        c = self.compress(key, _tree(jnp.subtract, y, q))
-        return c, _tree(lambda a, b: a + scale * b, q, c)
+        c = self.compress(key, _tree(lambda a, b: (a - b).astype(b.dtype),
+                                     y, q))
+        return c, _tree(lambda a, b: (a + scale * b).astype(a.dtype), q, c)
 
     # -- wire accounting ----------------------------------------------------
 
@@ -476,6 +653,15 @@ class CommRound:
         :meth:`_ps_weight_bytes`) are added on top, in both the measured and
         the model path, so ``--achieved-bytes`` parity covers the directed
         codec path too.
+
+        Mixed precision: the dense-neighbor 'ring' payload and the value
+        half of 'packed' pairs ship in the engine's ``plane_dtype`` (2
+        B/element for bf16 -- what a pytree of bf16 buffers actually puts
+        through ``ppermute``/all-gather); indices stay int32 and the
+        push-sum weight stays 4-byte f32.  The 'dense' emulation path
+        charges ``Compressor.wire_bits`` unchanged -- that model describes
+        the compressor's own (f32 value, index) deployment payload, not
+        buffers this process ships, so it does not narrow with the planes.
         """
         codec = getattr(self.mixer, "wire_codec", None)
         if codec is not None:
@@ -489,6 +675,8 @@ class CommRound:
             d = sum(int(l.size) // n_agents for l in leaves)
         else:
             d = int(tree_or_d)
+        db = (float(jnp.dtype(self.plane_dtype).itemsize)
+              if self.plane_dtype is not None else 4.0)
         extra = (self._ps_weight_bytes(n_agents, measured=True)
                  if push_sum else 0.0)
         mode = getattr(self.mixer, "wire_mode", "dense")
@@ -498,8 +686,10 @@ class CommRound:
             if mode == "packed" and tree is not None:
                 k_b = max(int(round(frac * PACK_BLOCK)), 1)
                 windows = self._packed_windows(tree, n_agents)
-                return float(n_agents) * windows * k_b * 8.0 + extra
-            return gossip_wire_bytes(mode, n_agents, d, frac=frac) + extra
+                return (float(n_agents) * windows * k_b * (db + 4.0)
+                        + extra)
+            return gossip_wire_bytes(mode, n_agents, d, frac=frac,
+                                     dtype_bytes=db) + extra
         return n_agents * self.compressor.wire_bits(d) / 8.0 + extra
 
     def wire_bytes_model(self, tree_or_d, n_agents: Optional[int] = None,

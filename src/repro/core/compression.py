@@ -38,6 +38,17 @@ rho' >= rho * (1 - 2^-8)^2 ~ rho * 0.992 -- still a valid (slightly
 smaller) Definition-3 constant; gamma derived from the registry's rho is
 conservative by < 1%.  ``qsgd_bits`` code words are exact (the per-window
 f32 scale carries all rounding), so its rho is unchanged.
+
+The same bound covers RESIDENT bf16 planes (``ExperimentSpec(
+plane_dtype="bf16")``, SPerf-9): the EF buffers q/m live in bf16, so the
+engine's effective operator is again bf16-rounded, C'(x) = bf16(C(x)) --
+except the writeback is a *stochastic* rounding (kernels/sr_cast.py), so
+on top of the worst-case rho' >= rho * (1 - 2^-8)^2 per-step bound the
+rounding error is mean-zero and does not accumulate directionally in the
+EF recursion (a round-to-nearest writeback would re-round the same drift
+the same way every step and break the contraction *in expectation*; SR
+preserves it).  gamma derived from the registry's rho therefore stays
+conservative for bf16 planes too.
 """
 
 from __future__ import annotations

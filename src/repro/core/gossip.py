@@ -283,38 +283,61 @@ def make_ring_mixer(w, mesh: Mesh,
     def shift(x, direction: int, axis: str):
         size = mesh.shape[axis]
         perm = [(i, (i + direction) % size) for i in range(size)]
+        if x.dtype == jnp.bfloat16:
+            # ship the u16 bit pattern, like the codec executors: XLA's
+            # float normalization (CPU has no native bf16) widens bf16
+            # compute *and its collectives* to f32, silently doubling the
+            # wire; integer collectives are never normalized, so the
+            # bitcast pins bf16 planes at 2 B/elem
+            raw = jax.lax.ppermute(
+                jax.lax.bitcast_convert_type(x, jnp.uint16), axis, perm)
+            return jax.lax.bitcast_convert_type(raw, jnp.bfloat16)
         return jax.lax.ppermute(x, axis, perm)
 
-    def local(x, b_self, b_prev, b_next):  # x: (1, ...) local agent block
-        # zero-weight bands send nothing (n=2 ring folds everything into
-        # w_prev; its second ppermute would be a dead wire transfer);
-        # use_prev/use_next are static over the whole schedule window
+    def banded_copies(x):
+        """Shifted copies of ``x`` paired with their band slot (0=self,
+        1=prev, 2=next), in the accumulation order ``local`` uses.
+
+        Zero-weight bands send nothing (n=2 ring folds everything into
+        w_prev; its second ppermute would be a dead wire transfer);
+        use_prev/use_next are static over the whole schedule window.  The
+        shifts move x in its own dtype (bf16 planes ship 2 B/elem).
+        """
         if len(axes) == 1:
             ax = axes[0]
-            out = b_self * x
+            cps = [(0, x)]
             if use_prev:
-                out = out + b_prev * shift(x, +1, ax)  # agent i-1 arrives at i
+                cps.append((1, shift(x, +1, ax)))  # agent i-1 arrives at i
             if use_next:
-                out = out + b_next * shift(x, -1, ax)
-            return out
-
+                cps.append((2, shift(x, -1, ax)))
+            return cps
         pod_ax, data_ax = axes
         dsize = mesh.shape[data_ax]
         didx = jax.lax.axis_index(data_ax)
-        out = b_self * x
+        cps = [(0, x)]
         # intra-pod shifted copies (wrap inside the pod is wrong at the seam);
         # seam fix: data==0 must receive pod-1's last agent; data==dsize-1
         # must receive pod+1's first agent.
         if use_prev:
             prev_intra = shift(x, +1, data_ax)
             prev_cross = shift(prev_intra, +1, pod_ax)
-            out = out + b_prev * jnp.where(didx == 0, prev_cross, prev_intra)
+            cps.append((1, jnp.where(didx == 0, prev_cross, prev_intra)))
         if use_next:
             next_intra = shift(x, -1, data_ax)
             next_cross = shift(next_intra, -1, pod_ax)
-            out = out + b_next * jnp.where(didx == dsize - 1, next_cross,
-                                           next_intra)
-        return out
+            cps.append((2, jnp.where(didx == dsize - 1, next_cross,
+                                     next_intra)))
+        return cps
+
+    def local(x, b_self, b_prev, b_next):  # x: (1, ...) local agent block
+        # the band weights are traced f32 scalars under a schedule, so the
+        # weighted sum promotes -- cast back so W @ x keeps x's dtype
+        bands = (b_self, b_prev, b_next)
+        out = None
+        for i, cp in banded_copies(x):
+            term = bands[i] * cp
+            out = term if out is None else out + term
+        return out.astype(x.dtype)
 
     def mix(tree, t=None):
         if leaf_specs is not None:
@@ -366,13 +389,31 @@ def make_ring_mixer(w, mesh: Mesh,
             b = jnp.asarray([w_self, w_prev, w_next], jnp.float32)
 
         def run(lvs, wv, bb):
+            # The exact f32 weight word rides as bitcast lanes of the
+            # payload dtype (1 lane beside f32 planes, 2 beside bf16), so
+            # one ppermute per band still carries payload + weight and a
+            # bf16 plane keeps its 2 B/elem wire.  Mixing happens on the
+            # *split* halves -- payload accumulated in f32 and cast back,
+            # weight bitcast back to f32 and mixed exactly -- which is
+            # elementwise identical to concatenating in f32 throughout
+            # (bit-exact for legacy f32 planes).
             l0 = lvs[0]
-            flat0 = l0.reshape(1, -1).astype(jnp.float32)
-            aug = jnp.concatenate(
-                [flat0, wv.astype(jnp.float32).reshape(1, 1)], axis=1)
-            aug_m = local(aug, bb[0], bb[1], bb[2])
-            out0 = aug_m[:, :-1].reshape(l0.shape).astype(l0.dtype)
-            w_m = aug_m[:, -1].reshape(wv.shape).astype(wv.dtype)
+            flat0 = l0.reshape(1, -1)
+            d0 = flat0.shape[1]
+            nl = 4 // jnp.dtype(l0.dtype).itemsize
+            wword = jax.lax.bitcast_convert_type(
+                wv.astype(jnp.float32).reshape(1, 1),
+                l0.dtype).reshape(1, nl)
+            aug = jnp.concatenate([flat0, wword], axis=1)
+            out0 = w_m = None
+            for i, cp in banded_copies(aug):
+                pay = bb[i] * cp[:, :d0].astype(jnp.float32)
+                wgt = bb[i] * jax.lax.bitcast_convert_type(
+                    cp[:, d0:], jnp.float32).reshape(())
+                out0 = pay if out0 is None else out0 + pay
+                w_m = wgt if w_m is None else w_m + wgt
+            out0 = out0.reshape(l0.shape).astype(l0.dtype)
+            w_m = w_m.reshape(wv.shape).astype(wv.dtype)
             rest = [local(l, bb[0], bb[1], bb[2]) for l in lvs[1:]]
             return [out0] + rest, w_m
 
@@ -440,20 +481,36 @@ def make_packed_mixer(w, mesh: Mesh, frac: float,
         vals_abs, idx = jax.lax.top_k(jnp.abs(rows), k_b)   # (nb, k_b)
         del vals_abs
         vals = jnp.take_along_axis(rows, idx, axis=1)
-        # gather every agent's packed increment: (n, nb, k_b) each
-        all_vals = jax.lax.all_gather(vals, gather_axis).reshape(n, nb, k_b)
+        # gather every agent's packed increment: (n, nb, k_b) each.  bf16
+        # values gather as their u16 bit pattern, like the codec
+        # executors: XLA's float normalization (no native bf16 on CPU)
+        # widens bf16 collectives to f32, silently doubling the wire;
+        # integer collectives are never normalized.
+        if vals.dtype == jnp.bfloat16:
+            all_vals = jax.lax.bitcast_convert_type(
+                jax.lax.all_gather(
+                    jax.lax.bitcast_convert_type(vals, jnp.uint16),
+                    gather_axis),
+                jnp.bfloat16).reshape(n, nb, k_b)
+        else:
+            all_vals = jax.lax.all_gather(vals, gather_axis
+                                          ).reshape(n, nb, k_b)
         all_idx = jax.lax.all_gather(idx.astype(jnp.int32),
                                      gather_axis).reshape(n, nb, k_b)
-        # weighted per-row scatter-add: sum_j w_ij * unpack(incr_j)
-        weighted = all_vals * w_col[:, None, None]          # (n, nb, k_b)
-        out = jnp.zeros((nb, block), flat.dtype)
+        # weighted per-row scatter-add: sum_j w_ij * unpack(incr_j).
+        # The gathered values cross the wire in x's dtype (2 B/elem for
+        # bf16 planes); the receive-side accumulation runs in f32 and casts
+        # back, so mixing never widens the resident buffer.
+        weighted = (all_vals.astype(jnp.float32)
+                    * w_col.astype(jnp.float32)[:, None, None])  # (n, nb, k_b)
+        out = jnp.zeros((nb, block), jnp.float32)
         row_ids = jnp.arange(nb)[:, None]
 
         def add_agent(o, j):
             return o.at[row_ids, all_idx[j]].add(weighted[j]), None
 
         out, _ = jax.lax.scan(add_agent, out, jnp.arange(n))
-        return out.reshape(-1)[:d].reshape(x.shape)
+        return out.reshape(-1)[:d].reshape(x.shape).astype(x.dtype)
 
     w_j = jnp.asarray(w_np)  # (n, n) or (period, n, n)
 

@@ -102,17 +102,30 @@ def _zeros_like_f(tree, dtype):
 
 
 def porter_init(params: Any, n_agents: int, w: Optional[np.ndarray] = None,
-                buffer_dtype: Any = jnp.float32) -> PorterState:
-    """Initialize from a single replica; X^0 = x0 1^T (paper line 2)."""
+                buffer_dtype: Any = jnp.float32,
+                plane_dtype: Any = None) -> PorterState:
+    """Initialize from a single replica; X^0 = x0 1^T (paper line 2).
+
+    ``plane_dtype``: storage dtype for the six EF buffers (q_x, q_v, m_x,
+    m_v, v, g_prev) -- ``'bf16'``/``jnp.bfloat16`` halves the resident
+    optimizer state while the master params ``x`` keep their own dtype
+    (typically f32) for an exact parameter trajectory.  None keeps the
+    legacy layout: surrogates in x's dtype, zeros in ``buffer_dtype``.
+    """
     x = jax.tree_util.tree_map(
         lambda p: jnp.broadcast_to(p, (n_agents,) + p.shape), params)
-    zeros = _zeros_like_f(x, buffer_dtype)
+    pdt = None if plane_dtype is None else jnp.dtype(plane_dtype)
+    zeros = _zeros_like_f(x, buffer_dtype if pdt is None else pdt)
     if w is None:
         m_x = x  # all agents equal and rows of W sum to 1 => W X0 = X0
     else:
         mixer = make_dense_mixer(w)
         m_x = mixer(x)
-    return PorterState(x=x, v=zeros, q_x=x, q_v=zeros, g_prev=zeros,
+    q_x = x
+    if pdt is not None:
+        q_x = jax.tree_util.tree_map(lambda l: l.astype(pdt), x)
+        m_x = jax.tree_util.tree_map(lambda l: l.astype(pdt), m_x)
+    return PorterState(x=x, v=zeros, q_x=q_x, q_v=zeros, g_prev=zeros,
                        m_x=m_x, m_v=zeros, step=jnp.zeros((), jnp.int32))
 
 
@@ -186,12 +199,18 @@ def porter_step(
         # pairs are issued before either fused update -- the collectives
         # run while the other round's local compute proceeds, and every
         # value equals the sequential order's (bit-exact by construction)
+        # SR keys split exactly as the sequential track/step would, so
+        # overlap stays bit-exact under mixed precision too
+        k_cv, sr_v = eng.sr_split(k_cv, (state.q_v, state.m_v, state.v))
+        k_cx, sr_x = eng.sr_split(k_cx, (state.q_x, state.m_x, state.x))
         c_v, wc_v = eng.exchange(k_cv, state.v, state.q_v, t=state.step)
         c_x, wc_x = eng.exchange(k_cx, state.x, state.q_x, t=state.step)
         v, q_v, m_v = eng.track_update(c_v, wc_v, state.v, state.q_v,
-                                       state.m_v, g, state.g_prev, cfg.gamma)
+                                       state.m_v, g, state.g_prev, cfg.gamma,
+                                       sr_key=sr_v)
         x, q_x, m_x = eng.step_update(c_x, wc_x, state.x, state.q_x,
-                                      state.m_x, v, cfg.gamma, cfg.eta)
+                                      state.m_x, v, cfg.gamma, cfg.eta,
+                                      sr_key=sr_x)
     else:
         v, q_v, m_v = eng.track(k_cv, state.v, state.q_v, state.m_v, g,
                                 state.g_prev, cfg.gamma, t=state.step)

@@ -49,8 +49,11 @@ class PorterAdamState(NamedTuple):
     s: Any          # second moment, agent-stacked
 
 
-def porter_adam_init(params, n_agents: int, w=None) -> PorterAdamState:
-    base = porter_init(params, n_agents, w=w)
+def porter_adam_init(params, n_agents: int, w=None,
+                     plane_dtype=None) -> PorterAdamState:
+    base = porter_init(params, n_agents, w=w, plane_dtype=plane_dtype)
+    # Adam moments are purely local (never hit a plane or the wire) and the
+    # second moment is variance-fragile, so they stay f32 under bf16 planes.
     zeros = jax.tree_util.tree_map(
         lambda l: jnp.zeros_like(l, dtype=jnp.float32), base.v)
     return PorterAdamState(base=base, m=zeros, s=zeros)
@@ -85,12 +88,14 @@ def porter_adam_step(
         # the x-side exchange reads only (st.x, st.q_x) -- independent of
         # the track update AND the Adam moments -- so both collectives are
         # in flight before the local moment math runs (see CommRound.overlap)
+        k_cv, sr_v = eng.sr_split(k_cv, (st.q_v, st.m_v, st.v))
+        k_cx, sr_x = eng.sr_split(k_cx, (st.q_x, st.m_x, st.x))
         c_v, wc_v = eng.exchange(k_cv, st.v, st.q_v, t=st.step)
         c_x, wc_x = eng.exchange(k_cx, st.x, st.q_x, t=st.step)
         v, q_v, m_v = eng.track_update(c_v, wc_v, st.v, st.q_v, st.m_v, g,
-                                       st.g_prev, cfg.gamma)
+                                       st.g_prev, cfg.gamma, sr_key=sr_v)
     else:
-        c_x = wc_x = None
+        c_x = wc_x = sr_x = None
         v, q_v, m_v = eng.track(k_cv, st.v, st.q_v, st.m_v, g, st.g_prev,
                                 cfg.gamma, t=st.step)
 
@@ -108,7 +113,8 @@ def porter_adam_step(
     # parameter round: Algorithm 1 lines 13-14 with the preconditioned update
     if eng.overlap:
         x, q_x, m_x = eng.step_update(c_x, wc_x, st.x, st.q_x, st.m_x,
-                                      update, cfg.gamma, cfg.eta)
+                                      update, cfg.gamma, cfg.eta,
+                                      sr_key=sr_x)
     else:
         x, q_x, m_x = eng.step(k_cx, st.x, st.q_x, st.m_x, update,
                                cfg.gamma, cfg.eta, t=st.step)

@@ -95,7 +95,8 @@ def _zeros_like_f(tree, dtype):
 
 def dp_csgp_init(params: Any, n_agents: int, w: Optional[np.ndarray] = None,
                  w0: Optional[np.ndarray] = None,
-                 buffer_dtype: Any = jnp.float32) -> DpCsgpState:
+                 buffer_dtype: Any = jnp.float32,
+                 plane_dtype: Any = None) -> DpCsgpState:
     """Initialize from a single replica; X^0 = x0 1^T, weights all 1.
 
     Unlike :func:`repro.core.porter.porter_init`, the mirrors *must* be
@@ -107,10 +108,16 @@ def dp_csgp_init(params: Any, n_agents: int, w: Optional[np.ndarray] = None,
     an explicit ``w`` from the registry's uniform ``init(params, n, w)``
     protocol takes precedence.  With neither, the doubly-stochastic
     shortcut applies (and is exact for every undirected topology).
+
+    ``plane_dtype``: storage dtype for the param-sized EF buffers (see
+    :func:`repro.core.porter.porter_init`).  The three (n,) push-sum weight
+    planes (xw, q_w, m_w) always stay f32 -- rounding the de-biasing mass
+    would break the column-mass invariant ``1^T xw = n``.
     """
     x = jax.tree_util.tree_map(
         lambda p: jnp.broadcast_to(p, (n_agents,) + p.shape), params)
-    zeros = _zeros_like_f(x, buffer_dtype)
+    pdt = None if plane_dtype is None else jnp.dtype(plane_dtype)
+    zeros = _zeros_like_f(x, buffer_dtype if pdt is None else pdt)
     ones = jnp.ones((n_agents,), jnp.float32)
     weff = w if w is not None else w0
     if weff is None:
@@ -121,7 +128,11 @@ def dp_csgp_init(params: Any, n_agents: int, w: Optional[np.ndarray] = None,
             weff = weff[0]
         m_x = make_dense_mixer(weff)(x)
         m_w = jnp.asarray(weff.sum(axis=1), jnp.float32)  # W @ 1 (row sums)
-    return DpCsgpState(x=x, v=zeros, q_x=x, q_v=zeros, g_prev=zeros,
+    q_x = x
+    if pdt is not None:
+        q_x = jax.tree_util.tree_map(lambda l: l.astype(pdt), x)
+        m_x = jax.tree_util.tree_map(lambda l: l.astype(pdt), m_x)
+    return DpCsgpState(x=x, v=zeros, q_x=q_x, q_v=zeros, g_prev=zeros,
                        m_x=m_x, m_v=zeros, xw=ones, q_w=ones, m_w=m_w,
                        step=jnp.zeros((), jnp.int32))
 
@@ -162,14 +173,17 @@ def dp_csgp_step(
     if eng.overlap:
         # same overlap legality as PORTER: the x-side exchange reads only
         # (x, q_x, xw, q_w), which the v-side update never touches
+        k_cv, sr_v = eng.sr_split(k_cv, (state.q_v, state.m_v, state.v))
+        k_cx, sr_x = eng.sr_split(k_cx, (state.q_x, state.m_x, state.x))
         c_v, wc_v = eng.exchange(k_cv, state.v, state.q_v, t=state.step)
         c_x, wc_x, cw, wcw = eng.exchange_ps(
             k_cx, state.x, state.q_x, state.xw, state.q_w, t=state.step)
         v, q_v, m_v = eng.track_update(c_v, wc_v, state.v, state.q_v,
-                                       state.m_v, g, state.g_prev, cfg.gamma)
+                                       state.m_v, g, state.g_prev, cfg.gamma,
+                                       sr_key=sr_v)
         x, q_x, m_x, xw, q_w, m_w = eng.step_ps_update(
             c_x, wc_x, cw, wcw, state.x, state.q_x, state.m_x, v,
-            state.xw, state.q_w, state.m_w, cfg.gamma, cfg.eta)
+            state.xw, state.q_w, state.m_w, cfg.gamma, cfg.eta, sr_key=sr_x)
     else:
         v, q_v, m_v = eng.track(k_cv, state.v, state.q_v, state.m_v, g,
                                 state.g_prev, cfg.gamma, t=state.step)

@@ -18,9 +18,18 @@ This kernel fuses the V-side (``ef_track``):   q+=c; m+=wc; v = v + gamma*
 gradient terms swapped for -eta*v.  ``ef_gossip`` is the two-term tail of
 the same family (q+=c; m+=wc; y = y + gamma*(m-q)) and serves the
 CHOCO-SGD / SoteriaFL compressed-gossip updates through the comm-round
-engine (core/comm_round.py).  Tiles: (8, 1024) f32 VPU blocks; callers feed
+engine (core/comm_round.py).  Tiles: (8, 1024) VPU blocks; callers feed
 the flat plane layout of kernels/flatten.py so one launch covers every
 (agent, leaf) pair.
+
+Mixed precision: inputs may arrive as bf16 planes (2 B/element resident
+state); every kernel upcasts to f32 *inside* the block, accumulates in f32,
+and writes each output in the dtype of its corresponding state plane
+(q/m/x/v/y), so an f32 master-param plane never narrows just because the EF
+planes beside it are bf16.  ``out_dtype`` overrides all output dtypes at
+once -- the engine requests f32 outputs and applies stochastic rounding
+(kernels/sr_cast.py) on the writeback to sub-f32 buffers, keeping the EF
+drift unbiased instead of round-to-nearest biased.
 """
 
 from __future__ import annotations
@@ -31,6 +40,12 @@ from jax.experimental import pallas as pl
 
 LANE = 1024
 TILE = 8 * LANE
+
+
+def _out_shapes(bufs, out_dtype):
+    return [jax.ShapeDtypeStruct(b.shape,
+                                 b.dtype if out_dtype is None else out_dtype)
+            for b in bufs]
 
 
 def _track_kernel(q_ref, m_ref, v_ref, c_ref, wc_ref, g_ref, gp_ref,
@@ -45,7 +60,8 @@ def _track_kernel(q_ref, m_ref, v_ref, c_ref, wc_ref, g_ref, gp_ref,
     v_out[...] = v.astype(v_out.dtype)
 
 
-def ef_track(q, m, v, c, wc, g, gp, gamma, interpret: bool = False):
+def ef_track(q, m, v, c, wc, g, gp, gamma, interpret: bool = False,
+             out_dtype=None):
     """(q,m,v) update of Algorithm 1 lines 11-12.  All inputs (tiles, TILE)."""
     tiles = q.shape[0]
     blk = pl.BlockSpec((1, TILE), lambda i: (i, 0))
@@ -55,7 +71,7 @@ def ef_track(q, m, v, c, wc, g, gp, gamma, interpret: bool = False):
         grid=(tiles,),
         in_specs=[blk] * 7 + [scl],
         out_specs=[blk] * 3,
-        out_shape=[jax.ShapeDtypeStruct(q.shape, q.dtype)] * 3,
+        out_shape=_out_shapes((q, m, v), out_dtype),
         interpret=interpret,
     )(q, m, v, c, wc, g, gp, jnp.asarray(gamma, jnp.float32).reshape(1))
 
@@ -71,7 +87,8 @@ def _step_kernel(q_ref, m_ref, x_ref, c_ref, wc_ref, v_ref,
     x_out[...] = x.astype(x_out.dtype)
 
 
-def ef_step(q, m, x, c, wc, v, gamma, eta, interpret: bool = False):
+def ef_step(q, m, x, c, wc, v, gamma, eta, interpret: bool = False,
+            out_dtype=None):
     """(q,m,x) update of Algorithm 1 lines 13-14.  All inputs (tiles, TILE)."""
     tiles = q.shape[0]
     blk = pl.BlockSpec((1, TILE), lambda i: (i, 0))
@@ -81,7 +98,7 @@ def ef_step(q, m, x, c, wc, v, gamma, eta, interpret: bool = False):
         grid=(tiles,),
         in_specs=[blk] * 6 + [scl, scl],
         out_specs=[blk] * 3,
-        out_shape=[jax.ShapeDtypeStruct(q.shape, q.dtype)] * 3,
+        out_shape=_out_shapes((q, m, x), out_dtype),
         interpret=interpret,
     )(q, m, x, c, wc, v, jnp.asarray(gamma, jnp.float32).reshape(1),
       jnp.asarray(eta, jnp.float32).reshape(1))
@@ -100,7 +117,8 @@ def _gossip_kernel(q_ref, m_ref, y_ref, c_ref, wc_ref, gamma_ref, scale_ref,
     y_out[...] = y.astype(y_out.dtype)
 
 
-def ef_gossip(q, m, y, c, wc, gamma, scale=1.0, interpret: bool = False):
+def ef_gossip(q, m, y, c, wc, gamma, scale=1.0, interpret: bool = False,
+              out_dtype=None):
     """(q,m,y) CHOCO/Soteria update: q += s*c; m += s*wc; y += gamma*(m-q).
 
     ``scale`` is 1 for CHOCO-SGD and the SoteriaFL shift stepsize alpha for
@@ -114,7 +132,7 @@ def ef_gossip(q, m, y, c, wc, gamma, scale=1.0, interpret: bool = False):
         grid=(tiles,),
         in_specs=[blk] * 5 + [scl, scl],
         out_specs=[blk] * 3,
-        out_shape=[jax.ShapeDtypeStruct(q.shape, q.dtype)] * 3,
+        out_shape=_out_shapes((q, m, y), out_dtype),
         interpret=interpret,
     )(q, m, y, c, wc, jnp.asarray(gamma, jnp.float32).reshape(1),
       jnp.asarray(scale, jnp.float32).reshape(1))

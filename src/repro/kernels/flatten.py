@@ -1,19 +1,26 @@
-"""Flat tile-buffer layout: pytree <-> padded ``(tiles, 8*1024)`` f32 planes.
+"""Flat tile-buffer layout: pytree <-> padded ``(tiles, 8*1024)`` planes.
 
 The fused error-feedback kernels (:mod:`repro.kernels.ef_update`) operate on
-2-D tile planes whose rows are one ``(8, 1024)`` f32 VPU tile each.  The
+2-D tile planes whose rows are one ``(8, 1024)`` VPU tile each.  The
 algorithm layer, however, keeps its state as agent-stacked pytrees (leading
 ``n_agents`` axis per leaf).  This module is the bridge: it concatenates all
 leaves of a tree into one flat per-agent vector, zero-pads to a tile
-multiple, and exposes the result as a ``(rows * tiles_per_row, TILE)`` f32
+multiple, and exposes the result as a ``(rows * tiles_per_row, TILE)``
 plane the kernels can grid over in a single launch -- one kernel invocation
 covers every (agent, leaf) pair instead of one pallas_call per leaf.
 
+The plane dtype is a first-class layout parameter: ``FlatSpec.plane_dtype``
+(default f32) is the storage dtype of the packed plane, so a bf16 engine
+ships and keeps 2 B/element planes end to end while the kernels still
+accumulate in f32 internally.  Writebacks to sub-f32 resident buffers go
+through :mod:`repro.kernels.sr_cast` (stochastic rounding) in the engine,
+not here -- pack/unpack themselves use deterministic ``astype``.
+
 Padding correctness is the subtle part: the pad region is zero on the way
 in, whatever the kernel computes there is dropped by :func:`from_planes`,
-and per-leaf dtypes are restored on the way out (the planes themselves are
-always f32, the kernels' accumulation dtype).  tests/test_comm_round.py pins
-this for odd, non-tile-aligned shapes.
+and per-leaf dtypes are restored on the way out (the planes carry the
+spec's ``plane_dtype``; the kernels accumulate in f32 internally).
+tests/test_comm_round.py pins this for odd, non-tile-aligned shapes.
 
 Time-varying topologies need no plumbing here: the comm-round engine mixes
 in the pytree domain *before* packing, so under a
@@ -43,8 +50,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 __all__ = ["LANE", "SUBLANES", "TILE", "FlatSpec", "flat_spec", "to_planes",
-           "from_planes", "ShardedFlatSpec", "sharded_spec",
-           "specs_have_model_axes", "plane_apply"]
+           "from_planes", "derived_plane_dtype", "ShardedFlatSpec",
+           "sharded_spec", "specs_have_model_axes", "plane_apply"]
 
 LANE = 1024
 SUBLANES = 8
@@ -57,7 +64,10 @@ class FlatSpec(NamedTuple):
     ``rows`` is the leading (agent) axis size, or 0 for an unstacked tree;
     ``shapes``/``dtypes``/``sizes`` describe each leaf *without* the row
     axis; ``d`` is the per-row element count and ``tiles`` the number of
-    TILE-sized rows of the plane each logical row occupies.
+    TILE-sized rows of the plane each logical row occupies;
+    ``plane_dtype`` is the storage dtype of the packed plane (f32 or bf16 --
+    the trailing default keeps pre-plane_dtype positional construction
+    working).
     """
 
     treedef: Any
@@ -67,6 +77,7 @@ class FlatSpec(NamedTuple):
     rows: int
     d: int
     tiles: int
+    plane_dtype: Any = jnp.float32
 
     @property
     def padded(self) -> int:
@@ -78,12 +89,31 @@ class FlatSpec(NamedTuple):
         return (n * self.tiles, TILE)
 
 
-def flat_spec(tree, stacked: bool = True) -> FlatSpec:
+def derived_plane_dtype(tree) -> Any:
+    """Narrowest lossless storage dtype for ``tree``'s packed plane.
+
+    The promotion of all leaf dtypes: an all-bf16 buffer packs as a
+    2 B/element bf16 plane, an f32 buffer (or a mixed bf16+f32 tree) packs
+    as f32.  This is what keeps the f32 master params exact while the EF
+    planes around them ride at half width.
+    """
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        raise ValueError("cannot derive a plane dtype for an empty pytree")
+    return jnp.result_type(*[l.dtype for l in leaves])
+
+
+def flat_spec(tree, stacked: bool = True,
+              plane_dtype: Any = None) -> FlatSpec:
     """Compute the flat layout of ``tree`` (leaves may be ShapeDtypeStructs).
 
     stacked: leaves carry a leading agent axis (must agree across leaves),
     which becomes ``spec.rows``; the per-row vector concatenates the
     remaining dims of every leaf in tree-flatten order.
+
+    plane_dtype: storage dtype of the packed plane; ``None`` (default)
+    derives it from the tree via :func:`derived_plane_dtype`, so f32 trees
+    keep their historical f32 planes and bf16 buffers pack at 2 B/element.
     """
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     if not leaves:
@@ -102,25 +132,29 @@ def flat_spec(tree, stacked: bool = True) -> FlatSpec:
     sizes = tuple(math.prod(s) if s else 1 for s in shapes)
     d = sum(sizes)
     tiles = -(-d // TILE)
+    if plane_dtype is None:
+        plane_dtype = jnp.result_type(*[l.dtype for l in leaves])
     return FlatSpec(treedef=treedef, shapes=shapes,
                     dtypes=tuple(l.dtype for l in leaves), sizes=sizes,
-                    rows=rows, d=d, tiles=tiles)
+                    rows=rows, d=d, tiles=tiles,
+                    plane_dtype=jnp.dtype(plane_dtype))
 
 
 def to_planes(tree, spec: FlatSpec) -> jax.Array:
-    """Pack ``tree`` into an f32 plane of shape ``spec.plane_shape``.
+    """Pack ``tree`` into a ``spec.plane_dtype`` plane of ``plane_shape``.
 
     The tree must match ``spec`` structurally; its leaves may have any
-    floating dtype (cast to f32 here, restored by :func:`from_planes`).
+    floating dtype (cast to the plane dtype here, restored by
+    :func:`from_planes`).
     """
+    pdt = spec.plane_dtype
     leaves = jax.tree_util.tree_leaves(tree)
     if spec.rows:
-        parts = [l.reshape(l.shape[0], -1).astype(jnp.float32)
-                 for l in leaves]
+        parts = [l.reshape(l.shape[0], -1).astype(pdt) for l in leaves]
         flat = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
         flat = jnp.pad(flat, ((0, 0), (0, spec.padded - spec.d)))
         return flat.reshape(spec.rows * spec.tiles, TILE)
-    parts = [l.reshape(-1).astype(jnp.float32) for l in leaves]
+    parts = [l.reshape(-1).astype(pdt) for l in leaves]
     flat = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
     flat = jnp.pad(flat, (0, spec.padded - spec.d))
     return flat.reshape(spec.tiles, TILE)
@@ -156,11 +190,13 @@ class ShardedFlatSpec(NamedTuple):
     at trace time inside ``shard_map`` (every shard of an evenly-sharded
     tree sees the same local shapes, so the derived layout is identical
     across devices).  What this spec pins down is *where* the planes live:
-    the mesh and the per-leaf PartitionSpecs the pack/unpack must respect.
+    the mesh and the per-leaf PartitionSpecs the pack/unpack must respect,
+    plus the storage dtype of every per-shard plane.
     """
 
     mesh: Any
     leaf_specs: Any               # pytree of PartitionSpec, agent axis first
+    plane_dtype: Any = None       # None: derive per tree from leaf dtypes
 
 
 def specs_have_model_axes(leaf_specs,
@@ -185,21 +221,34 @@ def specs_have_model_axes(leaf_specs,
     return False
 
 
-def sharded_spec(mesh, leaf_specs) -> ShardedFlatSpec:
+def sharded_spec(mesh, leaf_specs,
+                 plane_dtype: Any = None) -> ShardedFlatSpec:
     """Pin the per-shard plane layout for ``plane_apply``."""
     if mesh is None or leaf_specs is None:
         raise ValueError("per-shard planes need both a mesh and leaf_specs")
-    return ShardedFlatSpec(mesh=mesh, leaf_specs=leaf_specs)
+    return ShardedFlatSpec(
+        mesh=mesh, leaf_specs=leaf_specs,
+        plane_dtype=None if plane_dtype is None else jnp.dtype(plane_dtype))
 
 
 def plane_apply(kernel, trees: Sequence[Any], n_out: int,
-                sharded: "ShardedFlatSpec | None" = None):
+                sharded: "ShardedFlatSpec | None" = None,
+                plane_dtype: Any = None):
     """Run ``kernel`` over the flat planes of ``trees``.
 
     kernel: ``(plane, ...) -> (plane, ...)`` over same-layout tile planes
     (``n_out`` outputs); ``trees``: same-structure agent-stacked pytrees.
-    Returns ``n_out`` pytrees with the layout (and leaf dtypes) of
-    ``trees[0]``.
+    Output ``i`` is restored with the leaf dtypes of ``trees[i]`` -- the
+    engine's update methods return (a permutation of) their first ``n_out``
+    input buffers, and under mixed precision those buffers legitimately
+    differ in dtype (f32 master params next to bf16 EF planes), so a single
+    shared spec would silently downcast the master copy.
+
+    plane_dtype: storage dtype of the packed planes; ``None`` (the default,
+    and ``sharded.plane_dtype`` when a sharded spec is given) derives each
+    tree's plane dtype from its own leaves (:func:`derived_plane_dtype`),
+    so a bf16 EF buffer packs at 2 B/element while the f32 master param
+    tree beside it keeps an exact f32 plane.
 
     With ``sharded=None`` this is the single-plane path: one global pack,
     one kernel launch, one unpack.  With a :class:`ShardedFlatSpec` the same
@@ -208,11 +257,13 @@ def plane_apply(kernel, trees: Sequence[Any], n_out: int,
     kernel grid covers one per-shard plane -- no leaf ever crosses the
     model axis.
     """
+    if plane_dtype is None and sharded is not None:
+        plane_dtype = sharded.plane_dtype
 
     def local(*ts):
-        spec = flat_spec(ts[0])
-        outs = kernel(*(to_planes(t, spec) for t in ts))
-        return tuple(from_planes(o, spec) for o in outs)
+        specs = [flat_spec(t, plane_dtype=plane_dtype) for t in ts]
+        outs = kernel(*(to_planes(t, s) for t, s in zip(ts, specs)))
+        return tuple(from_planes(o, specs[i]) for i, o in enumerate(outs))
 
     if sharded is None:
         return local(*trees)

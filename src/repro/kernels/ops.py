@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from . import block_topk as _bt
 from . import ef_update as _ef
 from . import rwkv6_chunk as _rw
+from . import sr_cast as _srk
 from . import ssd_chunk as _ssd
 from . import smooth_clip as _sc
 from . import wire_pack as _wp
@@ -32,6 +33,7 @@ from . import ref
 
 __all__ = ["smooth_clip", "block_topk", "ef_track", "ef_step", "ef_gossip",
            "rwkv6_scan", "ssd_scan", "default_interpret",
+           "sr_cast", "sr_cast_ref",
            "wire_topk_pack", "wire_topk_unpack",
            "wire_qsgd_pack", "wire_qsgd_unpack"]
 
@@ -132,38 +134,94 @@ def _tile_args(arrays, tile):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def ef_track(q, m, v, c, wc, g, gp, gamma, interpret: bool | None = None):
-    """Fused Algorithm-1 lines 11-12 (q += c; m += wc; v update)."""
+def sr_cast(x: jax.Array, key: jax.Array,
+            interpret: bool | None = None) -> jax.Array:
+    """Stochastic-rounding f32 -> bf16 cast over an arbitrary-shape array.
+
+    Random bits come from ``key`` outside the kernel, so this and
+    :func:`sr_cast_ref` round bit-identically for the same key (the pattern
+    wire_qsgd_pack uses for its dither noise).
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    shape = x.shape
+    x2d, d = _pad_2d(x.reshape(-1).astype(jnp.float32), _srk.TILE)
+    bits = jax.random.bits(key, x2d.shape, jnp.uint32)
+    y2d = _srk.sr_cast(x2d, bits, interpret=interpret)
+    return y2d.reshape(-1)[:d].reshape(shape)
+
+
+@jax.jit
+def sr_cast_ref(x: jax.Array, key: jax.Array) -> jax.Array:
+    """jnp reference for :func:`sr_cast` (same pad + bits draw, no pallas)."""
+    shape = x.shape
+    x2d, d = _pad_2d(x.reshape(-1).astype(jnp.float32), _srk.TILE)
+    bits = jax.random.bits(key, x2d.shape, jnp.uint32)
+    y2d = _srk.sr_cast_ref(x2d, bits)
+    return y2d.reshape(-1)[:d].reshape(shape)
+
+
+@jax.jit
+def sr_cast_leaf(x: jax.Array, key: jax.Array) -> jax.Array:
+    """Sharding-preserving SR cast: no plane padding, bits drawn in ``x``'s
+    own shape.  The ref engine's writeback uses this on whole state leaves
+    -- the :func:`sr_cast` / :func:`sr_cast_ref` pair reshapes through
+    padded planes, which reshards an agent-sharded leaf and puts the
+    flattened buffer (and its u32 bits) on the wire.  The key folds per
+    leading-axis row, so each agent row's bits derive from its own key and
+    the SPMD partitioner generates them shard-locally (a single
+    whole-array draw from a replicated key lowers with partitioner
+    collectives on the agent mesh)."""
+    if x.ndim == 0:
+        bits = jax.random.bits(key, x.shape, jnp.uint32)
+        return _srk.sr_cast_ref(x.astype(jnp.float32), bits)
+    ks = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+        jnp.arange(x.shape[0]))
+    bits = jax.vmap(
+        lambda kk, row: jax.random.bits(kk, row.shape, jnp.uint32))(ks, x)
+    return _srk.sr_cast_ref(x.astype(jnp.float32), bits)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "out_dtype"))
+def ef_track(q, m, v, c, wc, g, gp, gamma, interpret: bool | None = None,
+             out_dtype=None):
+    """Fused Algorithm-1 lines 11-12 (q += c; m += wc; v update).
+
+    out_dtype: force all three outputs to one dtype (the engine requests
+    f32 here and stochastically rounds the writeback to bf16 buffers);
+    ``None`` keeps each output in its state operand's dtype.
+    """
     interpret = default_interpret() if interpret is None else interpret
     shape = q.shape
     (q2, m2, v2, c2, wc2, g2, gp2), d = _tile_args(
         (q, m, v, c, wc, g, gp), _ef.TILE)
     qo, mo, vo = _ef.ef_track(q2, m2, v2, c2, wc2, g2, gp2, gamma,
-                              interpret=interpret)
+                              interpret=interpret, out_dtype=out_dtype)
     unpad = lambda a: a.reshape(-1)[:d].reshape(shape)
     return unpad(qo), unpad(mo), unpad(vo)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def ef_step(q, m, x, c, wc, v, gamma, eta, interpret: bool | None = None):
+@functools.partial(jax.jit, static_argnames=("interpret", "out_dtype"))
+def ef_step(q, m, x, c, wc, v, gamma, eta, interpret: bool | None = None,
+            out_dtype=None):
     """Fused Algorithm-1 lines 13-14 (q += c; m += wc; x update)."""
     interpret = default_interpret() if interpret is None else interpret
     shape = q.shape
     (q2, m2, x2, c2, wc2, v2), d = _tile_args((q, m, x, c, wc, v), _ef.TILE)
     qo, mo, xo = _ef.ef_step(q2, m2, x2, c2, wc2, v2, gamma, eta,
-                             interpret=interpret)
+                             interpret=interpret, out_dtype=out_dtype)
     unpad = lambda a: a.reshape(-1)[:d].reshape(shape)
     return unpad(qo), unpad(mo), unpad(xo)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def ef_gossip(q, m, y, c, wc, gamma, scale=1.0, interpret: bool | None = None):
+@functools.partial(jax.jit, static_argnames=("interpret", "out_dtype"))
+def ef_gossip(q, m, y, c, wc, gamma, scale=1.0, interpret: bool | None = None,
+              out_dtype=None):
     """Fused CHOCO/Soteria update (q += s*c; m += s*wc; y += gamma*(m-q))."""
     interpret = default_interpret() if interpret is None else interpret
     shape = q.shape
     (q2, m2, y2, c2, wc2), d = _tile_args((q, m, y, c, wc), _ef.TILE)
     qo, mo, yo = _ef.ef_gossip(q2, m2, y2, c2, wc2, gamma, scale,
-                               interpret=interpret)
+                               interpret=interpret, out_dtype=out_dtype)
     unpad = lambda a: a.reshape(-1)[:d].reshape(shape)
     return unpad(qo), unpad(mo), unpad(yo)
 

@@ -33,9 +33,22 @@ from pathlib import Path
 from typing import Any, Optional
 
 import jax
+import ml_dtypes
 import numpy as np
 
 __all__ = ["save_state", "restore_state", "latest_step", "read_manifest"]
+
+
+def _to_numpy(leaf):
+    """Host copy in an npz-native dtype.  bf16 planes (mixed-precision
+    engines) are stored as their u16 bit pattern: numpy serializes
+    ml_dtypes arrays as raw void records, which np.load cannot cast back
+    -- the bitcast round-trips exactly and restore views it back through
+    the reference leaf's dtype."""
+    arr = np.asarray(leaf)
+    if arr.dtype == ml_dtypes.bfloat16:
+        return arr.view(np.uint16)
+    return arr
 
 
 def _flatten(tree):
@@ -44,7 +57,7 @@ def _flatten(tree):
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in path)
         # a bare-array field has an empty path; npz keys cannot be empty
-        out[key or "_root"] = np.asarray(leaf)
+        out[key or "_root"] = _to_numpy(leaf)
     return out
 
 
@@ -126,6 +139,10 @@ def _restore_field(d: Path, name: str, ref):
         if tuple(arr.shape) != tuple(ref_leaf.shape):
             raise ValueError(f"{name}/{path_key}: shape {arr.shape} != "
                              f"{ref_leaf.shape}")
+        if (np.dtype(ref_leaf.dtype) == ml_dtypes.bfloat16
+                and arr.dtype != ml_dtypes.bfloat16):
+            # stored as the u16 bit pattern (see _to_numpy): bit-exact view
+            arr = arr.view(ml_dtypes.bfloat16)
         leaves.append(jax.numpy.asarray(arr, dtype=ref_leaf.dtype))
     return treedef.unflatten(leaves)
 

@@ -100,7 +100,9 @@ class _ChunkedLower:
 def run_one(arch: str, shape_name: str, multi_pod: bool, variant: str,
             gossip: str, out_dir: Path, tag: str = "", fsdp: bool = False,
             compressor: str = "block_top_k", remat: bool = True,
+            remat_policy: str = None,
             local_compress: bool = False, buffer_dtype="f32",
+            plane_dtype: str = None,
             q_chunk=None, capacity: float = None, cache_dtype="bf16",
             topology: str = "ring", topology_schedule: str = None,
             comm_backend: str = "auto", chunk: int = None,
@@ -123,19 +125,25 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, variant: str,
             setup = build_train_step(
                 cfg, mesh, shape, variant=variant, gossip_mode=gossip,
                 compressor_name=compressor, remat=remat,
+                remat_policy=remat_policy,
                 local_compress=local_compress,
                 topology_kind=topology,
                 topology_schedule=topology_schedule,
                 comm_backend=comm_backend,
                 wire=wire, overlap=overlap,
                 buffer_dtype=jnp.bfloat16 if buffer_dtype == "bf16"
-                else jnp.float32)
+                else jnp.float32,
+                plane_dtype=plane_dtype)
             if topology_schedule:
                 rec["topology_schedule"] = topology_schedule
             if wire != "dense":
                 rec["wire"] = wire
             if overlap:
                 rec["overlap"] = True
+            if plane_dtype:
+                rec["plane_dtype"] = plane_dtype
+            if remat_policy:
+                rec["remat_policy"] = remat_policy
             params_shapes = setup.state_shapes.x
             if chunk:
                 # scan-fused chunk runner: one executable covering `chunk`
@@ -297,6 +305,16 @@ def main():
     ap.add_argument("--local-compress", action="store_true",
                     help="shard-local compression (no resharding gathers)")
     ap.add_argument("--buffer-dtype", default="f32", choices=["f32", "bf16"])
+    ap.add_argument("--plane-dtype", default=None, choices=["f32", "bf16"],
+                    help="EF state-plane storage dtype: 'bf16' halves the "
+                         "six non-master state buffers and the gossip wire "
+                         "(stochastic-rounding writeback; master params "
+                         "stay f32)")
+    ap.add_argument("--remat-policy", default=None,
+                    choices=["full", "dots"],
+                    help="jax.checkpoint policy around the loss/grad for "
+                         "train shapes ('full' recomputes everything, "
+                         "'dots' keeps matmul outputs)")
     ap.add_argument("--q-chunk", type=int, default=None,
                     help="chunked-query attention block for prefill")
     ap.add_argument("--capacity", type=float, default=None,
@@ -356,8 +374,10 @@ def main():
                 arch, shape_name, args.multi_pod, args.variant, args.gossip,
                 out_dir, tag=args.tag, fsdp=args.fsdp,
                 compressor=args.compressor, remat=not args.no_remat,
+                remat_policy=args.remat_policy,
                 local_compress=args.local_compress,
-                buffer_dtype=args.buffer_dtype, q_chunk=args.q_chunk,
+                buffer_dtype=args.buffer_dtype,
+                plane_dtype=args.plane_dtype, q_chunk=args.q_chunk,
                 capacity=args.capacity, cache_dtype=args.cache_dtype,
                 topology=args.topology,
                 topology_schedule=args.topology_schedule,

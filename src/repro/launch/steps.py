@@ -148,7 +148,9 @@ def build_train_step(
     tau: float = 1.0,
     sigma_p: float = 0.0,
     buffer_dtype=jnp.float32,
+    plane_dtype=None,
     remat: bool = True,
+    remat_policy: Optional[str] = None,
     local_compress: bool = False,
     comm_backend: str = "auto",
     wire: str = "dense",
@@ -187,6 +189,16 @@ def build_train_step(
 
     overlap: issue both comm rounds' collectives before either fused update
     (``CommRound(overlap=True)``); bit-exact to the sequential order.
+
+    plane_dtype: storage dtype of the EF state planes ('bf16' halves the
+    six non-master state buffers AND the gossip wire; master params stay
+    f32 -- see ``repro.api.ExperimentSpec.plane_dtype``).
+
+    remat_policy: jax.checkpoint policy around the loss/grad ('full' or
+    'dots'); composes with the flax-level ``remat`` flag -- the model's
+    internal remat decides *block* boundaries, this knob checkpoints the
+    whole loss so eight agent-stacked state buffers fit beside the
+    activations on the pod mesh.
     """
     cfg = dataclasses.replace(cfg, remat=remat)
     bundle = build_model(cfg)
@@ -199,7 +211,8 @@ def build_train_step(
         compressor=compressor_name, frac=frac, gossip_mode=gossip_mode,
         comm_backend=comm_backend, wire=wire, overlap=overlap,
         eta=1e-3, tau=tau, sigma_p=sigma_p,
-        buffer_dtype=buffer_dtype)
+        buffer_dtype=buffer_dtype, plane_dtype=plane_dtype,
+        remat_policy=remat_policy)
 
     # ---- abstract state & shardings ---------------------------------------
     params_shapes, pspecs = abstract_init(bundle)

@@ -32,8 +32,8 @@ PERF_LADDERS = [
     ("rwkv6-7b", "train_4k", False,
      dict(local_compress=True, gossip="ring"), "lc_ring"),
     ("rwkv6-7b", "train_4k", False,
-     dict(local_compress=True, gossip="ring", buffer_dtype="bf16"),
-     "lc_ring_bf16"),
+     dict(local_compress=True, gossip="ring", buffer_dtype="bf16",
+          plane_dtype="bf16"), "lc_ring_bf16"),
     ("rwkv6-7b", "train_4k", False,
      dict(local_compress=True, gossip="packed"), "lc_packed"),
     # Perf-2: minicpm3-4b x prefill_32k
@@ -122,6 +122,19 @@ PERF_LADDERS = [
      dict(variant="csgp", local_compress=True, gossip="ring",
           wire="packed_bits", topology_schedule="directed:ring_skips"),
      "csgp_ring_bits"),
+    # SPerf-9: mixed-precision state planes + remat -- bf16 EF buffers
+    # (stochastic-rounding writeback, f32 master params) halve both the
+    # resident optimizer state and the dense-neighbor gossip wire; the
+    # packed_bits rung shows the codec wire is already compact, so bf16
+    # planes there buy memory only; the tinyllama rung checkpoints the
+    # loss ('dots' policy) so the real-model stack trains with all eight
+    # state buffers resident (see benchmarks/bench_memory.py).
+    ("rwkv6-7b", "train_4k", False,
+     dict(local_compress=True, gossip="ring", wire="packed_bits",
+          plane_dtype="bf16"), "lc_packed_bits_bf16"),
+    ("tinyllama-1.1b", "train_4k", False,
+     dict(local_compress=True, gossip="ring", plane_dtype="bf16",
+          remat_policy="dots", chunk=4), "lc_ring_bf16_remat"),
 ]
 
 

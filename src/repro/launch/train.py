@@ -136,6 +136,15 @@ def main(argv=None):
                          "chunk by the state's step counter")
     ap.add_argument("--compressor", default="top_k")
     ap.add_argument("--frac", type=float, default=0.05)
+    ap.add_argument("--plane-dtype", default=None, choices=["f32", "bf16"],
+                    help="EF/gossip state plane dtype (bf16 halves resident "
+                         "state + dense wire; f32 master params, stochastic-"
+                         "rounding writeback). Default: derive from params")
+    ap.add_argument("--remat-policy", default=None,
+                    choices=["full", "dots"],
+                    help="jax.checkpoint around the loss/grad ('full' "
+                         "rematerializes everything, 'dots' saves matmul "
+                         "outputs); default off")
     ap.add_argument("--eta", type=float, default=3e-2)
     ap.add_argument("--tau", type=float, default=1.0)
     ap.add_argument("--epsilon", type=float, default=0.1,
@@ -186,10 +195,23 @@ def main(argv=None):
             f"{saved_sched!r}; resume with the recorded schedule (the step "
             "counter continues its period mid-window)")
 
+    # plane dtype is part of the state layout: the checkpoint's buffers ARE
+    # that dtype, and restoring them into a different layout would silently
+    # re-round (bf16 -> f32 resurrects no precision, f32 -> bf16 drops it
+    # outside the SR path) -- refuse, like the schedule
+    saved_planes = manifest_extra.get("plane_dtype")
+    if start > 0 and saved_planes != args.plane_dtype:
+        raise ValueError(
+            f"--resume with --plane-dtype={args.plane_dtype!r} but the "
+            f"checkpoint's {rounds_prev} rounds ran with "
+            f"{saved_planes!r}; resume with the recorded plane dtype")
+
     spec = ExperimentSpec(algo=algo_name, n_agents=args.agents,
                           topology=args.topology,
                           topology_schedule=args.topology_schedule,
                           compressor=args.compressor, frac=args.frac,
+                          plane_dtype=args.plane_dtype,
+                          remat_policy=args.remat_policy,
                           eta=args.eta, tau=args.tau, sigma_p=sigma_p)
     algo = build(spec, bundle.loss)
 
@@ -205,10 +227,13 @@ def main(argv=None):
         top_note = f"{args.topology}, alpha={algo.topology.alpha:.3f}"
     else:
         top_note = "server/client"
+    mp_note = "".join(
+        [f" planes={args.plane_dtype}" if args.plane_dtype else "",
+         f" remat={args.remat_policy}" if args.remat_policy else ""])
     print(f"[model] {cfg.name}: {n_params/1e6:.2f}M params, "
           f"{args.agents} agents ({top_note}), "
           f"{args.compressor}(rho={args.frac}) algo={algo_name} "
-          f"chunk={args.chunk}")
+          f"chunk={args.chunk}{mp_note}")
 
     state = algo.init(params)
     if start > 0:
@@ -232,6 +257,8 @@ def main(argv=None):
         extra = {"rounds_executed": rounds_prev + (t_end - start)}
         if args.topology_schedule is not None:
             extra["topology_schedule"] = args.topology_schedule
+        if args.plane_dtype is not None:
+            extra["plane_dtype"] = args.plane_dtype
         if info.dp:
             extra.update(sigma_p=sigma_p, tau=args.tau,
                          epsilon=args.epsilon, delta=args.delta,

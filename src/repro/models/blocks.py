@@ -72,6 +72,11 @@ class ModelConfig:
     # --- numerics / perf ---
     dtype: Any = jnp.bfloat16
     remat: bool = True
+    # jax.checkpoint policy for the per-layer remat: None = save nothing
+    # (recompute everything), 'dots' = dots_saveable (keep matmul outputs,
+    # recompute elementwise/norm ops -- cheaper backward at a small
+    # activation-memory cost).  Ignored when remat=False.
+    remat_policy: Optional[str] = None
     q_chunk: Optional[int] = None   # chunked-query attention (flash-coarse)
 
     @property

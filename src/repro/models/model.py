@@ -67,7 +67,15 @@ def _init_norm(cfg):
 
 
 def _maybe_remat(fn, cfg: ModelConfig):
-    return jax.checkpoint(fn) if cfg.remat else fn
+    if not cfg.remat:
+        return fn
+    if cfg.remat_policy is None:
+        return jax.checkpoint(fn)
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_saveable)
+    raise ValueError(f"unknown remat_policy {cfg.remat_policy!r}; "
+                     "have None, 'dots'")
 
 
 def _positions(b, s, offset=0):

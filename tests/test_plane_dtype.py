@@ -1,0 +1,160 @@
+"""Mixed-precision plane tests: bf16 EF state end to end.
+
+Three contracts from the comm-round memory system (no hypothesis, always
+collected):
+
+* ``backend='auto'`` resolves to the jnp reference off-TPU -- and an
+  auto-built engine steps BIT-identically to an explicit ``'ref'`` build
+  (the regression: auto used to pick pallas-interpret on CPU, which is
+  orders of magnitude slower and needlessly diverges from the path CI
+  pins everywhere else);
+* ``plane_dtype='bf16'`` lands exactly the intended state layout: f32
+  master params, bf16 EF/gossip planes, f32 push-sum weight columns
+  (``xw``/``q_w``/``m_w`` must stay exact -- they carry the push-sum
+  mass balance), and untouched f32 runs keep their RNG stream (sr_split
+  passthrough);
+* every registered algorithm trains through the chunked runtime with
+  bf16 planes to the same loss as its f32 twin (loose atol -- stochastic
+  rounding is unbiased but not bit-stable).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ExperimentSpec, build, list_algorithms
+from repro.core.comm_round import CommRound, resolve_backend
+from repro.core.registry import algorithm_info
+from repro.data import a9a_like, minibatch_source, shard_to_agents
+from repro.launch.runtime import make_runner
+
+N = 4
+PARITY_ATOL = 0.02
+
+
+def _loss(params, batch):
+    f, l = batch
+    f = jnp.atleast_2d(f)
+    l = jnp.atleast_1d(l)
+    logits = f @ params["w"] + params["b"]
+    return jnp.mean(jnp.log1p(jnp.exp(-(2 * jnp.atleast_1d(l) - 1) * logits)))
+
+
+def _spec(algo, **kw):
+    base = dict(algo=algo, n_agents=N, topology="ring",
+                topology_weights="metropolis", compressor="block_top_k",
+                frac=0.25, comm_backend="ref", interpret=True, eta=0.1)
+    if algorithm_info(algo).dp:
+        base.update(tau=5.0, sigma_p=0.01)
+    base.update(kw)
+    return ExperimentSpec(**base)
+
+
+def _problem():
+    x, y = a9a_like(400, 33, seed=0)
+    xs, ys = shard_to_agents(x, y, N)
+    return ({"w": jnp.zeros(33), "b": jnp.zeros(())},
+            minibatch_source(xs, ys, batch=4))
+
+
+def _run_chunked(spec, steps=8, chunk=4):
+    params0, source = _problem()
+    algo = build(spec, _loss)
+    state = algo.init(params0)
+    runner = make_runner(algo, source, chunk)
+    key = jax.random.PRNGKey(0)
+    metrics = None
+    for t in range(0, steps, chunk):
+        state, key, metrics = runner(state, key, t)
+    return state, metrics
+
+
+# ---------------------------------------------------------------------------
+# backend='auto'
+# ---------------------------------------------------------------------------
+
+def test_resolve_backend_prefers_ref_off_tpu():
+    expect = "pallas" if jax.default_backend() == "tpu" else "ref"
+    assert resolve_backend("auto") == expect
+    # explicit choices pass through untouched
+    assert resolve_backend("ref") == "ref"
+    assert resolve_backend("pallas") == "pallas"
+
+
+def test_auto_backend_steps_bit_identical_to_ref():
+    st_auto, m_auto = _run_chunked(_spec("porter-gc", comm_backend="auto"))
+    st_ref, m_ref = _run_chunked(_spec("porter-gc", comm_backend="ref"))
+    for a, b in zip(jax.tree_util.tree_leaves(st_auto),
+                    jax.tree_util.tree_leaves(st_ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(m_auto["loss"]),
+                                  np.asarray(m_ref["loss"]))
+
+
+# ---------------------------------------------------------------------------
+# state layout under plane_dtype='bf16'
+# ---------------------------------------------------------------------------
+
+def test_bf16_state_layout_porter():
+    st, _ = _run_chunked(_spec("porter-gc", plane_dtype="bf16"))
+    assert all(l.dtype == jnp.float32
+               for l in jax.tree_util.tree_leaves(st.x))
+    for plane in ("v", "q_x", "q_v", "g_prev", "m_x", "m_v"):
+        assert all(l.dtype == jnp.bfloat16
+                   for l in jax.tree_util.tree_leaves(getattr(st, plane))), \
+            f"{plane} not bf16"
+
+
+def test_bf16_push_sum_weight_stays_f32_exact():
+    st, _ = _run_chunked(_spec("dp-csgp", plane_dtype="bf16",
+                               gossip_mode="dense"))
+    for col in ("xw", "q_w", "m_w"):
+        assert all(l.dtype == jnp.float32
+                   for l in jax.tree_util.tree_leaves(getattr(st, col))), \
+            f"{col} must stay f32 (push-sum mass balance)"
+    # doubly-stochastic static mixing keeps unit weights exactly
+    np.testing.assert_array_equal(np.asarray(st.xw), np.ones(N, np.float32))
+
+
+def test_sr_split_passthrough_keeps_f32_stream():
+    """All-f32 trees must NOT consume a key split: plane_dtype=None runs
+    keep the exact RNG stream of the pre-mixed-precision engine."""
+    eng = build(_spec("porter-gc"), _loss).engine
+    assert isinstance(eng, CommRound)
+    key = jax.random.PRNGKey(5)
+    f32_tree = {"w": jnp.zeros((N, 7), jnp.float32)}
+    out_key, sr_key = eng.sr_split(key, (f32_tree,))
+    assert sr_key is None
+    np.testing.assert_array_equal(np.asarray(out_key), np.asarray(key))
+    bf16_tree = {"w": jnp.zeros((N, 7), jnp.bfloat16)}
+    out_key, sr_key = eng.sr_split(key, (f32_tree, bf16_tree))
+    assert sr_key is not None
+    assert not np.array_equal(np.asarray(out_key), np.asarray(key))
+
+
+# ---------------------------------------------------------------------------
+# chunked parity: every registered algorithm, f32 vs bf16 planes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", list_algorithms())
+def test_chunked_parity_f32_vs_bf16(algo):
+    _, m32 = _run_chunked(_spec(algo))
+    _, m16 = _run_chunked(_spec(algo, plane_dtype="bf16"))
+    l32 = float(m32["loss"][-1])
+    l16 = float(m16["loss"][-1])
+    assert np.isfinite(l32) and np.isfinite(l16)
+    assert abs(l32 - l16) <= PARITY_ATOL, \
+        f"{algo}: f32 loss {l32:.4f} vs bf16 loss {l16:.4f}"
+    # the wire-byte metric stays reported (and finite) under bf16
+    assert np.isfinite(float(m16["wire_bytes"][-1]))
+
+
+def test_dense_wire_model_documented_f32():
+    """Dense gossip is a bandwidth EMULATION (all-to-all averaging on one
+    host); its byte model deliberately stays the f32 accounting so ablation
+    curves remain comparable across plane dtypes.  The measured-ring
+    halving is pinned by the analyzer census + benchmarks/bench_memory.py."""
+    _, m32 = _run_chunked(_spec("porter-gc"))
+    _, m16 = _run_chunked(_spec("porter-gc", plane_dtype="bf16"))
+    assert float(m32["wire_bytes"][-1]) == float(m16["wire_bytes"][-1])
