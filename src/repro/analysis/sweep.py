@@ -33,6 +33,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 import repro.api as api
 from repro.api import ExperimentSpec, build
+from repro.core import FLEET_DENSE_GATE
 from repro.core import wire_formats as WF
 from repro.core.registry import algorithm_info, list_algorithms
 from repro.data import minibatch_source
@@ -193,6 +194,22 @@ def census_matrix(quick: bool = False) -> List[Case]:
                            plane_dtype="bf16",
                            topology_schedule="directed:ring_skips"), True),
         ]
+    # fleet mode: the whole mixing sweep is device-local math (schedule
+    # einsum below FLEET_DENSE_GATE, COO scatter-add above), so the
+    # unmeshed census must count ZERO collectives -- the fleet budget
+    # declares an empty per_leaf table, making every category unbudgeted
+    cases.append(Case("porter-gc/fleet/dense",
+                      _spec_for("porter-gc", gossip_mode="dense",
+                                fleet=True), False))
+    if not quick:
+        cases += [
+            Case("clip21/fleet/dense",
+                 _spec_for("clip21", gossip_mode="dense", fleet=True),
+                 False),
+            Case("subgrad-comp/fleet/coo",
+                 _spec_for("subgrad-comp", gossip_mode="dense", fleet=True,
+                           n_agents=2 * FLEET_DENSE_GATE), False),
+        ]
     return cases
 
 
@@ -229,7 +246,8 @@ def run_census_case(case: Case, mesh: Optional[Mesh]) -> dict:
     use_mesh = mesh if case.needs_mesh else None
     try:
         algo = build(case.spec, census_loss, mesh=use_mesh)
-        hlo_text = lowered_step_text(algo, mesh=use_mesh)
+        hlo_text = lowered_step_text(algo, mesh=use_mesh,
+                                     n=case.spec.n_agents)
     except Exception as e:
         rec["error"] = f"{type(e).__name__}: {e}"
         return rec

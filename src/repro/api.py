@@ -47,6 +47,22 @@ Registered algorithms (see :func:`repro.core.registry.list_algorithms`):
     dp-csgp      beyond-paper: DP compressed gossip over *directed* graphs
                  (column-stochastic W + push-sum de-biasing, arXiv
                  2512.13583); pair with topology_schedule="directed:..."
+    clip21       beyond-paper: Clip21 error-feedback clipping (arXiv
+                 2305.18929) -- clips the gradient *residual* against a
+                 running estimate, so the clipping bias vanishes once the
+                 iterates stabilize; bit-exact porter-gc at tau=inf
+    subgrad-comp beyond-paper: nonsmooth subgradient method with
+                 compressed gossip (arXiv 2607.01755 family) --
+                 CHOCO's round with the 1/sqrt(t) diminishing stepsize
+
+Fleet mode (``ExperimentSpec(fleet=True)``): the agent axis becomes a
+simulated *fleet* of n = 1k-100k agents on however few devices exist --
+same agent-stacked state layout, but mixing runs through
+:func:`repro.core.fleet.make_fleet_mixer`: the identical dense einsum at
+n <= FLEET_DENSE_GATE (bit-exact against the per-device engine, pinned
+by tests/test_fleet.py) and a sparse COO scatter-add above it, where the
+topology/schedule builders also switch to the sparse fleet generators so
+no dense (n, n) table is ever materialized.
 
 The per-algorithm functional APIs (``porter_step``, ``choco_step``, ...)
 remain importable for tests and power users, but no call site should build
@@ -64,14 +80,19 @@ import jax.numpy as jnp
 
 from repro.core import baselines as BL
 from repro.core.beer import beer_config
+from repro.core.clip21 import Clip21State, clip21_init, clip21_step
 from repro.core.comm_round import CommRound, resolve_backend
 from repro.core.compression import Compressor, make_compressor
+from repro.core.fleet import (FLEET_DENSE_GATE, fleet_er_schedule,
+                              fleet_rotating_schedule, fleet_topology,
+                              make_fleet_mixer)
 from repro.core import mixing as MX
 from repro.core import wire_formats
 from repro.core.gossip import MixFn, make_mixer
 from repro.core.mixing import Topology, TopologySchedule, make_topology
 from repro.core.porter import (PorterConfig, PorterState, porter_init,
                                porter_step)
+from repro.core.subgrad import SubgradState, subgrad_init, subgrad_step
 from repro.core.porter_adam import (PorterAdamState, porter_adam_init,
                                     porter_adam_step)
 from repro.core.push_sum import DpCsgpState, dp_csgp_init, dp_csgp_step
@@ -86,6 +107,8 @@ __all__ = [
     "build_engine",
     "resolve_topology",
     "resolve_schedule",
+    "resolve_fleet_topology",
+    "resolve_fleet_schedule",
     "resolve_compressor",
     "resolve_wire_format",
     "resolve_gamma",
@@ -123,6 +146,14 @@ class ExperimentSpec:
     algo: str = "porter-gc"
     # agents + communication graph (Definition 1)
     n_agents: int = 10
+    # fleet mode: simulate n_agents as a vectorized fleet (n >> devices).
+    # The state layout is unchanged (leading agent axis, vmapped gradients,
+    # shardable over devices); mixing routes through the fleet mixer --
+    # bit-exact dense einsum at n <= repro.core.fleet.FLEET_DENSE_GATE,
+    # sparse COO scatter-add above it (topology kinds ring / exponential /
+    # erdos_renyi; schedules rotate / erdos_renyi).  Needs the default
+    # dense gossip_mode and wire.
+    fleet: bool = False
     topology: str = "ring"
     topology_weights: str = "metropolis"
     topology_p: float = 0.8          # erdos_renyi edge probability
@@ -468,6 +499,88 @@ def resolve_gamma(spec: ExperimentSpec, topology: Topology,
     return gamma
 
 
+def _check_fleet_spec(spec: ExperimentSpec, algo: Optional[str] = None):
+    """Reject spec combinations the fleet executor cannot honour."""
+    if spec.gossip_mode != "dense":
+        raise ValueError(
+            f"fleet mode applies mixing as one vectorized dense/COO sweep "
+            f"over the whole fleet axis; gossip_mode={spec.gossip_mode!r} "
+            "is a per-device wire executor -- use gossip_mode='dense'")
+    if spec.wire != "dense":
+        raise ValueError(
+            f"fleet mode ships no per-link packed buffers (the simulated "
+            f"fleet axis is device-local); wire={spec.wire!r} -- use "
+            "wire='dense'")
+    if algo in _PUSH_SUM_ALGOS and spec.n_agents > FLEET_DENSE_GATE:
+        raise ValueError(
+            f"{algo} initializes its push-sum mirrors from the dense "
+            f"round-0 mixing table; fleet mode supports it only at "
+            f"n_agents <= {FLEET_DENSE_GATE} (got {spec.n_agents})")
+
+
+def resolve_fleet_topology(spec: ExperimentSpec):
+    """Fleet topology: the ordinary dense resolution at
+    n <= FLEET_DENSE_GATE (per-device bit parity), the sparse COO builders
+    of :mod:`repro.core.fleet` above it (make_topology's Python O(n^2)
+    weight loops and dense eigensolves do not survive n = 100k)."""
+    if spec.n_agents <= FLEET_DENSE_GATE:
+        return resolve_topology(spec)
+    return fleet_topology(spec.topology, spec.n_agents,
+                          weights=spec.topology_weights, p=spec.topology_p,
+                          seed=spec.topology_seed)
+
+
+def resolve_fleet_schedule(spec: ExperimentSpec, topology=None):
+    """Fleet analogue of :func:`resolve_schedule`: dense resolution below
+    the gate, sparse generators ('rotate:...', 'erdos_renyi:...') above.
+    Directed (column-stochastic) schedules never take the fleet path."""
+    if spec.topology_schedule is None:
+        return None
+    if spec.n_agents <= FLEET_DENSE_GATE:
+        top = topology if isinstance(topology, Topology) else None
+        sched = resolve_schedule(spec, top)
+        if sched is not None and sched.is_directed:
+            raise ValueError(
+                "fleet mode mixes with doubly-stochastic tables only; "
+                f"{spec.topology_schedule!r} is column-stochastic (push-sum "
+                "runs per-device, fleet=False)")
+        return sched
+    text = spec.topology_schedule
+    kind, _, rest = text.partition(":")
+    kind = kind.strip()
+    if kind == "rotate":
+        first, _, more = rest.partition(",")
+        if "=" not in first:
+            kv = {"kinds": first.strip(), **_parse_schedule_kv(more)}
+        else:
+            kv = dict(_parse_schedule_kv(rest))
+        kinds = [k for k in kv.pop("kinds", "").split("+") if k]
+        if not kinds:
+            raise ValueError("rotate schedule needs '+'-separated graph "
+                             "kinds, e.g. 'rotate:ring+exponential'")
+        sched = fleet_rotating_schedule(
+            kinds, spec.n_agents,
+            weights=kv.pop("weights", spec.topology_weights),
+            seed=int(kv.pop("seed", spec.topology_seed)))
+    elif kind == "erdos_renyi":
+        kv = dict(_parse_schedule_kv(rest))
+        degree = kv.pop("degree", None)
+        sched = fleet_er_schedule(
+            spec.n_agents, period=int(kv.pop("period", 4)),
+            degree=None if degree is None else int(degree),
+            weights=kv.pop("weights", spec.topology_weights),
+            seed=int(kv.pop("seed", spec.topology_seed)))
+    else:
+        raise ValueError(
+            f"fleet mode at n_agents={spec.n_agents} > {FLEET_DENSE_GATE} "
+            f"supports the sparse generators 'rotate:...' and "
+            f"'erdos_renyi:...'; got {text!r}")
+    if kv:
+        raise ValueError(f"unknown fleet {kind!r} schedule keys "
+                         f"{sorted(kv)} in {text!r}")
+    return sched
+
+
 def build_engine(spec: ExperimentSpec, *,
                  mesh=None, agent_axes: Sequence[str] = ("data",),
                  leaf_specs=None, compress_fn=None,
@@ -490,8 +603,14 @@ def build_engine(spec: ExperimentSpec, *,
     and the engine's round methods must be fed the absolute round index
     (every registered algorithm passes its state's step counter).
     """
-    top = resolve_topology(spec) if topology is None else topology
-    sched = resolve_schedule(spec, top) if schedule is None else schedule
+    if spec.fleet:
+        _check_fleet_spec(spec)
+        top = resolve_fleet_topology(spec) if topology is None else topology
+        sched = (resolve_fleet_schedule(spec, top) if schedule is None
+                 else schedule)
+    else:
+        top = resolve_topology(spec) if topology is None else topology
+        sched = resolve_schedule(spec, top) if schedule is None else schedule
     comp = resolve_compressor(spec)
     codec = resolve_wire_format(spec)
     if codec is not None and compress_fn is not None:
@@ -500,10 +619,13 @@ def build_engine(spec: ExperimentSpec, *,
             "packing inside the codec executor; a compress_fn override "
             "would be silently ignored -- drop it (launch.steps skips the "
             "shard-local compressor automatically under packed_bits)")
-    mixer = make_mixer(sched if sched is not None else top,
-                       spec.gossip_mode, mesh=mesh, frac=spec.frac,
-                       agent_axes=agent_axes, leaf_specs=leaf_specs,
-                       codec=codec)
+    if spec.fleet:
+        mixer = make_fleet_mixer(sched if sched is not None else top)
+    else:
+        mixer = make_mixer(sched if sched is not None else top,
+                           spec.gossip_mode, mesh=mesh, frac=spec.frac,
+                           agent_axes=agent_axes, leaf_specs=leaf_specs,
+                           codec=codec)
     return CommRound(compressor=comp, mixer=mixer, compress_fn=compress_fn,
                      backend=spec.comm_backend, interpret=spec.interpret,
                      mesh=mesh, leaf_specs=leaf_specs,
@@ -528,8 +650,14 @@ def build(spec: ExperimentSpec, loss_fn, *,
     loss_fn = _apply_remat(loss_fn, spec.remat_policy)
     top, sched = None, None
     if info.decentralized:
-        top = resolve_topology(spec) if topology is None else topology
-        sched = resolve_schedule(spec, top)
+        if spec.fleet:
+            _check_fleet_spec(spec, algo=spec.algo)
+            top = (resolve_fleet_topology(spec) if topology is None
+                   else topology)
+            sched = resolve_fleet_schedule(spec, top)
+        else:
+            top = resolve_topology(spec) if topology is None else topology
+            sched = resolve_schedule(spec, top)
         if sched is not None and sched.is_directed \
                 and spec.algo not in _PUSH_SUM_ALGOS:
             raise ValueError(
@@ -547,9 +675,12 @@ def build(spec: ExperimentSpec, loss_fn, *,
                               schedule=sched)
         comp, mixer = engine.compressor, engine.mixer
     elif info.decentralized:
-        mixer = make_mixer(sched if sched is not None else top,
-                           spec.gossip_mode, mesh=mesh, frac=spec.frac,
-                           agent_axes=agent_axes, leaf_specs=leaf_specs)
+        if spec.fleet:
+            mixer = make_fleet_mixer(sched if sched is not None else top)
+        else:
+            mixer = make_mixer(sched if sched is not None else top,
+                               spec.gossip_mode, mesh=mesh, frac=spec.frac,
+                               agent_axes=agent_axes, leaf_specs=leaf_specs)
     elif info.compressed:
         # server/client: compression without gossip
         comp = resolve_compressor(spec)
@@ -595,7 +726,7 @@ def _algorithm(spec, r, *, state_cls, init, step, config=None) -> Algorithm:
 
 
 # ---------------------------------------------------------------------------
-# the nine registered entry points
+# the eleven registered entry points
 # ---------------------------------------------------------------------------
 
 # algorithms that de-bias column-stochastic (directed) mixing correctly;
@@ -743,6 +874,38 @@ def _build_dp_csgp(spec, loss_fn, r):
                           buffer_dtype=spec.buffer_dtype, plane_dtype=pdt))
     return _algorithm(spec, r, state_cls=DpCsgpState, init=init, step=step,
                       config=cfg)
+
+
+@register_algorithm("clip21", comm_rounds=2)
+def _build_clip21(spec, loss_fn, r):
+    # clip21 clips the *residual*, always piecewise: the smooth factor
+    # tau/(tau+||delta||) never reaches 1, so the EF estimate could never
+    # lock onto the gradient (and tau=inf would be NaN) -- see core/clip21
+    pdt = resolve_plane_dtype(spec)
+    tau = float("inf") if spec.tau is None else spec.tau
+    cfg = PorterConfig(eta=spec.eta, gamma=r.gamma, tau=tau, variant="gc",
+                       clip_mode="piecewise",
+                       grad_dtype=spec.buffer_dtype if pdt is None else pdt)
+    step = functools.partial(clip21_step, cfg, loss_fn, None, None,
+                             engine=r.engine)
+    init = _bind_init(
+        spec, r,
+        functools.partial(clip21_init, buffer_dtype=spec.buffer_dtype,
+                          plane_dtype=pdt))
+    return _algorithm(spec, r, state_cls=Clip21State, init=init, step=step,
+                      config=cfg)
+
+
+@register_algorithm("subgrad-comp", comm_rounds=1)
+def _build_subgrad(spec, loss_fn, r):
+    step = functools.partial(subgrad_step, spec.eta, r.gamma, loss_fn,
+                             None, None, engine=r.engine, tau=spec.tau,
+                             clip_mode=spec.clip_mode)
+    pdt = resolve_plane_dtype(spec)
+    init = _bind_init(
+        spec, r,
+        lambda params, n, w: subgrad_init(params, n, plane_dtype=pdt))
+    return _algorithm(spec, r, state_cls=SubgradState, init=init, step=step)
 
 
 @register_algorithm("soteriafl", dp=True, decentralized=False)

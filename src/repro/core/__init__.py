@@ -17,6 +17,11 @@ Public surface:
                   loss/wire_bytes metrics)
     porter      : Algorithm 1 (PORTER-DP / PORTER-GC / BEER)
     baselines   : DSGD, CHOCO-SGD, DP-SGD, SoteriaFL-SGD
+    clip21      : Clip21 error-feedback clipping (residual clip, EF21-style)
+    subgrad     : nonsmooth subgradient method with compressed gossip
+    fleet       : fleet-scale simulated agents (n >> devices): sparse COO
+                  topologies/schedules + the fleet mixer (dense-gate einsum
+                  bit parity, COO scatter-add at n = 1k-100k)
 
 The recommended entry point is the facade one level up, :mod:`repro.api`:
 declare an ``ExperimentSpec`` (algorithm name + topology + compressor +
@@ -28,16 +33,22 @@ dsgd, choco, dp-sgd, soteriafl).  The per-algorithm functions below remain
 as thin, stable wrappers for tests and power users.
 """
 
-from . import (baselines, beer, clipping, comm_round, compression, gossip,
-               mixing, porter, privacy, registry, wire_formats)
+from . import (baselines, beer, clip21, clipping, comm_round, compression,
+               fleet, gossip, mixing, porter, privacy, registry, subgrad,
+               wire_formats)
 
 
+from .clip21 import Clip21State, clip21_init, clip21_step, clip21_update
 from .clipping import piecewise_clip, smooth_clip, tree_clip, tree_global_norm
 from .comm_round import CommRound, resolve_engine
 from .compression import Compressor, make_compressor
+from .fleet import (FLEET_DENSE_GATE, FleetSchedule, FleetTopology,
+                    fleet_er_schedule, fleet_rotating_schedule,
+                    fleet_topology, make_fleet_mixer)
 from .gossip import apply_mixer, make_mixer
 from .mixing import (Topology, TopologySchedule, make_schedule,
                      make_topology, mixing_rate, spectral_gap)
+from .subgrad import SubgradState, subgrad_init, subgrad_step
 from .porter import (PorterConfig, PorterState, average_params,
                      consensus_error, make_porter_step, porter_init,
                      porter_step)
@@ -47,9 +58,14 @@ from .registry import (Algorithm, AlgorithmInfo, algorithm_info,
 from .wire_formats import WireFormat, make_wire_format
 
 __all__ = [
-    "baselines", "beer", "clipping", "comm_round", "compression", "gossip",
-    "mixing", "porter", "privacy", "registry", "wire_formats",
+    "baselines", "beer", "clip21", "clipping", "comm_round", "compression",
+    "fleet", "gossip", "mixing", "porter", "privacy", "registry", "subgrad",
+    "wire_formats",
     "WireFormat", "make_wire_format",
+    "Clip21State", "clip21_init", "clip21_step", "clip21_update",
+    "SubgradState", "subgrad_init", "subgrad_step",
+    "FLEET_DENSE_GATE", "FleetTopology", "FleetSchedule", "fleet_topology",
+    "fleet_rotating_schedule", "fleet_er_schedule", "make_fleet_mixer",
     "CommRound", "resolve_engine", "Compressor", "make_compressor",
     "Topology", "TopologySchedule", "make_topology", "make_schedule",
     "spectral_gap", "apply_mixer",

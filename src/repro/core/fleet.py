@@ -1,0 +1,563 @@
+"""Fleet-scale agent simulation: n >> devices (ROADMAP open item 3).
+
+The per-device engine tops out at n = tens of agents (one per device
+slot).  Fleet mode keeps the *same* agent-stacked state layout -- every
+buffer leaf carries a leading agent axis -- but lets that axis grow to
+n = 1k-100k simulated agents: the per-agent gradient vmap inside every
+registered ``step`` vectorizes over the fleet, under pjit the fleet axis
+shards over devices (thousands of simulated agents per device, so the
+engine's planes become ``(fleet_chunk, tiles, lane)`` per shard), and the
+*mixing* -- the only O(n^2) ingredient -- switches to a sparse COO
+executor so the dense ``(n, n)`` table is never materialized.
+
+Two regimes, one mixer:
+
+* ``n <= FLEET_DENSE_GATE`` -- the fleet mixer wraps the *identical*
+  ``_einsum_w`` dense apply that :func:`repro.core.gossip.make_dense_mixer`
+  uses, on the identical W table.  Given the same resolved topology the
+  fleet path is therefore **bit-exact** against the per-device engine --
+  the oracle tests in tests/test_fleet.py pin this.
+* ``n > FLEET_DENSE_GATE`` -- mixing is applied as a scatter-add over the
+  COO triplets (O(nnz * d), nnz ~ degree * n), built by the sparse
+  topology generators below (banded ring, exponential hyper-cubelike
+  chords, degree-sampled Erdos-Renyi).  The two apply paths are asserted
+  to agree numerically on densifiable sizes.
+
+The fleet mixer satisfies the full MixFn protocol of
+:mod:`repro.core.gossip` -- ``__call__(tree, t)``, ``time_varying``,
+``budget``, ``push`` (push-sum weight rider), ``wire_mode`` -- so
+:class:`repro.core.comm_round.CommRound` and every registered algorithm
+run unchanged on top of it; select it with ``ExperimentSpec(fleet=True)``.
+Mixing is pure local math (gathers + scatter-adds over the fleet axis):
+its :class:`GossipBudget` declares **zero** per-leaf collectives, which
+the analyzer census (repro.analysis) proves against the lowered HLO.
+
+Spectral summaries at fleet scale never call ``numpy.linalg`` on dense
+tables: ``alpha = ||W - J||_op`` comes from power iteration on the
+mean-deflated operator (W is symmetric for the metropolis/lazy weights
+built here), matching :func:`repro.core.mixing.mixing_rate` to rtol ~1e-6
+on densifiable sizes (pinned by tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:  # scipy is a jax dependency, but keep a numpy-only fallback anyway
+    from scipy.sparse.linalg import LinearOperator as _LinOp
+    from scipy.sparse.linalg import eigsh as _eigsh
+except Exception:  # pragma: no cover - exercised only without scipy
+    _LinOp = _eigsh = None
+
+from .gossip import GossipBudget, _einsum_w, _entry, _schedule_table
+from .mixing import Topology, TopologySchedule, WeightKind
+
+__all__ = [
+    "FLEET_DENSE_GATE",
+    "FleetTopology",
+    "FleetSchedule",
+    "fleet_topology",
+    "fleet_rotating_schedule",
+    "fleet_er_schedule",
+    "make_fleet_mixer",
+    "coo_matvec",
+    "coo_alpha",
+]
+
+# n at or below which the fleet mixer densifies and reuses the einsum
+# apply (bit parity with make_dense_mixer); above it, COO scatter-add.
+FLEET_DENSE_GATE = 256
+
+
+# ---------------------------------------------------------------------------
+# COO mixing tables
+# ---------------------------------------------------------------------------
+
+def _check_coo(n: int, rows: np.ndarray, cols: np.ndarray,
+               vals: np.ndarray) -> None:
+    if not (rows.shape == cols.shape == vals.shape) or rows.ndim != 1:
+        raise ValueError(f"COO triplets must be flat and aligned; got "
+                         f"{rows.shape}/{cols.shape}/{vals.shape}")
+    if rows.size and (rows.min() < 0 or rows.max() >= n
+                      or cols.min() < 0 or cols.max() >= n):
+        raise ValueError(f"COO indices out of range for n={n}")
+
+
+def coo_matvec(n: int, rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+               x: np.ndarray) -> np.ndarray:
+    """Host-side W @ x for one COO table (validation / power iteration)."""
+    return np.bincount(rows, weights=vals * x[cols], minlength=n)
+
+
+def coo_alpha(n: int, rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+              iters: int = 200, seed: int = 0) -> float:
+    """``||W - J||_op`` by power iteration on the mean-deflated operator.
+
+    For the symmetric doubly-stochastic W built here, B = W - J is
+    symmetric, so plain power iteration on ``B x = W x - mean(x) 1``
+    converges to the dominant |eigenvalue| = alpha (Definition 1).
+    """
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n)
+    x -= x.mean()
+    x /= np.linalg.norm(x) + 1e-300
+
+    def deflated(v):
+        y = coo_matvec(n, rows, cols, vals, v)
+        return y - y.mean()    # deflate the Perron direction exactly
+
+    if _eigsh is not None and n >= 3:
+        # Lanczos resolves the clustered near-1 ring spectra that plain
+        # power iteration needs O(n^2) iterations for
+        op = _LinOp((n, n), matvec=deflated, dtype=np.float64)
+        try:
+            val = _eigsh(op, k=1, which="LM", v0=x, maxiter=max(50 * n, 2000),
+                         tol=1e-12, return_eigenvectors=False)
+            return float(np.abs(val[0]))
+        except Exception:
+            pass  # ARPACK no-convergence: fall through to power iteration
+    est = 0.0
+    for _ in range(iters):
+        y = deflated(x)
+        nrm = np.linalg.norm(y)
+        if nrm < 1e-300:
+            return 0.0
+        est = nrm
+        x = y / nrm
+    return float(est)
+
+
+def _coo_joint_alpha(n: int, rows: np.ndarray, cols: np.ndarray,
+                     vals: np.ndarray, iters: int = 120,
+                     seed: int = 0) -> float:
+    """``|| (W_{p-1}-J) ... (W_0-J) ||_op`` for stacked (period, nnz)
+    triplets, via power iteration on B^T B (B = the window product).
+
+    Each round's B_t is symmetric here, so B^T is the product applied in
+    reverse round order; B^T B is PSD and power iteration converges to
+    sigma_max^2 regardless of B's own symmetry.
+    """
+    period = rows.shape[0]
+
+    def apply_b(x, order):
+        for t in order:
+            x = coo_matvec(n, rows[t], cols[t], vals[t], x)
+            x -= x.mean()
+        return x
+
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n)
+    x -= x.mean()
+    x /= np.linalg.norm(x) + 1e-300
+
+    def btb(v):
+        return apply_b(apply_b(v, range(period)), range(period - 1, -1, -1))
+
+    if _eigsh is not None and n >= 3:
+        op = _LinOp((n, n), matvec=btb, dtype=np.float64)
+        try:
+            val = _eigsh(op, k=1, which="LA", v0=x, maxiter=max(50 * n, 2000),
+                         tol=1e-12, return_eigenvectors=False)
+            return float(np.sqrt(max(float(val[0]), 0.0)))
+        except Exception:
+            pass  # ARPACK no-convergence: fall through to power iteration
+    est = 0.0
+    for _ in range(iters):
+        y = btb(x)
+        nrm = np.linalg.norm(y)
+        if nrm < 1e-300:
+            return 0.0
+        est = nrm              # -> sigma_max^2
+        x = y / nrm
+    return float(np.sqrt(est))
+
+
+def _coo_connected(n: int, rows: np.ndarray, cols: np.ndarray) -> bool:
+    """BFS connectivity over the (undirected view of the) COO edge set --
+    never materializes an (n, n) table."""
+    adj = [[] for _ in range(n)]
+    for r, c in zip(rows.reshape(-1).tolist(), cols.reshape(-1).tolist()):
+        if r != c:
+            adj[r].append(c)
+            adj[c].append(r)
+    seen = np.zeros(n, dtype=bool)
+    seen[0] = True
+    frontier = [0]
+    while frontier:
+        u = frontier.pop()
+        for v in adj[u]:
+            if not seen[v]:
+                seen[v] = True
+                frontier.append(v)
+    return bool(seen.all())
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetTopology:
+    """A sparse (COO) mixing matrix for fleet-scale n.
+
+    ``rows/cols/vals`` include the diagonal, so ``W x`` is one scatter-add.
+    ``alpha`` is the power-iteration estimate of ``||W - J||_op``.
+    """
+
+    kind: str
+    n: int
+    rows: np.ndarray      # (nnz,) int32
+    cols: np.ndarray      # (nnz,) int32
+    vals: np.ndarray      # (nnz,) float64
+    alpha: float
+
+    @property
+    def spectral_gap(self) -> float:
+        return 1.0 - self.alpha
+
+    @property
+    def nnz(self) -> int:
+        return int(self.rows.size)
+
+    def densify(self) -> np.ndarray:
+        """Dense (n, n) W -- for tests and small-n parity only."""
+        w = np.zeros((self.n, self.n), dtype=np.float64)
+        np.add.at(w, (self.rows, self.cols), self.vals)
+        return w
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSchedule:
+    """A periodic window of COO mixing tables (doubly stochastic only).
+
+    Triplets are stacked ``(period, nnz)`` with a shared nnz (rounds pad
+    with zero-valued diagonal entries), so the compiled program gathers
+    round ``t``'s triplets with the traced counter exactly like the dense
+    schedule table.
+    """
+
+    kind: str
+    n: int
+    rows: np.ndarray      # (period, nnz) int32
+    cols: np.ndarray      # (period, nnz) int32
+    vals: np.ndarray      # (period, nnz) float64
+    alphas: Tuple[float, ...]
+    joint_alpha: float
+
+    @property
+    def period(self) -> int:
+        return int(self.rows.shape[0])
+
+    @property
+    def is_directed(self) -> bool:
+        return False      # fleet schedules are doubly stochastic
+
+    @property
+    def alpha(self) -> float:
+        """Per-round geometric mixing rate (mirrors TopologySchedule)."""
+        if self.period == 1:
+            return self.alphas[0]
+        return float(self.joint_alpha ** (1.0 / self.period))
+
+    @property
+    def spectral_gap(self) -> float:
+        return 1.0 - self.alpha
+
+    def densify(self, t: int) -> np.ndarray:
+        w = np.zeros((self.n, self.n), dtype=np.float64)
+        np.add.at(w, (self.rows[t], self.cols[t]), self.vals[t])
+        return w
+
+
+# ---------------------------------------------------------------------------
+# Sparse generators: banded ring / exponential chords / degree-sampled ER
+# ---------------------------------------------------------------------------
+
+def _metropolis_coo(n: int, nbr_rows: np.ndarray, nbr_cols: np.ndarray,
+                    lazy: bool = False
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Metropolis weights from an undirected edge list (both directions
+    present in nbr_rows/cols, no self loops): w_ij = 1/(1 + max(d_i, d_j)),
+    diagonal = 1 - row sum.  Matches mixing.mixing_matrix exactly."""
+    deg = np.bincount(nbr_rows, minlength=n).astype(np.float64)
+    w_off = 1.0 / (1.0 + np.maximum(deg[nbr_rows], deg[nbr_cols]))
+    diag = 1.0 - np.bincount(nbr_rows, weights=w_off, minlength=n)
+    if lazy:
+        w_off = 0.5 * w_off
+        diag = 0.5 * (1.0 + diag)
+    rows = np.concatenate([nbr_rows, np.arange(n)]).astype(np.int32)
+    cols = np.concatenate([nbr_cols, np.arange(n)]).astype(np.int32)
+    vals = np.concatenate([w_off, diag])
+    return rows, cols, vals
+
+
+def _symmetrize(pairs: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Unique undirected edges (i < j, no self loops) -> both directions."""
+    i, j = pairs[:, 0], pairs[:, 1]
+    keep = i != j
+    i, j = np.minimum(i, j)[keep], np.maximum(i, j)[keep]
+    uniq = np.unique(np.stack([i, j], axis=1), axis=0)
+    rows = np.concatenate([uniq[:, 0], uniq[:, 1]])
+    cols = np.concatenate([uniq[:, 1], uniq[:, 0]])
+    return rows, cols
+
+
+def _fleet_edges(kind: str, n: int, p: float, seed: int,
+                 degree: Optional[int]) -> Tuple[np.ndarray, np.ndarray]:
+    """Sparse undirected edge list (both directions) for one round."""
+    idx = np.arange(n)
+    if kind == "ring":
+        if n < 3:
+            raise ValueError(f"fleet ring needs n >= 3, got {n}")
+        rows = np.concatenate([idx, idx])
+        cols = np.concatenate([(idx + 1) % n, (idx - 1) % n])
+        return rows, cols
+    if kind == "exponential":
+        # chords at hop distances 2^k (k = 0 .. floor(log2(n-1))): the
+        # standard O(log n)-degree expander used for large-n gossip
+        hops = [1 << k for k in range(int(np.log2(max(n - 1, 1))) + 1)
+                if (1 << k) <= n // 2]
+        pairs = np.concatenate(
+            [np.stack([idx, (idx + h) % n], axis=1) for h in hops])
+        return _symmetrize(pairs)
+    if kind == "erdos_renyi":
+        # degree-sampled ER: draw ~ n*deg/2 random pairs instead of
+        # flipping n^2/2 coins -- the only ER construction that scales to
+        # n = 100k.  ``degree`` defaults to a connectivity-safe
+        # 2 * ceil(log2 n); a ring backbone guarantees connectivity
+        # without a 1000-attempt resample loop at fleet scale.
+        deg = int(degree) if degree is not None else 2 * max(
+            int(np.ceil(np.log2(max(n, 2)))), 2)
+        rng = np.random.default_rng(seed)
+        m = max((n * deg) // 2, 1)
+        pairs = rng.integers(0, n, size=(m, 2))
+        backbone = np.stack([idx, (idx + 1) % n], axis=1)
+        return _symmetrize(np.concatenate([pairs, backbone]))
+    raise ValueError(f"unknown fleet topology kind {kind!r}; have "
+                     "ring, exponential, erdos_renyi")
+
+
+def fleet_topology(kind: str, n: int, weights: WeightKind = "metropolis",
+                   p: float = 0.8, seed: int = 0,
+                   degree: Optional[int] = None,
+                   alpha_iters: int = 200) -> FleetTopology:
+    """Sparse static topology for fleet-scale n (never builds (n, n)).
+
+    Supported kinds: ``ring`` (banded), ``exponential`` (2^k chords),
+    ``erdos_renyi`` (degree-sampled, ring backbone).  Weights: metropolis
+    or lazy (best_constant needs a dense eigensolve by definition).
+    """
+    if weights not in ("metropolis", "lazy"):
+        raise ValueError(
+            f"fleet topologies support metropolis/lazy weights, got "
+            f"{weights!r}: best_constant needs the dense Laplacian "
+            "eigensolve the sparse path exists to avoid")
+    nbr_rows, nbr_cols = _fleet_edges(kind, n, p, seed, degree)
+    rows, cols, vals = _metropolis_coo(n, nbr_rows, nbr_cols,
+                                       lazy=(weights == "lazy"))
+    _check_coo(n, rows, cols, vals)
+    if not _coo_connected(n, nbr_rows, nbr_cols):
+        raise ValueError(f"fleet topology {kind!r} (n={n}) is disconnected")
+    alpha = coo_alpha(n, rows, cols, vals, iters=alpha_iters, seed=seed)
+    return FleetTopology(kind=f"fleet:{kind}", n=n, rows=rows, cols=cols,
+                         vals=vals, alpha=alpha)
+
+
+def _pad_rounds(tables: Sequence[Tuple[np.ndarray, np.ndarray, np.ndarray]]
+                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Stack per-round COO triplets, padding to a common nnz with
+    zero-valued (0, 0) entries (harmless under scatter-add)."""
+    nnz = max(r.size for r, _, _ in tables)
+    rows = np.zeros((len(tables), nnz), dtype=np.int32)
+    cols = np.zeros((len(tables), nnz), dtype=np.int32)
+    vals = np.zeros((len(tables), nnz), dtype=np.float64)
+    for t, (r, c, v) in enumerate(tables):
+        rows[t, :r.size], cols[t, :c.size], vals[t, :v.size] = r, c, v
+    return rows, cols, vals
+
+
+def _finalize_fleet_schedule(kind: str, n: int, tables,
+                             alpha_iters: int = 200) -> FleetSchedule:
+    rows, cols, vals = _pad_rounds(tables)
+    for t in range(rows.shape[0]):
+        _check_coo(n, rows[t], cols[t], vals[t])
+        rsum = np.bincount(rows[t], weights=vals[t], minlength=n)
+        csum = np.bincount(cols[t], weights=vals[t], minlength=n)
+        if not (np.allclose(rsum, 1.0, atol=1e-9)
+                and np.allclose(csum, 1.0, atol=1e-9)):
+            raise ValueError(f"fleet schedule round {t} is not doubly "
+                             "stochastic (Definition 1)")
+    union_r = rows.reshape(-1)
+    union_c = cols.reshape(-1)
+    live = np.abs(vals.reshape(-1)) > 0
+    if not _coo_connected(n, union_r[live], union_c[live]):
+        raise ValueError(f"{kind!r} fleet schedule: window union graph is "
+                         "disconnected")
+    alphas = tuple(coo_alpha(n, rows[t], cols[t], vals[t],
+                             iters=alpha_iters, seed=t)
+                   for t in range(rows.shape[0]))
+    joint = (alphas[0] if rows.shape[0] == 1
+             else _coo_joint_alpha(n, rows, cols, vals))
+    if joint >= 1.0 - 1e-9:
+        raise ValueError(f"{kind!r} fleet schedule does not mix over its "
+                         f"window (joint alpha = {joint:.6f})")
+    return FleetSchedule(kind=kind, n=n, rows=rows, cols=cols, vals=vals,
+                         alphas=alphas, joint_alpha=joint)
+
+
+def fleet_rotating_schedule(kinds: Sequence[str], n: int,
+                            weights: WeightKind = "metropolis",
+                            seed: int = 0) -> FleetSchedule:
+    """Rotate through sparse graph kinds (``kind`` or ``kind/weights``),
+    one per round -- the fleet analogue of mixing.rotating_schedule."""
+    if not kinds:
+        raise ValueError("fleet rotating schedule needs >= 1 graph kind")
+    tables = []
+    for entry in kinds:
+        kind, _, wk = str(entry).partition("/")
+        top = fleet_topology(kind, n, weights=wk or weights, seed=seed)
+        tables.append((top.rows, top.cols, top.vals))
+    return _finalize_fleet_schedule(
+        f"fleet-rotate:{'+'.join(map(str, kinds))}", n, tables)
+
+
+def fleet_er_schedule(n: int, period: int = 4, degree: Optional[int] = None,
+                      weights: WeightKind = "metropolis",
+                      seed: int = 0) -> FleetSchedule:
+    """Fresh degree-sampled ER graph every round (per-round resampling)."""
+    if period < 1:
+        raise ValueError(f"period must be >= 1, got {period}")
+    tables = []
+    for t in range(period):
+        top = fleet_topology("erdos_renyi", n, weights=weights,
+                             seed=seed * 10007 + t, degree=degree)
+        tables.append((top.rows, top.cols, top.vals))
+    return _finalize_fleet_schedule(f"fleet-erdos_renyi:period={period}", n,
+                                    tables)
+
+
+# ---------------------------------------------------------------------------
+# The fleet mixer
+# ---------------------------------------------------------------------------
+
+def _coo_apply(rows, cols, vals, leaf):
+    """One scatter-add application of W to an agent-stacked leaf: f32
+    accumulation, cast back to the leaf dtype (mirrors gossip._einsum_w)."""
+    lf = leaf.astype(jnp.float32)
+    contrib = vals.reshape(vals.shape + (1,) * (leaf.ndim - 1)) * lf[cols]
+    out = jnp.zeros_like(lf).at[rows].add(contrib)
+    return out.astype(leaf.dtype)
+
+
+def make_fleet_mixer(obj: Union[Topology, TopologySchedule, FleetTopology,
+                                FleetSchedule],
+                     dense_gate: int = FLEET_DENSE_GATE):
+    """MixFn over a fleet of simulated agents.
+
+    ``obj`` is a dense :class:`Topology`/:class:`TopologySchedule` (small
+    n -- the apply is then the *identical* einsum of make_dense_mixer, so
+    the fleet path is bit-exact against the per-device engine) or a sparse
+    :class:`FleetTopology`/:class:`FleetSchedule` (COO scatter-add; the
+    (n, n) table is never materialized).  A FleetTopology/Schedule with
+    ``n <= dense_gate`` is densified back onto the einsum path; pass
+    ``dense_gate=0`` to force the scatter path (tests).
+    """
+    if isinstance(obj, (Topology, TopologySchedule)):
+        w = obj.ws if isinstance(obj, TopologySchedule) else obj.w
+        w_np, time_varying = _schedule_table(w)
+        w_j = jnp.asarray(w_np, dtype=jnp.float32)
+        n = int(w_np.shape[-1])
+
+        if time_varying:
+            def apply_w(tree, t):
+                w_t = _entry(w_j, t)
+                return jax.tree_util.tree_map(
+                    lambda l: _einsum_w(w_t, l), tree)
+        else:
+            def apply_w(tree, t=None):
+                del t
+                return jax.tree_util.tree_map(
+                    lambda l: _einsum_w(w_j, l), tree)
+        note = (f"fleet dense-gate (n={n} <= {dense_gate}): the einsum "
+                "apply of make_dense_mixer, bit-exact vs the per-device "
+                "engine")
+    elif isinstance(obj, (FleetTopology, FleetSchedule)):
+        n = obj.n
+        time_varying = isinstance(obj, FleetSchedule)
+        if n <= dense_gate:
+            dense = (np.stack([obj.densify(t) for t in range(obj.period)])
+                     if time_varying else obj.densify())
+            w_np, _ = _schedule_table(dense)
+            w_j = jnp.asarray(w_np, dtype=jnp.float32)
+            if time_varying:
+                def apply_w(tree, t):
+                    w_t = _entry(w_j, t)
+                    return jax.tree_util.tree_map(
+                        lambda l: _einsum_w(w_t, l), tree)
+            else:
+                def apply_w(tree, t=None):
+                    del t
+                    return jax.tree_util.tree_map(
+                        lambda l: _einsum_w(w_j, l), tree)
+            note = f"fleet dense-gate (n={n} <= {dense_gate}), COO densified"
+        else:
+            rows_j = jnp.asarray(obj.rows, jnp.int32)
+            cols_j = jnp.asarray(obj.cols, jnp.int32)
+            vals_j = jnp.asarray(obj.vals, jnp.float32)
+            if time_varying:
+                period = obj.period
+
+                def apply_w(tree, t):
+                    tm = jnp.mod(t, period)
+                    r, c, v = rows_j[tm], cols_j[tm], vals_j[tm]
+                    return jax.tree_util.tree_map(
+                        lambda l: _coo_apply(r, c, v, l), tree)
+            else:
+                def apply_w(tree, t=None):
+                    del t
+                    return jax.tree_util.tree_map(
+                        lambda l: _coo_apply(rows_j, cols_j, vals_j, l),
+                        tree)
+            note = (f"fleet COO scatter-add (n={n}, nnz="
+                    f"{obj.rows.size}): local math over the fleet axis")
+    else:
+        raise TypeError(f"make_fleet_mixer: unsupported table type "
+                        f"{type(obj).__name__}")
+
+    if time_varying:
+        def mix(tree, t):
+            return apply_w(tree, t)
+    else:
+        def mix(tree, t=None):
+            return apply_w(tree, t)
+
+    def push(tree, wvec, t=None):
+        """Push-sum weight rider: mix the scalar weight plane with the
+        same W by concatenating it as one extra flat column on leaf 0
+        (exactly make_dense_mixer.push's layout, so the per-device
+        parity covers push-sum algorithms too)."""
+        if time_varying and t is None:
+            raise ValueError("time-varying fleet mixer needs the round "
+                             "index (pass t=state.step)")
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        l0 = leaves[0]
+        flat0 = l0.reshape(l0.shape[0], -1).astype(jnp.float32)
+        aug = jnp.concatenate(
+            [flat0, wvec.astype(jnp.float32)[:, None]], axis=1)
+        aug_m = apply_w({"a": aug}, t)["a"]
+        out0 = aug_m[:, :-1].reshape(l0.shape).astype(l0.dtype)
+        w_m = aug_m[:, -1].astype(wvec.dtype)
+        rest_tree = treedef.unflatten([l0] + leaves[1:])
+        rest = jax.tree_util.tree_leaves(apply_w(rest_tree, t))[1:]
+        return treedef.unflatten([out0] + list(rest)), w_m
+
+    mix.push = push
+    mix.time_varying = time_varying
+    mix.n = n
+    mix.budget = GossipBudget(
+        executor="fleet", per_leaf={}, spmd_dependent=True, note=note)
+    mix.wire_mode = "dense"
+    mix.wire_frac = None
+    mix.schedule = obj if time_varying else None
+    return mix

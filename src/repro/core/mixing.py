@@ -60,6 +60,13 @@ from typing import Literal, Optional, Sequence, Tuple
 
 import numpy as np
 
+try:  # scipy is a jax dependency, but keep a numpy-only fallback anyway
+    from scipy.sparse.linalg import LinearOperator as _LinOp
+    from scipy.sparse.linalg import eigs as _eigs
+    from scipy.sparse.linalg import eigsh as _eigsh
+except Exception:  # pragma: no cover - exercised only without scipy
+    _LinOp = _eigs = _eigsh = None
+
 __all__ = [
     "Topology",
     "TopologySchedule",
@@ -88,7 +95,18 @@ __all__ = [
     "directed_churn_schedule",
     "make_schedule",
     "SCHEDULE_STOCHASTICITY",
+    "VALIDATE_DENSE_GATE",
+    "mixing_rate_power",
+    "joint_window_alpha",
+    "joint_window_contraction",
+    "union_connected",
 ]
+
+# n above which schedule validation switches from dense linear algebra
+# (O(n^3) SVD / eigvals / window products) to matvec power iteration and
+# edge-list BFS.  tests/test_topology_schedule.py pins dense/sparse
+# agreement on every generator at n = 64.
+VALIDATE_DENSE_GATE = 256
 
 GraphKind = Literal["ring", "torus", "erdos_renyi", "complete", "star",
                     "exponential", "hypercube"]
@@ -285,6 +303,173 @@ def _is_connected_directed(a: np.ndarray) -> bool:
     return len(seen) == n
 
 
+# ---------------------------------------------------------------------------
+# Sparse (matvec / edge-list) validators for large-n schedules.
+#
+# The dense validators above build (n, n) window products and call
+# numpy.linalg SVD/eigvals -- O(n^3) per window, which is the latent
+# scaling bug ISSUE 10 names: at fleet sizes (n = 1k-100k) validation
+# dominates construction.  The functions below compute the same three
+# quantities -- per-round alpha, joint window alpha / contraction, union
+# connectivity -- with only matvecs (O(period * nnz) per iteration) and
+# adjacency-list BFS, and _finalize_schedule / _finalize_directed_schedule
+# switch to them at n > VALIDATE_DENSE_GATE.
+# ---------------------------------------------------------------------------
+
+def _deflated_window_matvec(ws, x: np.ndarray, transpose: bool) -> np.ndarray:
+    """Apply B = (W_{p-1} - J) ... (W_0 - J) (or B^T) to ``x`` without
+    forming the product.  (W - J) x = W x - mean(x) 1, and the same holds
+    for W^T since J^T = J."""
+    order = range(len(ws) - 1, -1, -1) if transpose else range(len(ws))
+    for t in order:
+        w = ws[t].T if transpose else ws[t]
+        x = w @ x - x.mean()
+    return x
+
+
+def joint_window_alpha(ws, method: str = "dense", iters: int = 300,
+                       seed: int = 0) -> float:
+    """``|| (W_{p-1} - J) ... (W_0 - J) ||_op`` for a doubly stochastic
+    window.  ``method="dense"`` is the exact product + SVD (the historical
+    path); ``method="power"`` is power iteration on B^T B -- converges to
+    sigma_max(B)^2 for any B, no symmetry assumption."""
+    ws = np.stack([np.asarray(w, np.float64) for w in ws])
+    n = ws.shape[-1]
+    if method == "dense":
+        j = np.ones((n, n)) / n
+        b = np.eye(n)
+        for w in ws:
+            b = (w - j) @ b
+        return float(np.linalg.norm(b, ord=2))
+    if method != "power":
+        raise ValueError(f"unknown method {method!r}; have dense, power")
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n)
+    x -= x.mean()
+    x /= np.linalg.norm(x) + 1e-300
+    if _eigsh is not None and n >= 3:
+        # Lanczos on the PSD operator B^T B: resolves the clustered
+        # near-1 spectra of large rings, where plain power iteration
+        # underestimates the gap by orders of magnitude
+        op = _LinOp((n, n), matvec=lambda v: _deflated_window_matvec(
+            ws, _deflated_window_matvec(ws, v, False), True),
+            dtype=np.float64)
+        try:
+            val = _eigsh(op, k=1, which="LA", v0=x, maxiter=max(50 * n, 2000),
+                         tol=1e-12, return_eigenvectors=False)
+            return float(np.sqrt(max(float(val[0]), 0.0)))
+        except Exception:
+            pass  # ARPACK no-convergence: fall through to power iteration
+    est = 0.0
+    for _ in range(iters):
+        y = _deflated_window_matvec(
+            ws, _deflated_window_matvec(ws, x, False), True)
+        nrm = float(np.linalg.norm(y))
+        if nrm < 1e-300:
+            return 0.0
+        est = nrm                # -> sigma_max(B)^2
+        x = y / nrm
+    return float(np.sqrt(est))
+
+
+def mixing_rate_power(w: np.ndarray, iters: int = 300, seed: int = 0) -> float:
+    """alpha = ||W - J||_op by power iteration (sparse analogue of
+    :func:`mixing_rate`)."""
+    return joint_window_alpha([w], method="power", iters=iters, seed=seed)
+
+
+def joint_window_contraction(ws, method: str = "dense", iters: int = 400,
+                             seed: int = 0) -> float:
+    """Second-largest eigenvalue modulus of the window product
+    ``P = W_{p-1} ... W_0`` of column-stochastic matrices.
+
+    ``method="dense"`` forms the product and calls
+    :func:`contraction_factor`.  ``method="power"`` exploits that the
+    sum-zero subspace is P-invariant (1^T W = 1^T), where P's spectrum is
+    exactly its non-Perron spectrum: iterate x <- P x on that subspace and
+    average the renormalized log growth -- the oscillation a complex
+    leading pair induces in per-step norms is bounded, so the running
+    geometric mean converges to the spectral radius.
+    """
+    ws = np.stack([np.asarray(w, np.float64) for w in ws])
+    n = ws.shape[-1]
+    if method == "dense":
+        prod = np.eye(n)
+        for w in ws:
+            prod = w @ prod
+        return contraction_factor(prod)
+    if method != "power":
+        raise ValueError(f"unknown method {method!r}; have dense, power")
+
+    def window_deflated(v):
+        for w in ws:
+            v = w @ v
+        return v - v.mean()
+
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n)
+    x -= x.mean()
+    nrm = np.linalg.norm(x)
+    if nrm < 1e-300:
+        return 0.0
+    x /= nrm
+    if _eigs is not None and n >= 4:
+        # Arnoldi on (I - J) P: its range lies in the sum-zero subspace
+        # where it acts as P, so its largest-magnitude eigenvalue IS the
+        # non-Perron spectral radius of P
+        op = _LinOp((n, n), matvec=window_deflated, dtype=np.float64)
+        try:
+            val = _eigs(op, k=1, which="LM", v0=x, maxiter=max(50 * n, 2000),
+                        tol=1e-12, return_eigenvectors=False)
+            return float(np.abs(val[0]))
+        except Exception:
+            pass  # ARPACK no-convergence: fall through to power iteration
+    logs = []
+    for _ in range(iters):
+        for w in ws:
+            x = w @ x
+        x -= x.mean()            # numerical re-deflation; invariant exactly
+        nrm = float(np.linalg.norm(x))
+        if nrm < 1e-300:
+            return 0.0
+        logs.append(np.log(nrm))
+        x /= nrm
+    tail = logs[len(logs) // 2:]
+    return float(np.exp(np.mean(tail)))
+
+
+def union_connected(adjs, directed: bool = False) -> bool:
+    """Window-union (strong, when directed) connectivity via adjacency-list
+    BFS on the nonzero edges -- no dense union matrix walks.
+
+    ``adjs`` is the stacked ``(period, n, n)`` adjacency table (the
+    convention is ``A[i, j] != 0 <=> edge j -> i``)."""
+    adjs = np.stack([np.asarray(a) for a in adjs])
+    n = adjs.shape[-1]
+    rows, cols = np.nonzero((np.abs(adjs).sum(axis=0) > 0))
+
+    def bfs(fwd_rows, fwd_cols) -> bool:
+        adj = [[] for _ in range(n)]
+        for u, v in zip(fwd_rows.tolist(), fwd_cols.tolist()):
+            adj[u].append(v)
+        seen = np.zeros(n, dtype=bool)
+        seen[0] = True
+        frontier = [0]
+        while frontier:
+            u = frontier.pop()
+            for v in adj[u]:
+                if not seen[v]:
+                    seen[v] = True
+                    frontier.append(v)
+        return bool(seen.all())
+
+    if not directed:
+        return bfs(np.concatenate([rows, cols]), np.concatenate([cols, rows]))
+    # edge j -> i: node 0 reaches all following j -> i (cols -> rows), and
+    # all reach node 0 on the reversed digraph
+    return bfs(cols, rows) and bfs(rows, cols)
+
+
 def _w_is_banded_ring(w: np.ndarray) -> bool:
     n = w.shape[0]
     off = w.copy()
@@ -408,25 +593,26 @@ def _finalize_schedule(kind: str, n: int, ws, adjs) -> TopologySchedule:
                 and np.allclose(w.sum(1), 1.0, atol=1e-9)):
             raise ValueError(f"schedule round {t} is not doubly stochastic "
                              "(Definition 1)")
-    union = (adjs.sum(axis=0) > 0).astype(np.float64)
-    if not _is_connected(union):
+    sparse = n > VALIDATE_DENSE_GATE
+    if sparse:
+        connected = union_connected(adjs, directed=False)
+    else:
+        connected = _is_connected((adjs.sum(axis=0) > 0).astype(np.float64))
+    if not connected:
         raise ValueError(
             f"{kind!r} schedule: the union graph over the {ws.shape[0]}-round "
             "window is disconnected -- some agent never talks to the rest, "
             "so no amount of rounds reaches consensus.  Lower the churn "
             "rate, lengthen the period, or densify the base graph.")
-    j = np.ones((n, n)) / n
-    b = np.eye(n)
-    for w in ws:
-        b = (w - j) @ b
-    joint = float(np.linalg.norm(b, ord=2))
-    if joint >= 1.0 - 1e-12:
+    joint = joint_window_alpha(ws, method="power" if sparse else "dense")
+    if joint >= 1.0 - (1e-9 if sparse else 1e-12):
         raise ValueError(
             f"{kind!r} schedule does not mix over its window "
             f"(joint alpha = {joint:.6f} >= 1); the paper's consensus "
             "stepsize would degenerate to 0")
+    rate = mixing_rate_power if sparse else mixing_rate
     return TopologySchedule(kind=kind, n=n, ws=ws, adjacencies=adjs,
-                            alphas=tuple(mixing_rate(w) for w in ws),
+                            alphas=tuple(rate(w) for w in ws),
                             joint_alpha=joint)
 
 
@@ -604,25 +790,30 @@ def _finalize_directed_schedule(kind: str, n: int, ws, adjs
         if np.any(np.diag(w) <= 0.0):
             raise ValueError(f"directed schedule round {t} is missing a "
                              "self-loop; push-sum weights could hit zero")
-    union = (adjs.sum(axis=0) > 0).astype(np.float64)
-    if not _is_strongly_connected(union):
+    sparse = n > VALIDATE_DENSE_GATE
+    if sparse:
+        connected = union_connected(adjs, directed=True)
+    else:
+        connected = _is_strongly_connected(
+            (adjs.sum(axis=0) > 0).astype(np.float64))
+    if not connected:
         raise ValueError(
             f"{kind!r} schedule: the union digraph over the "
             f"{ws.shape[0]}-round window is not strongly connected -- some "
             "agent's mass never reaches (or never hears from) the rest, so "
             "push-sum cannot reach consensus.  Lower the loss rate, "
             "lengthen the period, or densify the base digraph.")
-    prod = np.eye(n)
-    for w in ws:
-        prod = w @ prod
-    joint = contraction_factor(prod)
-    if joint >= 1.0 - 1e-12:
+    joint = joint_window_contraction(
+        ws, method="power" if sparse else "dense")
+    if joint >= 1.0 - (1e-9 if sparse else 1e-12):
         raise ValueError(
             f"{kind!r} schedule does not contract over its window "
             f"(joint contraction factor = {joint:.6f} >= 1); the consensus "
             "stepsize would degenerate to 0")
+    per_round = ((lambda w: joint_window_contraction([w], method="power"))
+                 if sparse else contraction_factor)
     return TopologySchedule(kind=kind, n=n, ws=ws, adjacencies=adjs,
-                            alphas=tuple(contraction_factor(w) for w in ws),
+                            alphas=tuple(per_round(w) for w in ws),
                             joint_alpha=joint, stochasticity="column")
 
 

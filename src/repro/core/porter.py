@@ -165,6 +165,7 @@ def porter_step(
     key: jax.Array,
     compress_fn=None,
     engine: Optional[CommRound] = None,
+    grad_override: Optional[Tuple[jax.Array, Any]] = None,
 ) -> Tuple[PorterState, Dict[str, jax.Array]]:
     """One PORTER iteration over all agents (pure; jit/pjit-able).
 
@@ -178,15 +179,24 @@ def porter_step(
     passing a *different* object alongside ``engine=`` raises (it used to be
     silently ignored).  With ``engine=`` the positional mixer/compressor may
     simply be None.
+    grad_override: optional ``(losses, g)`` replacing the gradient oracle
+    (lines 4-10) while keeping the comm rounds (lines 11-14) -- clip21
+    feeds its error-feedback clipped gradient through here.  ``losses`` is
+    the per-agent loss vector, ``g`` the agent-stacked gradient tree; the
+    key is still consumed identically so PRNG streams stay aligned with
+    the un-overridden step.
     """
     eng = resolve_engine(engine, mixer, compressor, compress_fn)
     n = jax.tree_util.tree_leaves(state.x)[0].shape[0]
     _, k_noise, k_cv, k_cx = jax.random.split(key, 4)
 
     # ---- stochastic gradients (local; lines 4-10) -------------------------
-    agent_keys = jax.random.split(k_noise, n)
-    grad_fn = functools.partial(_agent_gradient, cfg, loss_fn)
-    losses, g = jax.vmap(grad_fn)(state.x, batch, agent_keys)
+    if grad_override is None:
+        agent_keys = jax.random.split(k_noise, n)
+        grad_fn = functools.partial(_agent_gradient, cfg, loss_fn)
+        losses, g = jax.vmap(grad_fn)(state.x, batch, agent_keys)
+    else:
+        losses, g = grad_override
     g = jax.tree_util.tree_map(lambda l: l.astype(cfg.grad_dtype), g)
 
     # ---- comm rounds: track (lines 11-12) + step (lines 13-14) ------------

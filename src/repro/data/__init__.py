@@ -1,8 +1,9 @@
 """Synthetic, agent-sharded data pipelines (offline container)."""
-from .batch_source import batch_source, minibatch_source
+from .batch_source import (batch_source, dirichlet_partition,
+                           dirichlet_source, minibatch_source)
 from .synthetic import (a9a_like, agent_batch_iterator, mnist_like,
                         shard_to_agents, token_batch)
 
 __all__ = ["a9a_like", "mnist_like", "shard_to_agents",
            "agent_batch_iterator", "token_batch", "batch_source",
-           "minibatch_source"]
+           "minibatch_source", "dirichlet_partition", "dirichlet_source"]

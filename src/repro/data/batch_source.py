@@ -23,10 +23,12 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .synthetic import token_batch
 
-__all__ = ["batch_source", "minibatch_source"]
+__all__ = ["batch_source", "minibatch_source", "dirichlet_partition",
+           "dirichlet_source"]
 
 
 def batch_source(cfg, n_agents: int, batch: int, seq: int):
@@ -81,3 +83,58 @@ def minibatch_source(xs, ys, batch: int):
         return take(xs, idx), take(ys, idx)
 
     return source
+
+
+def dirichlet_partition(xs, ys, n_agents: int, alpha: float = 0.3,
+                        shard: int = 0, seed: int = 0):
+    """Heterogeneous per-agent shards: class mixture ~ Dirichlet(alpha).
+
+    The standard federated-learning non-iid protocol [HQB19]: each agent i
+    draws a class-mixture vector p_i ~ Dirichlet(alpha * 1) and fills an
+    equal-size shard of ``shard`` samples whose class counts follow
+    Multinomial(shard, p_i); samples are drawn (with replacement, so a
+    popular class on a small dataset still fills its quota) uniformly from
+    that class's pool.  ``alpha -> inf`` recovers iid shards,
+    ``alpha -> 0`` approaches one-class-per-agent pathology -- the axis
+    the fleet ablation sweeps heterogeneity on.
+
+    Host-side numpy (runs once at setup, scales to n = 100k agents as a
+    pure O(n * shard) sample-index build); returns
+    ``(n_agents, shard, ...)`` stacks ready for
+    :func:`minibatch_source`.
+    """
+    xs = np.asarray(xs)
+    ys = np.asarray(ys)
+    if xs.shape[0] != ys.shape[0]:
+        raise ValueError(f"xs/ys disagree on dataset size: "
+                         f"{xs.shape[0]} vs {ys.shape[0]}")
+    if alpha <= 0.0:
+        raise ValueError(f"Dirichlet concentration must be > 0, got {alpha}")
+    labels = ys.reshape(ys.shape[0], -1)[:, 0]
+    # binary +/-1 labels (a9a_like) and 0..K-1 ints both map to classes
+    classes, class_ids = np.unique(labels, return_inverse=True)
+    pools = [np.nonzero(class_ids == c)[0] for c in range(classes.size)]
+    shard = int(shard) if shard else max(xs.shape[0] // n_agents, 1)
+    rng = np.random.default_rng(seed)
+    mix = rng.dirichlet(np.full(classes.size, alpha), size=n_agents)
+    idx = np.empty((n_agents, shard), dtype=np.int64)
+    for i in range(n_agents):
+        counts = rng.multinomial(shard, mix[i])
+        cursor = 0
+        for c, cnt in enumerate(counts):
+            if cnt:
+                idx[i, cursor:cursor + cnt] = rng.choice(pools[c], size=cnt,
+                                                         replace=True)
+                cursor += cnt
+        rng.shuffle(idx[i])
+    return xs[idx], ys[idx]
+
+
+def dirichlet_source(xs, ys, n_agents: int, batch: int, alpha: float = 0.3,
+                     shard: int = 0, seed: int = 0):
+    """Dirichlet-heterogeneous BatchSource: :func:`dirichlet_partition`
+    composed with :func:`minibatch_source` (the fleet quickstart's data
+    path -- per-agent non-iid shards, on-device minibatching)."""
+    sx, sy = dirichlet_partition(xs, ys, n_agents, alpha=alpha, shard=shard,
+                                 seed=seed)
+    return minibatch_source(sx, sy, batch)

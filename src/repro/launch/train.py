@@ -136,6 +136,10 @@ def main(argv=None):
                          "chunk by the state's step counter")
     ap.add_argument("--compressor", default="top_k")
     ap.add_argument("--frac", type=float, default=0.05)
+    ap.add_argument("--fleet", action="store_true",
+                    help="vectorized fleet mode (n >> devices): one "
+                         "leading agent axis, dense/COO mixing sweep "
+                         "(see core/fleet.py; forces dense gossip/wire)")
     ap.add_argument("--plane-dtype", default=None, choices=["f32", "bf16"],
                     help="EF/gossip state plane dtype (bf16 halves resident "
                          "state + dense wire; f32 master params, stochastic-"
@@ -212,7 +216,8 @@ def main(argv=None):
                           compressor=args.compressor, frac=args.frac,
                           plane_dtype=args.plane_dtype,
                           remat_policy=args.remat_policy,
-                          eta=args.eta, tau=args.tau, sigma_p=sigma_p)
+                          eta=args.eta, tau=args.tau, sigma_p=sigma_p,
+                          fleet=args.fleet)
     algo = build(spec, bundle.loss)
 
     params, _ = bundle.init(jax.random.PRNGKey(0))

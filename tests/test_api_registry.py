@@ -20,7 +20,8 @@ from repro.core import CommRound, make_compressor, make_mixer, make_topology
 from repro.core.porter import porter_init, porter_step
 
 EXPECTED_ALGOS = {"porter-gc", "porter-dp", "beer", "porter-adam", "dsgd",
-                  "choco", "dp-sgd", "soteriafl", "dp-csgp"}
+                  "choco", "dp-sgd", "soteriafl", "dp-csgp", "clip21",
+                  "subgrad-comp"}
 
 N, D, B = 4, 24, 6
 
@@ -48,7 +49,7 @@ def _spec(name, **over):
     return ExperimentSpec(**kw)
 
 
-def test_all_nine_registered():
+def test_all_eleven_registered():
     assert set(list_algorithms()) == EXPECTED_ALGOS
 
 
@@ -79,7 +80,8 @@ def test_registered_algorithm_trains(name):
 def test_dp_flags_match_oracles():
     for name in ("porter-dp", "dp-sgd", "soteriafl", "dp-csgp"):
         assert algorithm_info(name).dp
-    for name in ("porter-gc", "beer", "porter-adam", "choco", "dsgd"):
+    for name in ("porter-gc", "beer", "porter-adam", "choco", "dsgd",
+                 "clip21", "subgrad-comp"):
         assert not algorithm_info(name).dp
 
 
@@ -121,7 +123,7 @@ def test_registry_populated_via_core_import():
     caller imported first (registrations are triggered lazily)."""
     import subprocess, sys
     code = ("from repro.core import list_algorithms, algorithm_info; "
-            "assert len(list_algorithms()) == 9, list_algorithms(); "
+            "assert len(list_algorithms()) == 11, list_algorithms(); "
             "assert algorithm_info('choco').decentralized")
     res = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True)

@@ -96,6 +96,23 @@ def test_wire_bits_accounting():
     assert C.make_compressor("identity").wire_bits(d) == 32 * d
 
 
+def test_sign_compressor_identity_and_wire():
+    """Scaled-sign (arXiv 2607.01755): one f32 magnitude + d sign bits,
+    and the compression error has a closed form."""
+    comp = C.make_compressor("sign")
+    assert comp.deterministic
+    d = 4096
+    assert comp.wire_bits(d) == d + 32
+    x = _rand(3, d)
+    y = np.asarray(comp(None, x))
+    np.testing.assert_allclose(np.abs(y), float(jnp.mean(jnp.abs(x))),
+                               rtol=1e-6)
+    n2, n1 = float(jnp.sum(x ** 2)), float(jnp.sum(jnp.abs(x)))
+    err = float(jnp.sum((jnp.asarray(y) - x) ** 2))
+    np.testing.assert_allclose(err, (1 - n1 ** 2 / (d * n2)) * n2,
+                               rtol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # Definition-3 contract for EVERY registry entry (qsgd and low_rank had no
 # contract coverage before this sweep), over hypothesis-driven shapes/seeds
@@ -110,6 +127,7 @@ CONTRACT_CASES = {
     "block_top_k": {"frac": 0.1, "block": 256},
     "qsgd": {"levels": 8},
     "low_rank": {"rank": 2, "power_iters": 1},
+    "sign": {},
 }
 
 
@@ -142,6 +160,10 @@ def _expected_rho(name, kwargs, d):
         return 1.0 / (1.0 + omega)
     if name == "low_rank":
         return 0.0
+    if name == "sign":
+        # ||C(x)-x||^2 = (1 - ||x||_1^2/(d||x||_2^2))||x||^2 exactly;
+        # Cauchy-Schwarz gives the worst case ||x||_1^2 >= ||x||_2^2
+        return 1.0 / d
     raise AssertionError(name)
 
 

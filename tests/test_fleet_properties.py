@@ -1,0 +1,89 @@
+"""Hypothesis contracts for the two fleet-PR operators.
+
+* Clip21 EF-clip (:func:`repro.core.clip21.clip21_update`): each
+  application contracts the residual r = g_raw - g_est in global norm --
+  ``||r'|| <= ||r||`` AND the sharper Clip21 ingredient
+  ``||r'|| = max(||r|| - tau, 0)`` (piecewise clip moves the estimate
+  exactly tau along the residual until it locks on); tau = inf is the
+  bitwise identity on the raw gradient.
+* The sign compressor (scaled-sign, arXiv 2607.01755): Definition 3 holds
+  with the *exact* data-dependent factor
+  ``||C(x) - x||^2 = (1 - ||x||_1^2 / (d ||x||_2^2)) ||x||^2``,
+  whose rho floor is 1/d (Cauchy-Schwarz) -- sharper than the registry's
+  advertised rho = 0.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.clip21 import clip21_update
+from repro.core.clipping import tree_global_norm
+from repro.core.compression import make_compressor
+
+
+def _rand_tree(seed, d1, d2, scale):
+    k = jax.random.PRNGKey(seed)
+    ka, kb, kc = jax.random.split(k, 3)
+    return {"w": scale * jax.random.normal(ka, (d1,)),
+            "b": scale * jax.random.normal(kb, (d2,)),
+            "s": scale * jax.random.normal(kc, ())}
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 64), st.integers(1, 8),
+       st.floats(0.05, 20.0), st.floats(0.01, 100.0))
+@settings(max_examples=80, deadline=None)
+def test_clip21_residual_contraction(seed, d1, d2, tau, scale):
+    g_est = _rand_tree(seed, d1, d2, scale)
+    g_raw = _rand_tree(seed + 1, d1, d2, scale)
+    r0 = float(tree_global_norm(jax.tree_util.tree_map(
+        lambda a, b: a - b, g_raw, g_est)))
+    g_new = clip21_update(g_est, g_raw, tau)
+    r1 = float(tree_global_norm(jax.tree_util.tree_map(
+        lambda a, b: a - b, g_raw, g_new)))
+    assert r1 <= r0 * (1 + 1e-5) + 1e-6
+    want = max(r0 - tau, 0.0)
+    assert abs(r1 - want) <= 1e-4 * max(r0, 1.0)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 64), st.floats(0.1, 10.0))
+@settings(max_examples=30, deadline=None)
+def test_clip21_infinite_tau_is_bitwise_identity(seed, d1, scale):
+    g_est = _rand_tree(seed, d1, 3, scale)
+    g_raw = _rand_tree(seed + 7, d1, 3, scale)
+    g_new = clip21_update(g_est, g_raw, float("inf"))
+    for a, b in zip(jax.tree_util.tree_leaves(g_new),
+                    jax.tree_util.tree_leaves(g_raw)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 64), st.integers(1, 8),
+       st.floats(0.05, 5.0))
+@settings(max_examples=40, deadline=None)
+def test_clip21_fixed_point(seed, d1, d2, tau):
+    """Once locked on (g_est == g_raw), the update is idempotent."""
+    g_raw = _rand_tree(seed, d1, d2, 1.0)
+    g_new = clip21_update(g_raw, g_raw, tau)
+    for a, b in zip(jax.tree_util.tree_leaves(g_new),
+                    jax.tree_util.tree_leaves(g_raw)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(st.integers(4, 4000), st.integers(0, 2 ** 31 - 1),
+       st.floats(0.01, 50.0))
+@settings(max_examples=80, deadline=None)
+def test_sign_compressor_exact_contract(d, seed, scale):
+    comp = make_compressor("sign")
+    assert comp.deterministic
+    x = scale * jax.random.normal(jax.random.PRNGKey(seed), (d,))
+    cx = comp(None, x)
+    # C(x) = (||x||_1 / d) sign(x): one magnitude, d signs
+    assert len(np.unique(np.abs(np.asarray(cx)))) <= 2  # {mag} or {0, mag}
+    n2 = float(jnp.sum(x ** 2))
+    n1 = float(jnp.sum(jnp.abs(x)))
+    err = float(jnp.sum((cx - x) ** 2))
+    want = (1.0 - n1 ** 2 / (d * n2)) * n2
+    np.testing.assert_allclose(err, want, rtol=1e-4, atol=1e-5 * n2)
+    # Definition 3 with the 1/d floor (Cauchy-Schwarz: ||x||_1^2 >= ||x||_2^2)
+    assert err <= (1.0 - 1.0 / d) * n2 * (1 + 1e-5)

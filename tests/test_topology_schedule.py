@@ -490,3 +490,85 @@ def test_dsgd_uncompressed_schedule_round_trip():
         np.asarray(state2.x["w"]),
         sched.ws[1].astype(np.float32) @ np.asarray(state1.x["w"]),
         atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Sparse (matrix-free) validators vs. the dense historical path.  The
+# schedule finalizers switch to power/Lanczos contraction estimates and
+# BFS union connectivity at n > MX.VALIDATE_DENSE_GATE; this regression
+# pins that both paths agree on every registered generator well below the
+# gate, so flipping it can never change a validation verdict.
+# ---------------------------------------------------------------------------
+
+_GEN_CASES_64 = {
+    "rotate": lambda: MX.rotating_schedule(["ring", "exponential",
+                                            "complete"], 64),
+    "erdos_renyi": lambda: MX.erdos_renyi_schedule(64, p=0.15, period=4,
+                                                   seed=1),
+    "dropout": lambda: MX.dropout_schedule(64, rate=0.3, period=4,
+                                           base="ring", seed=0),
+    "straggler": lambda: MX.straggler_schedule(64, rate=0.4, period=4,
+                                               base="erdos_renyi", p=0.15,
+                                               seed=2),
+    "ring_skips": lambda: MX.directed_ring_schedule(64, skip=5),
+    "digraph": lambda: MX.random_digraph_schedule(64, p=0.08, period=4,
+                                                  seed=3),
+    "one_way": lambda: MX.directed_churn_schedule(64, rate=0.3, period=4,
+                                                  skip=5, seed=0),
+}
+
+
+def test_sparse_validator_cases_cover_generators():
+    assert set(_GEN_CASES_64) == set(MX._SCHEDULE_GENERATORS)
+
+
+@pytest.mark.parametrize("kind", sorted(_GEN_CASES_64))
+def test_sparse_validators_agree_with_dense(kind):
+    """dense product/SVD vs. matrix-free Lanczos/Arnoldi, per round and
+    over the joint window, plus the BFS union-connectivity verdict."""
+    sched = _GEN_CASES_64[kind]()
+    ws = [np.asarray(w, np.float64) for w in sched.ws]
+    union = np.abs(np.stack(ws)).sum(axis=0)
+    if sched.is_directed:
+        dense_joint = MX.joint_window_contraction(ws, method="dense")
+        power_joint = MX.joint_window_contraction(ws, method="power")
+        per_dense = [MX.contraction_factor(w) for w in ws]
+        per_power = [MX.joint_window_contraction([w], method="power")
+                     for w in ws]
+        dense_conn = MX._is_strongly_connected(union)
+        sparse_conn = MX.union_connected(ws, directed=True)
+    else:
+        dense_joint = MX.joint_window_alpha(ws, method="dense")
+        power_joint = MX.joint_window_alpha(ws, method="power")
+        per_dense = [MX.mixing_rate(w) for w in ws]
+        per_power = [MX.mixing_rate_power(w) for w in ws]
+        dense_conn = MX._is_connected(union)
+        sparse_conn = MX.union_connected(ws, directed=False)
+    np.testing.assert_allclose(power_joint, dense_joint, rtol=1e-8,
+                               atol=1e-10, err_msg=f"{kind} joint")
+    np.testing.assert_allclose(per_power, per_dense, rtol=1e-8,
+                               atol=1e-10, err_msg=f"{kind} per-round")
+    assert sparse_conn == dense_conn is True, kind
+
+
+def test_above_gate_schedule_takes_sparse_validators():
+    """n > VALIDATE_DENSE_GATE finalizes through the matrix-free path and
+    still produces a contracting, validated schedule."""
+    n = MX.VALIDATE_DENSE_GATE + 44
+    sched = MX.erdos_renyi_schedule(n, p=0.03, period=3, seed=4)
+    assert 0.0 < sched.joint_alpha < 1.0
+    # spot-check one round against the dense oracle anyway
+    np.testing.assert_allclose(sched.alphas[0],
+                               MX.mixing_rate(sched.ws[0]), rtol=1e-7)
+
+
+def test_union_connected_detects_disconnection():
+    a = np.zeros((6, 6))
+    a[:3, :3] = np.eye(3) + np.roll(np.eye(3), 1, axis=1)
+    a[3:, 3:] = np.eye(3) + np.roll(np.eye(3), 1, axis=1)
+    assert not MX.union_connected([a], directed=False)
+    assert not MX.union_connected([a], directed=True)
+    b = a.copy()
+    b[0, 3] = b[3, 0] = 1.0
+    assert MX.union_connected([b], directed=False)
+    assert MX.union_connected([b], directed=True)
